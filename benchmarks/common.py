@@ -1,0 +1,71 @@
+"""Shared benchmark scaffolding: tiny-but-real model configs, timing
+helpers, CSV emission in the harness format ``name,us_per_call,derived``."""
+from __future__ import annotations
+
+import dataclasses
+import os
+import sys
+import time
+from typing import Callable, Dict, List
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                                   # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+import numpy as np                           # noqa: E402
+
+from repro.configs import get_config         # noqa: E402
+from repro.core import Strategy              # noqa: E402
+from repro.data import SyntheticLM           # noqa: E402
+from repro.models import build_model         # noqa: E402
+from repro.train import Trainer, TrainerConfig  # noqa: E402
+
+FAST = os.environ.get("BENCH_FAST", "1") == "1"
+
+
+def bench_model(seq_len=64, vocab=512):
+    """The paper's Llama family scaled to CPU size (same 32-layer shape
+    ratios are irrelevant for algorithmic benchmarks; 2 layers suffice)."""
+    cfg = dataclasses.replace(
+        get_config("llama_350m").reduced(), vocab_size=vocab)
+    return build_model(cfg, compute_dtype=jnp.float32, remat=False)
+
+
+def run_strategy(name: str, *, steps: int, replicas: int = 4, tau: int = 8,
+                 warmup: int = 4, seq_len=64, gbatch=16, lr=3e-3,
+                 seed=3, data_kwargs=None, strategy_kwargs=None,
+                 active_fn=None, eval_every=0) -> Trainer:
+    model = bench_model(seq_len)
+    data = SyntheticLM(model.cfg.vocab_size, seq_len, gbatch, seed=seed,
+                       markov_q=0.9, replicas=replicas,
+                       **(data_kwargs or {}))
+    strat = Strategy(name=name, replicas=replicas, sync_interval=tau,
+                     warmup_steps=warmup, **(strategy_kwargs or {}))
+    tr = Trainer(model, strat, data,
+                 TrainerConfig(total_steps=steps, inner_lr=lr, lr_warmup=5,
+                               log_every=0, eval_every=eval_every),
+                 active_fn=active_fn)
+    tr.run()
+    return tr
+
+
+def time_step(fn, args, iters=5) -> float:
+    """Median wall time (s) of a jitted step, post-warmup."""
+    out = fn(*args)
+    jax.block_until_ready(jax.tree.leaves(out)[0])
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(jax.tree.leaves(out)[0])
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+ROWS: List[str] = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

@@ -1,0 +1,146 @@
+"""Analytic FLOP / HBM-byte model per (arch, shape, mode).
+
+Why analytic: XLA's ``cost_analysis()`` counts ``while`` (scan) bodies ONCE
+regardless of trip count, so a 96-layer scanned model reports ~1/96 of its
+real compute; the blockwise-attention inner scans compound this.  The
+roofline therefore uses these closed-form counts (validated against
+``cost_analysis`` on small fully-unrolled variants — see
+tests/test_costmodel.py) and reports the raw XLA numbers alongside.
+
+All numbers are GLOBAL (whole step, all devices); the roofline divides by
+the device count.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+BF16 = 2
+FP32 = 4
+
+
+def _attn_flops_token(cfg: ModelConfig, s_kv: float) -> float:
+    """QK^T + PV matmul flops per token per ATTENTION layer (2 matmuls,
+    2 flops/MAC): 4 * s_kv * H * head_dim.  MLA uses its own dims."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        qk = cfg.n_heads * (m.qk_nope_head_dim + m.qk_rope_head_dim)
+        pv = cfg.n_heads * m.v_head_dim
+        return 2.0 * s_kv * (qk + pv)
+    return 4.0 * s_kv * cfg.n_heads * cfg.head_dim
+
+
+def _mamba_flops_token(cfg: ModelConfig) -> float:
+    """Elementwise SSM recurrence + einsums per token per mamba layer
+    (excluding the projections, which are counted in params)."""
+    if cfg.mamba is None:
+        return 0.0
+    mi = cfg.mamba.d_inner(cfg.d_model)
+    st = cfg.mamba.d_state
+    return 10.0 * mi * st
+
+
+def _n_attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.n_layers) if cfg.is_attn_layer(i)) \
+        if cfg.family != "ssm" else 0
+
+
+def _n_mamba_layers(cfg: ModelConfig) -> int:
+    if cfg.mamba is None:
+        return 0
+    return sum(1 for i in range(cfg.n_layers) if not cfg.is_attn_layer(i))
+
+
+@dataclass
+class CostReport:
+    model_flops: float      # 6*N(active)*D — the paper-style metric
+    hlo_flops: float        # what the compiled program actually executes
+    hbm_bytes: float
+    notes: str = ""
+
+    def ratio(self) -> float:
+        return self.model_flops / max(self.hlo_flops, 1.0)
+
+
+def train_cost(cfg: ModelConfig, shape: ShapeConfig, *, replicas: int,
+               model_shard: int, remat: bool = True) -> CostReport:
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * shape.seq_len
+    model_flops = 6.0 * pc["active"] * tokens
+
+    s_kv = shape.seq_len / 2.0  # causal average
+    attn = _attn_flops_token(cfg, s_kv) * _n_attn_layers(cfg) * tokens
+    mamba = _mamba_flops_token(cfg) * _n_mamba_layers(cfg) * tokens
+    fwd = 2.0 * pc["active"] * tokens + attn + mamba
+    factor = 4.0 if remat else 3.0   # fwd + 2x bwd (+ remat re-fwd)
+    hlo = fwd * factor
+
+    # HBM traffic (global): per replica-shard param read per pass + grad +
+    # AdamW moments (fp32) + activation traffic ~ tokens*d per layer boundary
+    n, d, L = pc["total"], cfg.d_model, cfg.n_layers
+    passes = 3.0 + (1.0 if remat else 0.0)
+    param_bytes = replicas * n * FP32 * passes         # read per pass
+    opt_bytes = replicas * n * (FP32 * 2 * 2 + FP32 * 2)  # m,v rw + p rw
+    act_bytes = tokens * d * L * BF16 * (6 if remat else 10)
+    hbm = param_bytes + opt_bytes + act_bytes
+    return CostReport(model_flops, hlo, hbm,
+                      notes=f"remat x{factor:.0f}, tokens={tokens}")
+
+
+def prefill_cost(cfg: ModelConfig, shape: ShapeConfig) -> CostReport:
+    pc = cfg.param_counts()
+    tokens = shape.global_batch * shape.seq_len
+    model_flops = 2.0 * pc["active"] * tokens
+    s_kv = shape.seq_len / 2.0
+    attn = _attn_flops_token(cfg, s_kv) * _n_attn_layers(cfg) * tokens
+    mamba = _mamba_flops_token(cfg) * _n_mamba_layers(cfg) * tokens
+    hlo = model_flops + attn + mamba
+    d, L = cfg.d_model, cfg.n_layers
+    hbm = (pc["total"] * BF16               # weights once (batch amortized)
+           + tokens * d * L * BF16 * 4     # activations through the stack
+           + _kv_cache_bytes(cfg, shape.global_batch, shape.seq_len))
+    return CostReport(model_flops, hlo, hbm, notes=f"tokens={tokens}")
+
+
+def _kv_cache_bytes(cfg: ModelConfig, batch: int, cache_len: int) -> float:
+    na = _n_attn_layers(cfg)
+    nm = _n_mamba_layers(cfg)
+    if cfg.mla is not None:
+        per = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+        attn_b = na * batch * cache_len * per * BF16
+    else:
+        attn_b = na * batch * cache_len * 2 * cfg.n_kv_heads * \
+            (cfg.head_dim or 1) * BF16
+    mamba_b = 0.0
+    if cfg.mamba is not None:
+        mi = cfg.mamba.d_inner(cfg.d_model)
+        mamba_b = nm * batch * (mi * cfg.mamba.d_state * FP32
+                                + (cfg.mamba.d_conv - 1) * mi * BF16)
+    return attn_b + mamba_b
+
+
+def decode_cost(cfg: ModelConfig, shape: ShapeConfig,
+                window: int = 0) -> CostReport:
+    pc = cfg.param_counts()
+    B = shape.global_batch
+    eff = min(shape.seq_len, window) if window else shape.seq_len
+    model_flops = 2.0 * pc["active"] * B
+    attn = _attn_flops_token(cfg, eff) * _n_attn_layers(cfg) * B
+    mamba = _mamba_flops_token(cfg) * _n_mamba_layers(cfg) * B
+    hlo = model_flops + attn + mamba
+    # decode is memory-bound: all weights + the whole cache are streamed
+    hbm = pc["total"] * BF16 + _kv_cache_bytes(cfg, B, eff) * 2.0
+    return CostReport(model_flops, hlo, hbm,
+                      notes=f"cache_len={eff}, batch={B}")
+
+
+def cost_for(cfg: ModelConfig, shape: ShapeConfig, *, replicas: int = 16,
+             model_shard: int = 16, window: int = 0) -> CostReport:
+    if shape.kind == "train":
+        return train_cost(cfg, shape, replicas=replicas,
+                          model_shard=model_shard)
+    if shape.kind == "prefill":
+        return prefill_cost(cfg, shape)
+    return decode_cost(cfg, shape, window)

@@ -1,0 +1,76 @@
+"""Paper Figure 7: pseudo-gradient-penalty ablation on low-quality data.
+
+A corrupted-data window poisons two replicas mid-training (the in-house
+"diverse corpus" stand-in).  We compare EDiT with each penalty component
+removed: w/o AE (anomaly elimination), w/o WA (weighted averaging),
+w/o GC (gradient clip), w/o ALL, vs full EDiT — measuring post-window
+recovery gap and final PPL.
+
+Scale note: at this CPU horizon (~20 syncs) pseudo-grad norms are still
+non-stationary, so the EMA z-test's sigma stays wide and AE rarely fires —
+the discriminative components here are WA + GC (measured).  AE's mechanism
+(z-test -> weight-0 -> all-anomalous rollback) is verified directly in
+tests/test_penalty.py and tests/test_edit_algorithm.py with calibrated
+stats, matching the paper's long-horizon regime."""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+
+import numpy as np
+
+from benchmarks.common import FAST, emit, run_strategy
+from repro.core.penalty import PenaltyConfig
+
+
+def variant(name):
+    # ema_alpha scaled 0.02 -> 0.2: the paper tunes alpha for 100k-step runs
+    # (stats stabilize over ~1/alpha syncs); this bench has ~18 syncs.
+    base = PenaltyConfig(ema_warmup_syncs=3, ema_alpha=0.2)
+    if name == "full":
+        return base
+    if name == "wo_AE":
+        return dataclasses.replace(base, enable_anomaly=False)
+    if name == "wo_WA":
+        return dataclasses.replace(base, enable_weighting=False)
+    if name == "wo_GC":
+        return dataclasses.replace(base, enable_clip=False)
+    if name == "wo_ALL":
+        return dataclasses.replace(base, enable_anomaly=False,
+                                   enable_weighting=False, enable_clip=False)
+    raise ValueError(name)
+
+
+def main():
+    steps = 90 if FAST else 300
+    corrupt = (steps // 2, steps // 2 + 8)
+    out = {}
+    for name in ["full", "wo_AE", "wo_WA", "wo_GC", "wo_ALL"]:
+        tr = run_strategy(
+            "edit", steps=steps, replicas=4, tau=4, warmup=4, seed=21,
+            data_kwargs={"corrupt_replicas": (1, 2),
+                         "corrupt_steps": corrupt},
+            strategy_kwargs={"penalty": variant(name),
+                             "inner_clip": 0.0})
+        losses = np.array([h["loss"] for h in tr.history])
+        pre = losses[corrupt[0] - 5:corrupt[0]].mean()
+        # recovery: how far ABOVE the pre-corruption level the model sits
+        # after the window closes (the penalty protects the params; the
+        # loss ON corrupted batches is high for everyone)
+        rec = float(losses[corrupt[1] + 4:corrupt[1] + 14].mean() - pre)
+        final = float(losses[-5:].mean())
+        ppl = tr.eval_ppl()
+        out[name] = {"recovery_gap": rec, "final_loss": final, "ppl": ppl}
+        emit(f"fig7_ablation/{name}", 0.0,
+             f"recovery_gap={rec:.3f};final_loss={final:.4f};ppl={ppl:.3f}")
+    os.makedirs("results", exist_ok=True)
+    json.dump(out, open("results/fig7_ablation.json", "w"), indent=1)
+    ok = out["full"]["ppl"] <= out["wo_ALL"]["ppl"] + 1e-3
+    ok2 = out["full"]["recovery_gap"] <= out["wo_ALL"]["recovery_gap"] + 1e-3
+    emit("fig7_ablation/full_beats_wo_ALL", 0.0,
+         f"ppl_ok={ok};recovery_ok={ok2}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Roofline table builder: joins the dry-run artifacts (memory analysis,
+raw cost_analysis, HLO-parsed collective bytes) with the analytic cost
+model and emits the EXPERIMENTS.md SS-Roofline markdown table.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--dir results/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config, get_shape              # noqa: E402
+from repro.launch.hlo_analysis import (HBM_BW, ICI_BW,       # noqa: E402
+                                       PEAK_FLOPS)
+from benchmarks.costmodel import cost_for                    # noqa: E402
+
+
+def analyze_record(rec: dict) -> dict:
+    cfg = get_config(rec["arch"].replace("-", "_").replace(".", "_"))
+    shape = get_shape(rec["shape"])
+    ndev = rec["devices"]
+    rep = 32 if rec["mesh"].startswith("2x") else 16
+    cost = cost_for(cfg, shape, replicas=rep, window=rec.get("window", 0))
+
+    coll = rec["collectives"]
+    coll_bytes = sum(v for k, v in coll.items() if k != "count")
+
+    flops_dev = cost.hlo_flops / ndev
+    bytes_dev = cost.hbm_bytes / ndev
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_bytes / ICI_BW          # HLO collective bytes are per-device
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    return {
+        **rec,
+        "model_flops": cost.model_flops,
+        "hlo_flops": cost.hlo_flops,
+        "useful_ratio": cost.ratio(),
+        "hbm_bytes": cost.hbm_bytes,
+        "coll_bytes_dev": coll_bytes,
+        "t_compute": t_compute,
+        "t_memory": t_memory,
+        "t_collective": t_coll,
+        "bottleneck": dom,
+        "roofline_frac": terms[dom] and max(t_compute, 0) / sum(terms.values()),
+    }
+
+
+MOVE_HINTS = {
+    "compute": "more chips or lower remat factor (selective checkpointing)",
+    "memory": "longer fused chains / wider model-shard axis to cut per-chip "
+              "bytes; bf16 master or offloaded optimizer states",
+    "collective": "shard params over more axes (less per-layer all-gather), "
+                  "overlap FSDP gathers with compute, or raise EDiT tau",
+}
+
+
+def fmt_row(a: dict) -> str:
+    ms = 1e3
+    return (f"| {a['arch']} | {a['shape']} | {a['mesh']} | "
+            f"{a['t_compute']*ms:8.2f} | {a['t_memory']*ms:8.2f} | "
+            f"{a['t_collective']*ms:8.2f} | **{a['bottleneck']}** | "
+            f"{a['model_flops']/1e12:9.1f} | {a['useful_ratio']:.2f} | "
+            f"{a['memory']['argument_bytes']/2**30:6.2f} | "
+            f"{a['memory']['temp_bytes']/2**30:6.2f} | "
+            f"{a['cost_raw'].get('flops',0)/1e9/a['devices']:.2f} |")
+
+
+HEADER = (
+    "| arch | shape | mesh | compute (ms) | memory (ms) | collective (ms) | "
+    "bottleneck | MODEL_FLOPS (TF) | useful | args GiB/dev | temp GiB/dev | "
+    "raw XLA GF/dev |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--json-out", default="")
+    args = ap.parse_args()
+    rows = []
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        rec = json.load(open(path))
+        if args.mesh != "all" and not path.endswith(f"__{args.mesh}.json"):
+            continue
+        rows.append(analyze_record(rec))
+    rows.sort(key=lambda a: (a["shape"], a["arch"]))
+    print(HEADER)
+    for a in rows:
+        print(fmt_row(a))
+    print()
+    # bottleneck summary + what would move it
+    from collections import Counter
+    c = Counter(a["bottleneck"] for a in rows)
+    print("bottleneck distribution:", dict(c))
+    for b, hint in MOVE_HINTS.items():
+        if c.get(b):
+            print(f"- {b}: {hint}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+``BENCH_FAST=0`` runs the long versions.
+"""
+import glob
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+
+def main() -> None:
+    from benchmarks import (fig4_convergence, fig5_stragglers,
+                            fig6_scalability, fig7_ablation,
+                            table2_throughput)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for mod in (table2_throughput, fig5_stragglers, fig4_convergence,
+                fig7_ablation, fig6_scalability):
+        name = mod.__name__.split(".")[-1]
+        print(f"# --- {name} ---", flush=True)
+        mod.main()
+    # roofline summary (requires dry-run artifacts; skip gracefully)
+    if os.path.isdir("results/dryrun") and os.listdir("results/dryrun"):
+        n = len(glob.glob("results/dryrun/*__single.json"))
+        print("# --- roofline (full table: python -m benchmarks.roofline; "
+              "see EXPERIMENTS.md) ---")
+        print(f"roofline/baseline_dryruns_present,0.0,n={n}")
+    print(f"# total {time.time()-t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

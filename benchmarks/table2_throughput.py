@@ -1,0 +1,72 @@
+"""Paper Table 2: per-step throughput of the sync strategies.
+
+Two parts:
+  (a) MEASURED on CPU: wall time of one jitted train step per strategy on
+      the small bench model (sync steps amortized over tau) — shows the
+      relative sync overhead ordering the paper reports (EDiT ~ CO2 >
+      Baseline > Post Local SGD at equal memory).
+  (b) DERIVED for TPU v5e from the dry-run roofline terms: analytic
+      tokens/sec/chip for the paper's Llama family at train_4k.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, bench_model, emit, time_step
+from repro.configs import get_config, get_shape
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.data import SyntheticLM
+from repro.optim import AdamW, constant
+from benchmarks.costmodel import train_cost
+from repro.launch.hlo_analysis import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+def measured():
+    model = bench_model()
+    opt = AdamW()
+    gbatch, seq = 16, 64
+    data = SyntheticLM(model.cfg.vocab_size, seq, gbatch, seed=0)
+    batch = {"tokens": jnp.asarray(data.batch(0))}
+    for name in ["baseline", "post_local_sgd", "diloco", "co2_star", "edit",
+                 "a_edit"]:
+        strat = Strategy(name=name, replicas=4, sync_interval=4,
+                         warmup_steps=0)
+        state = init_train_state(model, strat, opt, jax.random.PRNGKey(0))
+        step = jax.jit(make_train_step(model, strat, opt, constant(1e-3)))
+        args = (state, batch) if name != "a_edit" else \
+            (state, batch, jnp.ones((4,), bool))
+        t = time_step(lambda *a: step(*a)[0], args, iters=3 if FAST else 8)
+        toks = gbatch * seq / t
+        emit(f"table2_throughput/measured_{name}", t * 1e6,
+             f"tokens_per_sec={toks:.0f}")
+
+
+def derived_v5e():
+    """Analytic v5e-256 throughput for the paper's Llama models, train_4k
+    layout, from the roofline terms (no real hardware available)."""
+    shape = get_shape("train_4k")
+    for arch in ["llama_350m", "llama_1b", "llama_3b", "llama_7b"]:
+        cfg = get_config(arch)
+        c = train_cost(cfg, shape, replicas=16, model_shard=16)
+        ndev = 256
+        t_comp = c.hlo_flops / ndev / PEAK_FLOPS
+        t_mem = c.hbm_bytes / ndev / HBM_BW
+        # FSDP all-gather of the full replica params over 'model', 3 passes
+        coll = cfg.param_counts()["total"] * 4 * 3 / ICI_BW
+        t = max(t_comp, t_mem, coll)
+        tokens = shape.global_batch * shape.seq_len
+        tps = tokens / t
+        mfu = c.model_flops / (t * ndev * PEAK_FLOPS)
+        emit(f"table2_throughput/derived_v5e_{arch}", t * 1e6,
+             f"tokens_per_sec={tps:.2e};MFU={mfu:.3f};"
+             f"bound={'coll' if coll >= max(t_comp, t_mem) else 'comp'}")
+
+
+def main():
+    measured()
+    derived_v5e()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""Batched serving example across architecture families: instantiate a
+reduced config (dense / MoE / SSM / hybrid / VLM), prefill a batch of
+requests, decode with greedy + temperature sampling.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch jamba_v0_1_52b
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="olmoe_1b_7b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--new-tokens", type=int, default=24)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    engine = Engine(model, params,
+                    ServeConfig(max_new_tokens=args.new_tokens,
+                                temperature=args.temperature))
+
+    batch = {"tokens": jax.random.randint(
+        key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["prefix_emb"] = jax.random.normal(
+            key, (args.batch, cfg.n_prefix_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, (args.batch, 16, cfg.d_model), jnp.float32)
+
+    import time
+    t0 = time.time()
+    out = engine.generate(batch)
+    dt = time.time() - t0
+    tps = args.batch * args.new_tokens / dt
+    print(f"{cfg.name} [{cfg.family}]: generated {out.shape} "
+          f"in {dt:.2f}s ({tps:.1f} tok/s on CPU)")
+    for i in range(min(2, args.batch)):
+        print(f"  req{i}: {out[i][:12].tolist()}...")
+
+
+if __name__ == "__main__":
+    main()

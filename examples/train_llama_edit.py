@@ -1,0 +1,73 @@
+"""End-to-end training driver: a ~100M-param Llama (the paper's 350M config
+at 79,800 vocab scaled to fit CPU time budgets via --scale) trained for a
+few hundred steps with EDiT vs the chosen baseline, with checkpointing and
+eval — the (b) "end-to-end driver" deliverable.
+
+    PYTHONPATH=src python examples/train_llama_edit.py \
+        --strategy edit --steps 300 --scale small
+
+``--scale full`` uses the exact paper 350M config (32L x 768d, 79,800
+vocab) — runnable but slow on CPU; ``small`` keeps the architecture family
+and shrinks depth/width.
+"""
+import argparse
+import dataclasses
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import Strategy
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.train import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--strategy", default="edit",
+                    choices=["baseline", "post_local_sgd", "diloco",
+                             "co2_star", "edit", "a_edit"])
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--scale", default="small", choices=["small", "full"])
+    ap.add_argument("--replicas", type=int, default=4)
+    ap.add_argument("--tau", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--gbatch", type=int, default=16)
+    ap.add_argument("--lr", type=float, default=1.5e-3)
+    ap.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+
+    cfg = get_config("llama_350m")
+    if args.scale == "small":
+        cfg = dataclasses.replace(cfg, n_layers=4, d_model=256, d_ff=688,
+                                  n_heads=4, n_kv_heads=4, vocab_size=4096)
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    n = cfg.param_counts()["total"]
+    print(f"{cfg.name} scale={args.scale}: {n/1e6:.1f}M params")
+
+    data = SyntheticLM(cfg.vocab_size, args.seq, args.gbatch, seed=0,
+                       markov_q=0.9, noise_frac=0.05,
+                       replicas=args.replicas)
+    strategy = Strategy(name=args.strategy, replicas=args.replicas,
+                        sync_interval=args.tau,
+                        warmup_steps=min(24, args.steps // 10))
+    trainer = Trainer(
+        model, strategy, data,
+        TrainerConfig(total_steps=args.steps, inner_lr=args.lr,
+                      lr_warmup=20, log_every=20,
+                      eval_every=max(args.steps // 4, 1),
+                      ckpt_dir=args.ckpt or None,
+                      ckpt_every=args.steps // 2 if args.ckpt else 0))
+    trainer.run()
+    print(f"[{args.strategy}] final loss "
+          f"{trainer.history[-1]['loss']:.4f}, eval PPL "
+          f"{trainer.eval_ppl():.3f} (floor "
+          f"{jnp.exp(data.entropy_floor()):.3f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Sharded checkpoint save/restore (no orbax offline).
+
+Each leaf is written as a .npy under a directory keyed by its flattened
+tree path; structure + dtypes + a user-metadata dict go into a msgpack
+manifest.  Restore reassembles the pytree and (optionally) device_puts
+leaves with given shardings.  Works for train states of any strategy.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import ml_dtypes
+import msgpack
+import numpy as np
+
+_NONNATIVE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+              "float8_e5m2": np.uint8}
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return ".".join(parts)
+
+
+def save(directory: str, tree: Any, metadata: Optional[Dict] = None) -> None:
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, dtypes = [], []
+    for path, leaf in flat:
+        name = _path_str(path)
+        names.append(name)
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        view = _NONNATIVE.get(str(arr.dtype))
+        if view is not None:
+            arr = arr.view(view)
+        np.save(os.path.join(directory, _sanitize(name) + ".npy"), arr)
+    manifest = {
+        "treedef": str(treedef),
+        "names": names,
+        "dtypes": dtypes,
+        "metadata": metadata or {},
+    }
+    with open(os.path.join(directory, "MANIFEST.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    # store treedef via a pickled-example trick: an all-None tree example
+    example = jax.tree_util.tree_unflatten(treedef, [None] * len(flat))
+    import pickle
+    with open(os.path.join(directory, "treedef.pkl"), "wb") as f:
+        pickle.dump(example, f)
+
+
+def _sanitize(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.-]", "_", name)
+
+
+def restore(directory: str, shardings: Any = None) -> Any:
+    import pickle
+    with open(os.path.join(directory, "MANIFEST.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    with open(os.path.join(directory, "treedef.pkl"), "rb") as f:
+        example = pickle.load(f)
+    treedef = jax.tree_util.tree_structure(
+        example, is_leaf=lambda x: x is None)
+    leaves = []
+    for name, dt in zip(manifest["names"], manifest["dtypes"]):
+        arr = np.load(os.path.join(directory, _sanitize(name) + ".npy"))
+        if dt in _NONNATIVE:
+            arr = arr.view(getattr(ml_dtypes, dt))
+        leaves.append(jnp.asarray(arr))
+    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree
+
+
+def load_metadata(directory: str) -> Dict:
+    with open(os.path.join(directory, "MANIFEST.msgpack"), "rb") as f:
+        return msgpack.unpackb(f.read())["metadata"]

@@ -1,0 +1,4 @@
+from repro.configs.base import (
+    ARCH_IDS, INPUT_SHAPES, MLAConfig, MambaConfig, MoEConfig, ModelConfig,
+    ShapeConfig, get_config, get_shape,
+)

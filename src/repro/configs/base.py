@@ -1,0 +1,245 @@
+"""Config system: model architecture configs + input-shape configs.
+
+Every assigned architecture gets one file in this package defining
+``CONFIG: ModelConfig`` with the exact published numbers (source cited in
+the file docstring).  ``reduced()`` derives the CPU smoke-test variant
+(2 layers, d_model<=512, <=4 experts) mandated by the brief.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from dataclasses import dataclass, field, replace
+from typing import Optional, Tuple
+
+Family = str  # 'dense' | 'moe' | 'ssm' | 'hybrid' | 'encdec' | 'vlm'
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    """DeepSeek-style multi-head latent attention dims [arXiv:2412.19437]."""
+    q_lora_rank: int = 1536
+    kv_lora_rank: int = 512
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclass(frozen=True)
+class MambaConfig:
+    """Mamba-1 block dims [arXiv:2312.00752 / 2410.05355]."""
+    d_state: int = 16
+    d_conv: int = 4
+    expand: int = 2
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int = 8
+    top_k: int = 2
+    n_shared: int = 0            # always-on shared experts (DeepSeek)
+    d_ff: int = 0                # per-expert ffn dim
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.01
+    # which layers are MoE: 'all' | 'every_2' | 'after_k:<k>'
+    layout: str = "all"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0                      # 0 -> d_model // n_heads
+    activation: str = "swiglu"             # 'swiglu' | 'relu2' | 'geglu' | 'gelu'
+    qk_norm: bool = False
+    rope_theta: float = 10000.0
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-5
+    # family extensions
+    moe: Optional[MoEConfig] = None
+    mamba: Optional[MambaConfig] = None
+    mla: Optional[MLAConfig] = None
+    attn_layer_period: int = 0             # hybrid: 1 attn layer per this many (jamba: 8)
+    attn_layer_offset: int = 4             # hybrid: index within the period that is attention
+    n_encoder_layers: int = 0              # encdec only
+    n_prefix_tokens: int = 0               # vlm: image patch tokens; audio: see encdec
+    dense_d_ff_first_k: int = 0            # deepseek: first k layers use dense ffn
+    dense_d_ff: int = 0
+    mtp_depth: int = 0                     # deepseek multi-token prediction heads
+    sliding_window: int = 0                # 0 = full attention; >0 used for long_500k decode
+    source: str = ""                       # citation
+
+    def __post_init__(self):
+        if self.head_dim == 0 and self.n_heads > 0:
+            object.__setattr__(self, "head_dim", self.d_model // self.n_heads)
+
+    # -- derived ---------------------------------------------------------
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    def is_attn_layer(self, i: int) -> bool:
+        if self.family == "ssm":
+            return False
+        if self.family == "hybrid" and self.attn_layer_period:
+            return i % self.attn_layer_period == self.attn_layer_offset
+        return True
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        lay = self.moe.layout
+        if lay == "all":
+            return True
+        if lay == "every_2":
+            return i % 2 == 1
+        if lay.startswith("after_k:"):
+            return i >= int(lay.split(":")[1])
+        raise ValueError(lay)
+
+    def reduced(self) -> "ModelConfig":
+        """CPU smoke-test variant: 2 layers, d_model<=512, <=4 experts."""
+        d = min(self.d_model, 256)
+        n_heads = min(self.n_heads, 4) or 0
+        head_dim = max(d // max(n_heads, 1), 8) if n_heads else 0
+        kv = min(self.n_kv_heads, n_heads) if self.n_kv_heads > 1 else self.n_kv_heads
+        moe = None
+        if self.moe is not None:
+            moe = replace(self.moe, n_experts=4, top_k=min(self.moe.top_k, 2),
+                          n_shared=min(self.moe.n_shared, 1),
+                          d_ff=min(self.moe.d_ff, 128) if self.moe.d_ff else 0,
+                          layout="all" if self.moe.layout.startswith("after_k") else self.moe.layout)
+        mla = None
+        if self.mla is not None:
+            mla = MLAConfig(q_lora_rank=64, kv_lora_rank=32,
+                            qk_nope_head_dim=16, qk_rope_head_dim=8, v_head_dim=16)
+        return replace(
+            self,
+            name=self.name + "-reduced",
+            n_layers=2 if self.attn_layer_period == 0 else max(self.attn_layer_period, 2),
+            d_model=d,
+            n_heads=n_heads,
+            n_kv_heads=kv,
+            head_dim=head_dim if self.mla is None else 0,
+            d_ff=min(self.d_ff, 512),
+            vocab_size=min(self.vocab_size, 1024),
+            moe=moe,
+            mla=mla,
+            n_encoder_layers=2 if self.n_encoder_layers else 0,
+            n_prefix_tokens=min(self.n_prefix_tokens, 16) if self.n_prefix_tokens else 0,
+            dense_d_ff_first_k=1 if self.dense_d_ff_first_k else 0,
+            dense_d_ff=min(self.dense_d_ff, 512) if self.dense_d_ff else 0,
+            mtp_depth=min(self.mtp_depth, 1),
+        )
+
+    # -- parameter counting (for roofline MODEL_FLOPS) --------------------
+    def param_counts(self) -> dict:
+        """Returns {'total': N, 'active': N_active} (embedding included)."""
+        d = self.d_model
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        total = emb
+        active = emb
+        for i in range(self.n_layers):
+            lt, la = self._layer_params(i)
+            total += lt
+            active += la
+        if self.family == "encdec":
+            for _ in range(self.n_encoder_layers):
+                # encoder layers: self-attn + dense ffn
+                at = self._attn_params()
+                ff = 3 * d * self.d_ff if "glu" in self.activation else 2 * d * self.d_ff
+                total += at + ff + 2 * d
+                active += at + ff + 2 * d
+        return {"total": total, "active": active}
+
+    def _attn_params(self) -> int:
+        d = self.d_model
+        if self.mla is not None:
+            m = self.mla
+            qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+            p = d * m.q_lora_rank + m.q_lora_rank * self.n_heads * qk_head
+            p += d * (m.kv_lora_rank + m.qk_rope_head_dim)
+            p += m.kv_lora_rank * self.n_heads * (m.qk_nope_head_dim + m.v_head_dim)
+            p += self.n_heads * m.v_head_dim * d
+            return p
+        hd = self.head_dim
+        return d * self.n_heads * hd + 2 * d * self.n_kv_heads * hd + self.n_heads * hd * d
+
+    def _ffn_params(self, d_ff: int) -> int:
+        d = self.d_model
+        mats = 3 if self.activation in ("swiglu", "geglu") else 2
+        return mats * d * d_ff
+
+    def _mamba_params(self) -> int:
+        d = self.d_model
+        mi = self.mamba.d_inner(d)
+        st = self.mamba.d_state
+        dt_rank = max(d // 16, 1)
+        p = d * 2 * mi                       # in_proj (x and z)
+        p += mi * self.mamba.d_conv          # conv
+        p += mi * (dt_rank + 2 * st)         # x -> dt, B, C
+        p += dt_rank * mi                    # dt_proj
+        p += mi * st + mi                    # A_log, D
+        p += mi * d                          # out_proj
+        return p
+
+    def _layer_params(self, i: int) -> Tuple[int, int]:
+        d = self.d_model
+        if self.is_attn_layer(i):
+            mix = self._attn_params()
+        else:
+            mix = self._mamba_params()
+        if self.is_moe_layer(i):
+            m = self.moe
+            e = self._ffn_params(m.d_ff or self.d_ff)
+            tot = (m.n_experts + m.n_shared) * e + d * m.n_experts
+            act = (m.top_k + m.n_shared) * e + d * m.n_experts
+        elif self.dense_d_ff_first_k and i < self.dense_d_ff_first_k:
+            tot = act = self._ffn_params(self.dense_d_ff)
+        else:
+            tot = act = self._ffn_params(self.d_ff)
+        norms = 2 * d
+        return mix + tot + norms, mix + act + norms
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+INPUT_SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = [
+    "nemotron_4_340b", "deepseek_v3_671b", "qwen3_4b", "falcon_mamba_7b",
+    "qwen3_14b", "jamba_v0_1_52b", "olmoe_1b_7b", "seamless_m4t_medium",
+    "granite_34b", "paligemma_3b",
+    # the paper's own models (Table 3)
+    "llama_350m", "llama_1b", "llama_3b", "llama_7b",
+]
+
+
+def get_config(arch: str) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    return INPUT_SHAPES[name]

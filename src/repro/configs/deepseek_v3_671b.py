@@ -1,0 +1,20 @@
+"""DeepSeek-V3 671B [arXiv:2412.19437]: MLA, MoE 1 shared + 256 routed top-8, MTP.
+
+First 3 layers use a dense FFN (d_ff=18432) per the published config; the
+remaining 58 layers are MoE with per-expert d_ff=2048.
+"""
+from repro.configs.base import MLAConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-v3-671b", family="moe",
+    n_layers=61, d_model=7168, n_heads=128, n_kv_heads=128,
+    d_ff=2048, vocab_size=129280,
+    activation="swiglu",
+    mla=MLAConfig(q_lora_rank=1536, kv_lora_rank=512,
+                  qk_nope_head_dim=128, qk_rope_head_dim=64, v_head_dim=128),
+    moe=MoEConfig(n_experts=256, top_k=8, n_shared=1, d_ff=2048,
+                  capacity_factor=1.25, layout="after_k:3"),
+    dense_d_ff_first_k=3, dense_d_ff=18432,
+    mtp_depth=1,
+    source="arXiv:2412.19437",
+)

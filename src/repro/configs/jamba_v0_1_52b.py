@@ -1,0 +1,13 @@
+"""Jamba-v0.1 52B [arXiv:2403.19887]: Mamba+attention 1:7 interleave, MoE 16e top-2 every 2nd layer."""
+from repro.configs.base import MambaConfig, MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="jamba-v0.1-52b", family="hybrid",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=8,
+    head_dim=128, d_ff=14336, vocab_size=65536,
+    activation="swiglu",
+    mamba=MambaConfig(d_state=16, d_conv=4, expand=2),
+    moe=MoEConfig(n_experts=16, top_k=2, d_ff=14336, layout="every_2"),
+    attn_layer_period=8, attn_layer_offset=4,
+    source="arXiv:2403.19887",
+)

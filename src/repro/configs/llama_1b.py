@@ -1,0 +1,10 @@
+"""Llama-1b from the EDiT paper, Table 3 [arXiv:2307.09288 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-1b", family="dense",
+    n_layers=32, d_model=1536, n_heads=12, n_kv_heads=12,
+    d_ff=4096, vocab_size=79800,
+    activation="swiglu",
+    source="EDiT paper Table 3",
+)

@@ -1,0 +1,10 @@
+"""Llama-350m from the EDiT paper, Table 3 [arXiv:2307.09288 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-350m", family="dense",
+    n_layers=32, d_model=768, n_heads=6, n_kv_heads=6,
+    d_ff=2048, vocab_size=79800,
+    activation="swiglu",
+    source="EDiT paper Table 3",
+)

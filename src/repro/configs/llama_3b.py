@@ -1,0 +1,10 @@
+"""Llama-3b from the EDiT paper, Table 3 [arXiv:2307.09288 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3b", family="dense",
+    n_layers=32, d_model=2560, n_heads=20, n_kv_heads=20,
+    d_ff=6912, vocab_size=79800,
+    activation="swiglu",
+    source="EDiT paper Table 3",
+)

@@ -1,0 +1,10 @@
+"""Llama-7b from the EDiT paper, Table 3 [arXiv:2307.09288 family]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32,
+    d_ff=11008, vocab_size=79800,
+    activation="swiglu",
+    source="EDiT paper Table 3",
+)

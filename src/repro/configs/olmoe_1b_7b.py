@@ -1,0 +1,11 @@
+"""OLMoE-1B-7B [arXiv:2409.02060]: 64 experts top-8 on every layer, per-expert d_ff=1024."""
+from repro.configs.base import MoEConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="olmoe-1b-7b", family="moe",
+    n_layers=16, d_model=2048, n_heads=16, n_kv_heads=16,
+    head_dim=128, d_ff=1024, vocab_size=50304,
+    activation="swiglu", qk_norm=True,
+    moe=MoEConfig(n_experts=64, top_k=8, d_ff=1024, layout="all"),
+    source="arXiv:2409.02060",
+)

@@ -1,0 +1,16 @@
+"""PaliGemma-3B [arXiv:2407.07726]: SigLIP vision encoder (STUB) + Gemma decoder.
+
+The SigLIP ViT + projector is a stub per the brief: input_specs() provides
+256 precomputed patch-embedding prefix tokens (B, 256, d_model); we implement
+the Gemma language decoder (MQA kv=1, head_dim 256, geglu).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b", family="vlm",
+    n_layers=18, d_model=2048, n_heads=8, n_kv_heads=1,
+    head_dim=256, d_ff=16384, vocab_size=257216,
+    activation="geglu", tie_embeddings=True,
+    n_prefix_tokens=256,
+    source="arXiv:2407.07726",
+)

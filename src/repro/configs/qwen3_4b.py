@@ -1,0 +1,11 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family]: dense, GQA(kv=8), qk_norm, head_dim=128."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="dense",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8,
+    head_dim=128, d_ff=9728, vocab_size=151936,
+    activation="swiglu", qk_norm=True, rope_theta=1_000_000.0,
+    tie_embeddings=True,
+    source="hf:Qwen/Qwen3-8B",
+)

@@ -1,0 +1,18 @@
+"""SeamlessM4T-medium [arXiv:2308.11596]: enc-dec transformer backbone.
+
+Per the brief's carve-out, the modality frontend (mel-spectrogram + conformer
+feature extractor) is a STUB: input_specs() provides precomputed frame
+embeddings (B, frames, d_model).  We implement 12 encoder + 12 decoder
+layers (the published speech-encoder/text-decoder depths for the medium
+backbone). vocab 256206 is padded to 256208 for 16-way TP divisibility.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec",
+    n_layers=12, d_model=1024, n_heads=16, n_kv_heads=16,
+    head_dim=64, d_ff=4096, vocab_size=256208,  # 256206 padded to %16==0
+    activation="gelu",
+    n_encoder_layers=12,
+    source="arXiv:2308.11596",
+)

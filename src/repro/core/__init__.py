@@ -1,0 +1,4 @@
+from repro.core.edit import Strategy, init_train_state, make_train_step
+from repro.core.outer_opt import Nesterov
+from repro.core.penalty import PenaltyConfig
+from repro.core.async_sim import AEDiTScheduler, WorkerSpeedModel

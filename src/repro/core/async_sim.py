@@ -1,0 +1,118 @@
+"""A-EDiT asynchrony simulation (paper §3.3).
+
+A-EDiT replaces the fixed tau-step sync with a fixed TIME interval
+tau_time: each worker runs as many inner steps as fit.  SPMD lock-step
+can't run different trip counts per replica, so the library reproduces the
+*update rule* exactly with per-step activity masks: a replica that would
+still be computing its previous step when the global step fires is masked
+(its params/optimizer state freeze — identical math to it simply not having
+stepped), and the sync fires when the slowest replica crosses tau_time.
+
+:class:`WorkerSpeedModel` turns per-worker step-time distributions (the
+paper's random/consistent straggler scenarios) into those masks, plus the
+wall-clock accounting used by benchmarks/fig5_stragglers.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class WorkerSpeedModel:
+    """Per-replica step-time model.
+
+    base_time: nominal seconds per inner step (1.0 = arbitrary unit).
+    consistent_lag: (replica -> extra seconds) for permanently slow workers.
+    random_lag: extra seconds added to ONE uniformly chosen worker per step.
+    jitter: lognormal sigma on every step time.
+    """
+    n_workers: int
+    base_time: float = 1.0
+    consistent_lag: dict = field(default_factory=dict)
+    random_lag: float = 0.0
+    jitter: float = 0.0
+    seed: int = 0
+
+    def __post_init__(self):
+        self._rng = np.random.default_rng(self.seed)
+        self._clock = np.zeros(self.n_workers)   # per-worker wall time
+
+    def step_times(self) -> np.ndarray:
+        t = np.full(self.n_workers, self.base_time)
+        for w, lag in self.consistent_lag.items():
+            t[w] += lag
+        if self.random_lag:
+            t[self._rng.integers(self.n_workers)] += self.random_lag
+        if self.jitter:
+            t *= self._rng.lognormal(0.0, self.jitter, self.n_workers)
+        return t
+
+    def advance(self) -> np.ndarray:
+        """One global step: returns the per-worker completion clock."""
+        self._clock += self.step_times()
+        return self._clock.copy()
+
+    def reset(self):
+        self._clock[:] = 0.0
+
+
+@dataclass
+class AEDiTScheduler:
+    """Drives A-EDiT: yields (active_mask, do_sync_hint) per global step.
+
+    Lock-step semantics: global steps tick at the FASTEST worker's cadence;
+    a worker whose clock is ahead of the global tick is 'still busy' and
+    masked.  When the slowest worker crosses tau_time, everyone syncs —
+    matching Fig. 3(b): no worker waits longer than one straggler step.
+    """
+    speeds: WorkerSpeedModel
+    tau_time: float = 8.0
+
+    def __post_init__(self):
+        self._round_start = 0.0
+        self._tick = 0.0
+        self._progress = np.zeros(self.speeds.n_workers)
+
+    def next_step(self) -> Tuple[np.ndarray, bool]:
+        n = self.speeds.n_workers
+        t = self.speeds.step_times()
+        # the global tick advances by the fastest worker's step;
+        # each worker accrues fractional progress at fastest/own speed and
+        # completes a step when its progress crosses 1
+        self._tick += t.min()
+        self._progress += t.min() / t
+        active = self._progress >= 1.0 - 1e-9
+        self._progress[active] -= 1.0
+        do_sync = (self._tick - self._round_start) >= self.tau_time
+        if do_sync:
+            self._round_start = self._tick
+        return active, do_sync
+
+    def active_fn(self):
+        """Adapter for Trainer(active_fn=...)."""
+        def fn(step: int) -> np.ndarray:
+            active, _ = self.next_step()
+            return active
+        return fn
+
+
+def effective_steps_per_round(speeds: WorkerSpeedModel, tau_time: float,
+                              rounds: int = 50) -> np.ndarray:
+    """Expected inner steps each worker completes per tau_time window —
+    the paper's 'faster workers undertake more iterations'."""
+    counts = np.zeros(speeds.n_workers)
+    for _ in range(rounds):
+        elapsed = np.zeros(speeds.n_workers)
+        while True:
+            t = speeds.step_times()
+            fits = elapsed + t <= tau_time
+            if not fits.any():
+                break
+            elapsed = np.where(fits, elapsed + t, elapsed)
+            counts += fits
+            if (~fits).all():
+                break
+    return counts / rounds

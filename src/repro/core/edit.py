@@ -1,0 +1,323 @@
+"""EDiT train step (paper Algorithm 1) and the baseline sync strategies.
+
+The K-worker layout is SPMD-native: every parameter leaf carries a leading
+replica axis R (one divergent Local-SGD copy per model-sync group), sharded
+over the ``data``/``pod`` mesh axes; the ``model`` axis provides ZeRO-3
+sharding *within* each replica.  One global step:
+
+1. (sync gate) if step > warmup and (step-warmup) % tau == 0: run the
+   pseudo-gradient-penalty sync (Algorithm 2) — per-module weighted
+   averaging over R + Nesterov outer update + broadcast back.  In the
+   paper this happens layer-wise inside the forward pass with prefetch;
+   here the per-layer sync ops live in the same XLA program as the step,
+   and the latency-hiding scheduler provides the overlap (DESIGN.md §2).
+2. per-replica forward/backward via ``vmap`` (grads never cross R).
+3. warmup / Baseline: grads are additionally averaged over R each step.
+4. inner optimizer (AdamW) update; A-EDiT masks updates of inactive
+   replicas (its variable per-round step counts).
+
+Strategies: baseline | post_local_sgd | diloco | co2_star | edit | a_edit.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import penalty as PEN
+from repro.core.outer_opt import Nesterov
+from repro.core.penalty import PenaltyConfig
+
+
+@dataclass(frozen=True)
+class Strategy:
+    name: str = "edit"
+    replicas: int = 4
+    sync_interval: int = 128          # tau
+    warmup_steps: int = 0             # t_warm
+    outer_lr: float = 0.8
+    outer_momentum: float = 0.85
+    penalty: PenaltyConfig = field(default_factory=PenaltyConfig)
+    inner_clip: float = 1.0
+
+    @property
+    def uses_outer(self) -> bool:
+        return self.name != "baseline"
+
+    @property
+    def uses_penalty(self) -> bool:
+        return self.name in ("edit", "a_edit")
+
+    @property
+    def delayed(self) -> bool:
+        return self.name == "co2_star"
+
+    def outer_optimizer(self) -> Nesterov:
+        if self.name == "post_local_sgd":
+            return Nesterov(lr=1.0, momentum=0.0)
+        return Nesterov(lr=self.outer_lr, momentum=self.outer_momentum)
+
+
+def _mean_over_replicas(tree):
+    return jax.tree.map(
+        lambda g: jnp.broadcast_to(jnp.mean(g, axis=0, keepdims=True), g.shape),
+        tree)
+
+
+def _bcast(tree, R: int):
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (R,) + a.shape), tree)
+
+
+def _per_replica_clip(grads, max_norm: float):
+    """Global-norm clip per replica (norms over all non-R axes)."""
+    leaves = jax.tree.leaves(grads)
+    R = leaves[0].shape[0]
+    ss = jnp.zeros((R,), jnp.float32)
+    for lf in leaves:
+        ss = ss + jnp.sum(lf.astype(jnp.float32) ** 2,
+                          axis=tuple(range(1, lf.ndim)))
+    norm = jnp.sqrt(ss)
+    scale = jnp.minimum(max_norm / (norm + 1e-8), 1.0)
+    return jax.tree.map(
+        lambda g: g * scale.reshape((R,) + (1,) * (g.ndim - 1)).astype(g.dtype),
+        grads), norm
+
+
+# ---------------------------------------------------------------------------
+# Sync step (Algorithm 2 wrapper over module groups)
+# ---------------------------------------------------------------------------
+
+def make_sync_fn(cfg, strategy: Strategy):
+    outer = strategy.outer_optimizer()
+    groups = PEN.module_groups(cfg)
+    pcfg = strategy.penalty
+
+    def sync(params, anchor, outer_m, ema):
+        R = jax.tree.leaves(params)[0].shape[0]
+        gp = PEN.split_by_group(params, cfg)
+        ga = PEN.split_by_group(anchor, cfg)
+        gm = PEN.split_by_group(outer_m, cfg)
+        new_params_g, new_anchor_g, new_m_g = {}, {}, {}
+        new_ema = {"count": ema["count"] + 1}
+        infos = []
+        for g in groups:
+            pg, ag, mg = gp[g.key], ga[g.key], gm[g.key]
+            delta = jax.tree.map(
+                lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
+                pg, ag)
+            if strategy.uses_penalty:
+                G = PEN.group_norms(delta, g.n_rep, g.stacked)
+                mu = ema.get(g.key, {}).get("mu", jnp.zeros_like(G))
+                sigma = ema.get(g.key, {}).get("sigma", jnp.ones_like(G))
+                d_hat, rollback, mu2, s2, info = PEN.penalized_pseudo_gradient(
+                    delta, G, mu, sigma, ema["count"], pcfg, g.n_rep, g.stacked)
+                new_ema[g.key] = {"mu": mu2, "sigma": s2}
+                infos.append(info)
+            else:
+                d_hat = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
+                rollback = jnp.zeros((g.n_rep,), bool)
+                if g.key in ema:
+                    new_ema[g.key] = ema[g.key]
+            a2, m2 = outer.update(ag, mg, d_hat)
+
+            def sel(new, old, stacked=g.stacked):
+                if not pcfg.enable_anomaly:
+                    return new
+                if stacked:
+                    rb = rollback.reshape(rollback.shape + (1,) * (new.ndim - 1))
+                else:
+                    rb = rollback[0]
+                return jnp.where(rb, old, new)
+
+            a2 = jax.tree.map(lambda n, o: sel(n, o.astype(jnp.float32)).astype(o.dtype),
+                              a2, ag)
+            m2 = jax.tree.map(sel, m2, mg)
+            new_anchor_g[g.key] = a2
+            new_m_g[g.key] = m2
+            new_params_g[g.key] = jax.tree.map(
+                lambda a, p: jnp.broadcast_to(
+                    a[None].astype(p.dtype), p.shape), a2, pg)
+        new_params = PEN.merge_groups(new_params_g, params)
+        new_anchor = PEN.merge_groups(new_anchor_g, anchor)
+        new_m = PEN.merge_groups(new_m_g, outer_m)
+        if infos:
+            info = {k: jnp.mean(jnp.stack([i[k] for i in infos]))
+                    for k in infos[0]}
+        else:
+            info = {k: jnp.zeros(()) for k in
+                    ("anomalous_frac", "rollback_frac", "mean_norm", "mean_beta")}
+        return new_params, new_anchor, new_m, new_ema, info
+
+    return sync
+
+
+# ---------------------------------------------------------------------------
+# Train state & step
+# ---------------------------------------------------------------------------
+
+def init_train_state(model, strategy: Strategy, inner_opt, key) -> Dict[str, Any]:
+    R = strategy.replicas
+    p0 = model.init(key)
+    params = _bcast(p0, R)
+    state: Dict[str, Any] = {
+        "params": params,
+        "inner_opt": inner_opt.init(params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+    if strategy.uses_outer:
+        state["anchor"] = p0
+        state["outer_m"] = Nesterov().init(p0)
+        state["ema"] = {"count": jnp.zeros((), jnp.int32)}
+        if strategy.uses_penalty:
+            # materialize EMA stats with the right shapes
+            for g in PEN.module_groups(model.cfg):
+                state["ema"][g.key] = {
+                    "mu": jnp.zeros((R, g.n_rep), jnp.float32),
+                    "sigma": jnp.ones((R, g.n_rep), jnp.float32),
+                }
+        if strategy.delayed:
+            state["prev_delta"] = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), p0)
+    return state
+
+
+_CAST_EXCLUDE = ("A_log", "D", "router")  # keep fp32 (SSM dynamics, routing)
+
+
+def _cast_for_compute(params, dtype):
+    """Cast fp32 master weights to the compute dtype BEFORE the per-layer
+    ZeRO-3 all-gather, halving FSDP collective bytes (beyond-paper
+    optimization; the gradient flows through the cast)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    out = []
+    for path, leaf in flat:
+        name = str(getattr(path[-1], "key", ""))
+        if (leaf.dtype == jnp.float32 and leaf.ndim >= 2
+                and name not in _CAST_EXCLUDE):
+            leaf = leaf.astype(dtype)
+        out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
+                    cast_params_dtype=None, grad_specs=None) -> Callable:
+    """Returns train_step(state, batch, active=None) -> (state, metrics).
+
+    ``batch`` leaves have a leading global-batch dim divisible by R.
+    ``active``: (R,) bool — A-EDiT per-replica step mask (None = all on).
+    ``cast_params_dtype``: e.g. jnp.bfloat16 — pre-cast master weights so
+    FSDP all-gathers move half the bytes (see _cast_for_compute).
+    ``grad_specs``: pytree of PartitionSpecs matching params — constraining
+    gradients to the param sharding makes GSPMD REDUCE-SCATTER them into
+    shards instead of all-reducing the full tensors (ZeRO-2-style gradient
+    sharding; 1/model_axis the bytes).
+    """
+    cfg = model.cfg
+    R = strategy.replicas
+    sync_fn = make_sync_fn(cfg, strategy) if strategy.uses_outer else None
+    if cast_params_dtype is not None:
+        def _loss(p, b):
+            return model.loss(_cast_for_compute(p, cast_params_dtype), b)
+    else:
+        _loss = model.loss
+    grad_fn = jax.value_and_grad(_loss, has_aux=True)
+
+    def train_step(state, batch, active=None):
+        step = state["step"]
+        batch_r = jax.tree.map(
+            lambda a: a.reshape((R, a.shape[0] // R) + a.shape[1:]), batch)
+
+        # ---- periodic sync (Algorithm 1 lines 7-9: start of the round) ----
+        metrics_sync = None
+        if strategy.uses_outer:
+            past_warm = step > strategy.warmup_steps
+            at_boundary = jnp.equal(
+                jnp.mod(step - strategy.warmup_steps,
+                        strategy.sync_interval), 0)
+            do_sync = jnp.logical_and(past_warm, at_boundary)
+
+            def run_sync(s):
+                if strategy.delayed:
+                    # CO2*: apply the one-round-stale pseudo gradient, then
+                    # store the fresh one for the next boundary.
+                    delta_now = jax.tree.map(
+                        lambda p, a: jnp.mean(
+                            p.astype(jnp.float32) - a.astype(jnp.float32)[None],
+                            axis=0),
+                        s["params"], s["anchor"])
+                    outer = strategy.outer_optimizer()
+                    a2, m2 = outer.update(s["anchor"], s["outer_m"],
+                                          s["prev_delta"])
+                    new = dict(s)
+                    new["anchor"] = a2
+                    new["outer_m"] = m2
+                    new["prev_delta"] = delta_now
+                    new["params"] = jax.tree.map(
+                        lambda a, p: jnp.broadcast_to(a[None].astype(p.dtype),
+                                                      p.shape), a2, s["params"])
+                    new["ema"] = {"count": s["ema"]["count"] + 1}
+                    return new
+                p2, a2, m2, ema2, _info = sync_fn(
+                    s["params"], s["anchor"], s["outer_m"], s["ema"])
+                new = dict(s)
+                new.update(params=p2, anchor=a2, outer_m=m2, ema=ema2)
+                return new
+
+            def refresh_anchor(s):
+                # end of warmup: replicas are identical; re-anchor
+                new = dict(s)
+                new["anchor"] = jax.tree.map(lambda p: p[0], s["params"])
+                return new
+
+            state = jax.lax.cond(do_sync, run_sync, lambda s: s, state)
+            state = jax.lax.cond(jnp.equal(step, strategy.warmup_steps),
+                                 refresh_anchor, lambda s: s, state)
+
+        # ---- per-replica forward/backward ----------------------------------
+        (losses, metrics), grads = jax.vmap(grad_fn)(state["params"], batch_r)
+        if grad_specs is not None:
+            grads = jax.tree.map(jax.lax.with_sharding_constraint,
+                                 grads, grad_specs)
+
+        # ---- warmup / baseline: average grads across replicas --------------
+        if strategy.name == "baseline":
+            grads = _mean_over_replicas(grads)
+        elif strategy.warmup_steps:
+            grads = jax.lax.cond(
+                step <= strategy.warmup_steps,
+                _mean_over_replicas, lambda g: g, grads)
+
+        if strategy.inner_clip:
+            grads, gnorm = _per_replica_clip(grads, strategy.inner_clip)
+        else:
+            gnorm = jnp.zeros((R,))
+
+        # ---- inner update ---------------------------------------------------
+        lr = lr_sched(step)
+        new_params, new_opt = inner_opt.update(grads, state["inner_opt"],
+                                               state["params"], lr)
+        if active is not None:
+            def mask(new, old):
+                a = active.reshape((R,) + (1,) * (new.ndim - 1))
+                return jnp.where(a, new, old)
+            new_params = jax.tree.map(mask, new_params, state["params"])
+            new_opt = jax.tree.map(
+                lambda n, o: mask(n, o) if (hasattr(n, "ndim") and n.ndim >= 1
+                                            and n.shape[:1] == (R,)) else n,
+                new_opt, state["inner_opt"])
+
+        out = dict(state)
+        out.update(params=new_params, inner_opt=new_opt, step=step + 1)
+        metrics = {
+            "loss": jnp.mean(losses),
+            "loss_per_replica": losses,
+            "grad_norm": jnp.mean(gnorm),
+            "lr": lr,
+            **{k: jnp.mean(v) for k, v in metrics.items()},
+        }
+        return out, metrics
+
+    return train_step

@@ -1,0 +1,41 @@
+"""Outer optimizers for the Local-SGD sync step.
+
+The pseudo-gradient convention follows the paper: Δ = θ_{t,τ} − θ_t is a
+*descent* direction, so the outer gradient is g = −Δ̂ and the outer update is
+θ_{t+1} = θ_t − ν · nesterov(g).  With SGD(ν=1, μ=0) this reduces to plain
+parameter averaging (Post Local SGD); with Nesterov momentum it is the
+DiLoCo/EDiT outer optimizer.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Nesterov:
+    lr: float = 0.8          # nu
+    momentum: float = 0.85   # mu (0 -> plain SGD averaging)
+
+    def init(self, anchor):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), anchor)
+
+    def update(self, anchor, momentum, delta_hat) -> Tuple[Any, Any]:
+        """anchor/delta_hat: same-structure trees (no replica dim)."""
+        mu, nu = self.momentum, self.lr
+
+        def upd(theta, m, dh):
+            g = -dh.astype(jnp.float32)             # outer gradient
+            m_new = mu * m + g
+            step = g + mu * m_new if mu else g      # Nesterov lookahead
+            theta_new = theta.astype(jnp.float32) - nu * step
+            return m_new, theta_new.astype(theta.dtype)
+
+        out = jax.tree.map(upd, anchor, momentum, delta_hat)
+        is_t = lambda x: isinstance(x, tuple)
+        m_new = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        theta_new = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        return theta_new, m_new

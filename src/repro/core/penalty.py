@@ -1,0 +1,202 @@
+"""Pseudo-gradient penalty (EDiT paper §3.2, Algorithm 2).
+
+Operates on *module groups*: the paper computes one pseudo-gradient norm per
+(worker, module/layer).  Our parameters are layer-stacked, so a group is
+either one position of a scanned segment — whose leaves carry a leading
+(R, n_rep, ...) (replica, layer-repeat) prefix — or a single unrolled layer
+/ the global params (embed, head, norms) with an (R, ...) prefix.
+
+All statistics are (R, n_rep) arrays; the weighted average reduces over the
+replica axis R, which GSPMD lowers to an all-reduce over the ``data`` (and
+``pod``) mesh axes — the paper's model-sync-group communication.  Each
+group's stats cost one scalar per (replica, layer): the paper's "only one
+scalar communication" property.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+
+
+@dataclass(frozen=True)
+class PenaltyConfig:
+    clip_threshold: float = 10.0     # phi
+    anomaly_z: float = 3.0           # delta
+    ema_alpha: float = 0.02          # alpha
+    ema_warmup_syncs: int = 10       # no anomaly flagging before this
+    eps: float = 1e-8
+    enable_anomaly: bool = True      # ablation: w/o AE
+    enable_weighting: bool = True    # ablation: w/o WA
+    enable_clip: bool = True         # ablation: w/o GC
+
+
+# ---------------------------------------------------------------------------
+# Module groups
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Group:
+    key: str
+    n_rep: int          # layer-repeat dim (1 for unrolled / global params)
+    stacked: bool       # True if leaves have the (R, n_rep, ...) prefix
+
+
+def module_groups(cfg) -> List[Group]:
+    groups: List[Group] = [Group("globals", 1, False)]
+    for si, seg in enumerate(T.plan_segments(cfg)):
+        for pi in range(len(seg.programs)):
+            if seg.kind == "scan":
+                groups.append(Group(f"blocks/{si}/{pi}", seg.repeat, True))
+            else:
+                groups.append(Group(f"blocks/{si}/{pi}", 1, False))
+    if cfg.family == "encdec":
+        groups.append(Group("encoder", 1, False))
+    return groups
+
+
+def split_by_group(params: Dict[str, Any], cfg) -> Dict[str, Any]:
+    """Reorganize the param tree into {group_key: subtree}."""
+    out: Dict[str, Any] = {}
+    globals_ = {k: v for k, v in params.items()
+                if k not in ("blocks", "encoder")}
+    out["globals"] = globals_
+    for si, seg_p in enumerate(params["blocks"]):
+        for pi, pos_p in enumerate(seg_p):
+            out[f"blocks/{si}/{pi}"] = pos_p
+    if "encoder" in params:
+        out["encoder"] = params["encoder"]
+    return out
+
+
+def merge_groups(grouped: Dict[str, Any], template: Dict[str, Any]) -> Dict[str, Any]:
+    """Inverse of split_by_group, using ``template`` for structure."""
+    out = dict(grouped["globals"])
+    blocks = []
+    for si, seg_p in enumerate(template["blocks"]):
+        blocks.append([grouped[f"blocks/{si}/{pi}"] for pi in range(len(seg_p))])
+    out["blocks"] = blocks
+    if "encoder" in template:
+        out["encoder"] = grouped["encoder"]
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Statistics
+# ---------------------------------------------------------------------------
+
+def group_norms(delta_group, n_rep: int, stacked: bool) -> jnp.ndarray:
+    """Pseudo-gradient norm per (replica, layer-repeat).  delta leaves are
+    (R, n_rep, ...) if stacked else (R, ...).  Returns (R, n_rep) fp32."""
+    leaves = jax.tree.leaves(delta_group)
+    R = leaves[0].shape[0]
+    tot = jnp.zeros((R, n_rep), jnp.float32)
+    for leaf in leaves:
+        lf = leaf.astype(jnp.float32)
+        if stacked:
+            ss = jnp.sum(lf * lf, axis=tuple(range(2, lf.ndim)))
+        else:
+            ss = jnp.sum(lf * lf, axis=tuple(range(1, lf.ndim)))[:, None]
+        tot = tot + ss
+    return jnp.sqrt(tot)
+
+
+def ema_init(cfg) -> Dict[str, Any]:
+    """EMA z-test state; (R,n_rep) stats are created lazily at first use —
+    here we only need shapes, so R is taken at runtime via broadcast."""
+    return {"count": jnp.zeros((), jnp.int32)}
+
+
+def ema_update(mu, sigma, G, alpha: float, valid):
+    """Paper Eq. (1); skipped (per element) where ``valid`` is False."""
+    mu_new = alpha * G + (1 - alpha) * mu
+    var_new = (1 - alpha) * sigma * sigma + alpha * (G - mu_new) ** 2
+    sigma_new = jnp.sqrt(var_new)
+    return jnp.where(valid, mu_new, mu), jnp.where(valid, sigma_new, sigma)
+
+
+# ---------------------------------------------------------------------------
+# The penalty itself (Algorithm 2)
+# ---------------------------------------------------------------------------
+
+def penalized_pseudo_gradient(delta_group, G, mu, sigma, sync_count,
+                              pcfg: PenaltyConfig,
+                              n_rep: int, stacked: bool):
+    """Apply anomaly elimination + weighted averaging + clip to one module
+    group.
+
+    Returns (delta_hat (n_rep, ...) leaves without the R dim,
+             rollback (n_rep,) bool, new_mu, new_sigma, info dict).
+    """
+    R = G.shape[0]
+    # --- anomaly elimination (EMA z-test) ---------------------------------
+    warmed = sync_count >= pcfg.ema_warmup_syncs
+    if pcfg.enable_anomaly:
+        z = (G - mu) / jnp.maximum(sigma, pcfg.eps)
+        anomalous = warmed & (z > pcfg.anomaly_z)
+    else:
+        anomalous = jnp.zeros_like(G, bool)
+    G_eff = jnp.where(anomalous, jnp.inf, G)
+
+    # --- weighted averaging (softmax of -G over replicas) -----------------
+    if pcfg.enable_weighting:
+        w = jax.nn.softmax(-G_eff, axis=0)                      # (R, n_rep)
+    else:
+        alive = (~anomalous).astype(jnp.float32)
+        w = alive / jnp.maximum(alive.sum(0, keepdims=True), 1e-9)
+    rollback = jnp.all(anomalous, axis=0)                       # (n_rep,)
+    w = jnp.where(rollback[None, :], 0.0, w)
+    w = jnp.nan_to_num(w, nan=0.0)
+
+    def wavg(leaf):
+        lf = leaf.astype(jnp.float32)
+        if stacked:
+            wb = w.reshape(w.shape + (1,) * (lf.ndim - 2))
+            return jnp.sum(lf * wb, axis=0)                     # (n_rep, ...)
+        wb = w[:, 0].reshape((R,) + (1,) * (lf.ndim - 1))
+        return jnp.sum(lf * wb, axis=0)
+
+    delta_bar = jax.tree.map(wavg, delta_group)
+
+    # --- pseudo-gradient clip ---------------------------------------------
+    # norm of the averaged pseudo gradient, per layer-repeat
+    leaves = jax.tree.leaves(delta_bar)
+    tot = jnp.zeros((n_rep,), jnp.float32)
+    for lf in leaves:
+        if stacked:
+            tot = tot + jnp.sum(lf * lf, axis=tuple(range(1, lf.ndim)))
+        else:
+            tot = tot + jnp.sum(lf * lf)[None] * jnp.ones((n_rep,))
+    G_bar = jnp.sqrt(tot)
+    if pcfg.enable_clip:
+        beta = jnp.minimum(pcfg.clip_threshold / (G_bar + pcfg.eps), 1.0)
+    else:
+        beta = jnp.ones_like(G_bar)
+
+    def clip(leaf):
+        if stacked:
+            bb = beta.reshape(beta.shape + (1,) * (leaf.ndim - 1))
+        else:
+            bb = beta[0]
+        return leaf * bb
+
+    delta_hat = jax.tree.map(clip, delta_bar)
+
+    # --- EMA update (Eq. 1), skipped for anomalous entries -----------------
+    # warm start: the paper establishes stable (mu, sigma) during a warmup
+    # period; on the very first sync we seed them from the observed norms
+    # (mu=G, sigma=G/4) instead of the arbitrary (0, 1) init, so the z-test
+    # is calibrated to the model's scale from the start.
+    first = sync_count == 0
+    mu = jnp.where(first, G, mu)
+    sigma = jnp.where(first, 0.25 * G, sigma)
+    new_mu, new_sigma = ema_update(mu, sigma, G, pcfg.ema_alpha, ~anomalous)
+
+    info = {"anomalous_frac": jnp.mean(anomalous.astype(jnp.float32)),
+            "rollback_frac": jnp.mean(rollback.astype(jnp.float32)),
+            "mean_norm": jnp.mean(G), "mean_beta": jnp.mean(beta)}
+    return delta_hat, rollback, new_mu, new_sigma, info

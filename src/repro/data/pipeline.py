@@ -1,0 +1,103 @@
+"""Deterministic synthetic LM data pipeline.
+
+Offline container -> no FineWeb-Edu; we need a corpus that (a) is *learnable*
+(so convergence/PPL curves in the benchmarks are meaningful), (b) is
+deterministic per (seed, step, shard) for exact reproducibility and
+elastic-training experiments, and (c) models the paper's "diverse corpus of
+varying quality": a mixture of clean Markov-structured streams and noise
+streams, with optional per-worker corruption (for the pseudo-gradient-
+penalty ablation — a worker that hits a bad batch is exactly the anomaly
+EDiT's z-test should catch).
+
+Generative process per sequence: a hidden permutation pi over the vocab;
+token_{t+1} = pi(token_t) with prob q, else uniform.  Optimal CE =
+-(q log q + (1-q) log((1-q)/V)) -- computable, so benchmarks can report the
+gap to the entropy floor.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+@dataclass
+class SyntheticLM:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    markov_q: float = 0.9
+    # fraction of *sequences* that are pure noise (low-quality corpus share)
+    noise_frac: float = 0.0
+    # workers (replica indices) whose data is corrupted, and from which step
+    corrupt_replicas: Tuple[int, ...] = ()
+    corrupt_steps: Tuple[int, int] = (0, 0)   # [start, end)
+    # 'noise': uniform random tokens (high-entropy junk)
+    # 'repeat': each sequence one repeated token (degenerate, loss-spiking —
+    #           the paper's low-quality-corpus failure mode: a coherent huge
+    #           gradient toward a unigram)
+    corrupt_mode: str = "repeat"
+    replicas: int = 1
+    split: str = "train"                       # train | valid
+
+    def __post_init__(self):
+        rng = np.random.default_rng(self.seed)
+        self.perm = rng.permutation(self.vocab_size)
+
+    def entropy_floor(self) -> float:
+        q, V = self.markov_q, self.vocab_size
+        if q >= 1.0:
+            return 0.0
+        if q <= 0.0:
+            return math.log(V)
+        return -(q * math.log(q) + (1 - q) * math.log((1 - q) / V))
+
+    def _seq_batch(self, rng, n: int, noise: bool) -> np.ndarray:
+        toks = np.empty((n, self.seq_len), np.int32)
+        toks[:, 0] = rng.integers(0, self.vocab_size, n)
+        if noise:
+            toks[:] = rng.integers(0, self.vocab_size, (n, self.seq_len))
+            return toks
+        follow = rng.random((n, self.seq_len - 1)) < self.markov_q
+        rand = rng.integers(0, self.vocab_size, (n, self.seq_len - 1))
+        for t in range(1, self.seq_len):
+            nxt = self.perm[toks[:, t - 1]]
+            toks[:, t] = np.where(follow[:, t - 1], nxt, rand[:, t - 1])
+        return toks
+
+    def batch(self, step: int) -> np.ndarray:
+        """(global_batch, seq_len) int32, deterministic in (seed, step)."""
+        salt = 0 if self.split == "train" else 10_000_019
+        rng = np.random.default_rng(
+            (self.seed * 1_000_003 + step + salt) % (2 ** 63))
+        gb = self.global_batch
+        n_noise = int(round(gb * self.noise_frac))
+        parts = []
+        if gb - n_noise:
+            parts.append(self._seq_batch(rng, gb - n_noise, noise=False))
+        if n_noise:
+            parts.append(self._seq_batch(rng, n_noise, noise=True))
+        toks = np.concatenate(parts, axis=0)
+        rng.shuffle(toks, axis=0)
+        # per-replica corruption window (anomaly-injection for ablations)
+        if self.corrupt_replicas and \
+                self.corrupt_steps[0] <= step < self.corrupt_steps[1]:
+            per = gb // self.replicas
+            for r in self.corrupt_replicas:
+                if self.corrupt_mode == "repeat":
+                    one = rng.integers(0, self.vocab_size, (per, 1))
+                    toks[r * per:(r + 1) * per] = np.broadcast_to(
+                        one, (per, self.seq_len))
+                else:
+                    toks[r * per:(r + 1) * per] = rng.integers(
+                        0, self.vocab_size, (per, self.seq_len))
+        return toks
+
+    def batches(self, start: int = 0):
+        step = start
+        while True:
+            yield self.batch(step)
+            step += 1

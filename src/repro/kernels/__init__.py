@@ -1,0 +1,1 @@
+from repro.kernels.ops import attention_op, pg_penalty_op, selective_scan_op

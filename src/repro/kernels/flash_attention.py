@@ -1,0 +1,103 @@
+"""Pallas TPU flash attention (forward), GQA-aware, causal + sliding window.
+
+VMEM tiling: the grid is (batch, q_heads, nq, nk); for a fixed (b, h, i)
+the nk axis iterates sequentially (TPU grids are executed in row-major
+order on a core), so the online-softmax running stats (m, l) and the output
+accumulator live in VMEM scratch and are finalized when j == nk-1.
+
+GQA without materializing repeated KV: the K/V BlockSpec index maps send
+q-head ``h`` to kv-head ``h // group_size``, so each kv block is fetched
+from HBM once per q-head group member but never duplicated in HBM.
+
+Block shapes default to (128, head_dim) x (128, head_dim): MXU-aligned
+(multiples of 128 on the matmul dims) and small enough that
+q + k + v + acc + p blocks fit comfortably in ~1 MB of VMEM even at
+head_dim 256.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, causal: bool, window: int,
+                  block_q: int, block_k: int, nk: int):
+    i = pl.program_id(2)          # q block
+    j = pl.program_id(3)          # k block
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, 0].astype(jnp.float32)          # (bq, hd)
+    k = k_ref[0, 0].astype(jnp.float32)          # (bk, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale  # (bq,bk)
+
+    q_pos = i * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = j * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    mask = jnp.ones(s.shape, jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    m_scr[...] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + p @ v
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[:, None]
+        o_ref[0, 0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False):
+    """q: (B, H, S, hd); k/v: (B, Kv, T, hd) with H % Kv == 0.
+    Returns (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    Kv, T = k.shape[1], k.shape[2]
+    G = H // Kv
+    bq, bk = min(block_q, S), min(block_k, T)
+    assert S % bq == 0 and T % bk == 0
+    nq, nk = S // bq, T // bk
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        block_q=bq, block_k=bk, nk=nk)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd), lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),       # m (running max)
+            pltpu.VMEM((bq,), jnp.float32),       # l (running sum)
+            pltpu.VMEM((bq, hd), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

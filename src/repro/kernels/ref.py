@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for every Pallas kernel (shape/dtype-swept in tests)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,S,hd); k/v: (B,Kv,T,hd).  Naive full-softmax attention."""
+    B, H, S, hd = q.shape
+    Kv, T = k.shape[1], k.shape[2]
+    G = H // Kv
+    k = jnp.repeat(k, G, axis=1)
+    v = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * (hd ** -0.5)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(T)[None, :]
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask = mask & (kp <= qp)
+    if window:
+        mask = mask & (qp - kp < window)
+    s = jnp.where(mask, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def selective_scan_ref(a, bx, C, h0):
+    """Sequential oracle for the SSM recurrence.
+    a, bx: (B,S,mi,st); C: (B,S,st); h0: (B,mi,st).
+    Returns y (B,S,mi) fp32 and h_last."""
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t * h + b_t
+        y = jnp.einsum("bmt,bt->bm", h, c_t)
+        return h, y
+
+    xs = (jnp.moveaxis(a, 1, 0), jnp.moveaxis(bx, 1, 0), jnp.moveaxis(C, 1, 0))
+    h_last, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h_last
+
+
+def pg_combine_ref(delta, w, beta):
+    """delta: (R, N); w: (R,); beta: scalar.  out = beta * sum_r w_r delta_r."""
+    return beta * jnp.einsum("r,rn->n", w.astype(jnp.float32),
+                             delta.astype(jnp.float32))
+
+
+def pg_sumsq_ref(delta):
+    """delta: (R, N) -> per-replica sum of squares (R,) fp32."""
+    d = delta.astype(jnp.float32)
+    return jnp.sum(d * d, axis=1)

@@ -1,0 +1,79 @@
+"""Pallas TPU selective-scan (Mamba-1 SSM recurrence) kernel.
+
+h_t = a_t * h_{t-1} + b_t ;  y_t = <h_t, C_t>   (per channel, d_state wide)
+
+Tiling: grid (batch, d_inner blocks, seq chunks).  The chunk axis is the
+last (sequential) grid dim, so the carry h lives in a VMEM scratch of shape
+(block_mi, d_state) that persists across chunks and is re-initialized when
+the chunk index wraps (new (b, mi) tile).  Within a chunk the recurrence is
+a ``lax.scan`` over loaded VMEM values — time steps are data-dependent so
+the MXU sees (block_mi, d_state) elementwise work; block_mi defaults to 512
+lanes to keep the VPU busy, d_state=16 as in Mamba-1.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _scan_kernel(a_ref, b_ref, c_ref, y_ref, hlast_ref, h_scr, *, nc: int):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        h_scr[...] = jnp.zeros_like(h_scr)
+
+    a = a_ref[0].astype(jnp.float32)   # (chunk, bmi, st)
+    b = b_ref[0].astype(jnp.float32)   # (chunk, bmi, st)
+    c = c_ref[0].astype(jnp.float32)   # (chunk, st)
+
+    def step(h, inp):
+        a_t, b_t, c_t = inp
+        h = a_t * h + b_t                        # (bmi, st)
+        y = jnp.sum(h * c_t[None, :], axis=1)    # (bmi,)
+        return h, y
+
+    h, ys = jax.lax.scan(step, h_scr[...], (a, b, c))
+    h_scr[...] = h
+    y_ref[0] = ys.astype(y_ref.dtype)            # (chunk, bmi)
+
+    @pl.when(k == nc - 1)
+    def _emit_state():
+        hlast_ref[0] = h.astype(hlast_ref.dtype)
+
+
+def selective_scan(a, bx, C, *, chunk: int = 256, block_mi: int = 512,
+                   interpret: bool = False):
+    """a, bx: (B, S, mi, st); C: (B, S, st).
+    Returns (y (B, S, mi) fp32, h_last (B, mi, st) fp32)."""
+    B, S, mi, st = a.shape
+    ch = min(chunk, S)
+    bmi = min(block_mi, mi)
+    assert S % ch == 0 and mi % bmi == 0
+    nc, nmi = S // ch, mi // bmi
+
+    kernel = functools.partial(_scan_kernel, nc=nc)
+    y, h_last = pl.pallas_call(
+        kernel,
+        grid=(B, nmi, nc),
+        in_specs=[
+            pl.BlockSpec((1, ch, bmi, st), lambda b, m, k: (b, k, m, 0)),
+            pl.BlockSpec((1, ch, bmi, st), lambda b, m, k: (b, k, m, 0)),
+            pl.BlockSpec((1, ch, st), lambda b, m, k: (b, k, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, ch, bmi), lambda b, m, k: (b, k, m)),
+            pl.BlockSpec((1, bmi, st), lambda b, m, k: (b, m, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, S, mi), jnp.float32),
+            jax.ShapeDtypeStruct((B, mi, st), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((bmi, st), jnp.float32)],
+        interpret=interpret,
+    )(a, bx, C)
+    return y, h_last

@@ -1,0 +1,201 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production mesh with ShapeDtypeStruct stand-ins (no allocation), print
+memory/cost analyses, and record collective traffic for the roofline.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_4b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.dist.sharding import (SERVE_LONG_POLICY, SERVE_POLICY,
+                                 SERVE_SP_POLICY, TRAIN_POLICY,
+                                 TRAIN_POLICY_HIER, TRAIN_POLICY_MULTIPOD,
+                                 use_policy)
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.mesh import (make_hierarchical_mesh, make_production_mesh,
+                               model_axis_size, replica_axes, replica_count)
+from repro.models import build_model
+from repro.optim import AdamW, cosine_with_warmup
+
+# sliding-window decode for full-attention archs at 500k (DESIGN.md §5)
+LONG_WINDOW = 16384
+FULL_ATTENTION_LONG_OK = {"falcon-mamba-7b", "jamba-v0.1-52b"}
+
+ASSIGNED = [a for a in ARCH_IDS if not a.startswith("llama")]
+
+
+def wants_window(cfg, shape) -> bool:
+    return (shape.name == "long_500k"
+            and cfg.name not in FULL_ATTENTION_LONG_OK
+            and cfg.family != "ssm")
+
+
+def build_train_program(cfg, shape, mesh, opts=()):
+    R = replica_count(mesh)
+    policy = (jax.checkpoint_policies.dots_saveable
+              if "remat_dots" in opts else None)
+    model = build_model(cfg, param_dtype=jnp.float32,
+                        compute_dtype=jnp.bfloat16, remat=True,
+                        remat_policy=policy)
+    strategy = Strategy(name="edit", replicas=R, sync_interval=128,
+                        warmup_steps=1000)
+    opt = AdamW()
+    sched = cosine_with_warmup(1.5e-4, 1000, 100_000)
+    state = jax.eval_shape(
+        lambda k: init_train_state(model, strategy, opt, k),
+        jax.random.PRNGKey(0))
+    batch = model.input_specs(shape)["batch"]
+    st_specs = SP.train_state_specs(
+        state, cfg, mesh, expert_parallel="expert_parallel" in opts)
+    step_fn = make_train_step(
+        model, strategy, opt, sched,
+        cast_params_dtype=jnp.bfloat16 if "cast_bf16" in opts else None,
+        grad_specs=st_specs["params"] if "grad_rs" in opts else None)
+    b_specs = SP.train_batch_specs(batch, cfg, mesh, R)
+    jf = jax.jit(step_fn, in_shardings=(st_specs, b_specs))
+    return jf, (state, batch)
+
+
+def build_decode_program(cfg, shape, mesh, window: int):
+    model = build_model(cfg, param_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.bfloat16, window=window)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    sp = model.input_specs(shape)
+    cache, tokens, pos = sp["cache"], sp["tokens"], sp["pos"]
+    p_specs = SP.serve_param_specs(params, cfg, mesh, shape.global_batch)
+    c_specs = SP.cache_specs(cache, cfg, mesh, shape.global_batch)
+    t_specs = SP.serve_batch_specs(tokens, cfg, mesh, shape.global_batch)
+    from jax.sharding import PartitionSpec as P
+    jf = jax.jit(model.decode_step,
+                 in_shardings=(p_specs, c_specs, t_specs, P()))
+    return jf, (params, cache, tokens, pos)
+
+
+def build_prefill_program(cfg, shape, mesh):
+    model = build_model(cfg, param_dtype=jnp.bfloat16,
+                        compute_dtype=jnp.bfloat16)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = model.input_specs(shape)["batch"]
+    p_specs = SP.serve_param_specs(params, cfg, mesh, shape.global_batch)
+    b_specs = SP.serve_batch_specs(batch, cfg, mesh, shape.global_batch)
+    jf = jax.jit(model.prefill, in_shardings=(p_specs, b_specs))
+    return jf, (params, batch)
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool,
+            verbose: bool = True, opts=()) -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if "hier4" in opts:
+        mesh = make_hierarchical_mesh(4, multi_pod=multi_pod)
+    else:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    window = LONG_WINDOW if wants_window(cfg, shape) else 0
+    if shape.kind == "train":
+        policy = TRAIN_POLICY_HIER if "hier4" in opts else (
+            TRAIN_POLICY_MULTIPOD if multi_pod else TRAIN_POLICY)
+    elif shape.global_batch < replica_count(mesh):
+        policy = SERVE_LONG_POLICY
+    elif "seq_parallel" in opts:
+        policy = SERVE_SP_POLICY
+    else:
+        policy = SERVE_POLICY
+    rec = {"arch": cfg.name, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "kind": shape.kind, "window": window, "devices": n_dev,
+           "opts": list(opts)}
+    t0 = time.time()
+    with jax.set_mesh(mesh), use_policy(policy):
+        if shape.kind == "train":
+            jf, args = build_train_program(cfg, shape, mesh, opts)
+        elif shape.kind == "prefill":
+            jf, args = build_prefill_program(cfg, shape, mesh)
+        else:
+            jf, args = build_decode_program(cfg, shape, mesh, window)
+        lowered = jf.lower(*args)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "code_bytes": ma.generated_code_size_in_bytes,
+        }
+        ca = compiled.cost_analysis() or {}
+        rec["cost_raw"] = {k: float(ca[k]) for k in
+                           ("flops", "bytes accessed") if k in ca}
+        txt = compiled.as_text()
+        rec["hlo_bytes"] = len(txt)
+        rec["collectives"] = collective_bytes(txt)
+        if verbose:
+            print(f"[{rec['arch']} x {shape_name} x {rec['mesh']}] "
+                  f"compile={rec['compile_s']}s "
+                  f"args={ma.argument_size_in_bytes/2**30:.2f}GiB/dev "
+                  f"temp={ma.temp_size_in_bytes/2**30:.2f}GiB/dev "
+                  f"colls={rec['collectives']['count']}", flush=True)
+            print("  memory_analysis:", ma, flush=True)
+            print("  cost_analysis:", rec["cost_raw"], flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--opts", default="",
+                    help="comma list: cast_bf16,expert_parallel,seq_parallel")
+    args = ap.parse_args()
+    opts = tuple(o for o in args.opts.split(",") if o)
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = list(INPUT_SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    os.makedirs(args.out, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                if opts:
+                    tag += "__" + "-".join(opts)
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print("skip (exists):", tag, flush=True)
+                    continue
+                try:
+                    rec = run_one(arch, shape, mp, opts=opts)
+                    with open(path, "w") as f:
+                        json.dump(rec, f, indent=1)
+                except Exception as e:
+                    failures.append(tag)
+                    print(f"FAIL {tag}: {e}", flush=True)
+                    traceback.print_exc()
+    print(f"done; {len(failures)} failures: {failures}", flush=True)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,158 @@
+"""Post-compile HLO analysis: collective byte counts + roofline terms.
+
+``cost_analysis()`` does not report collective traffic, and XLA counts
+``while``-loop (scan) bodies once regardless of trip count.  We therefore
+(a) parse the optimized HLO text for collective ops and sum their output
+shape bytes, and (b) optionally lower with full scan unroll so loop bodies
+are counted exactly (the dry-run driver does both and records which).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Sum bytes over every tensor shape in an HLO result type string
+    (handles tuples '(bf16[2,3], f32[4])')."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(hlo_text: str) -> Dict[str, str]:
+    """Split HLO module text into {computation_name: body_text}.
+
+    A computation starts at column 0 with ``%name (`` (or ``ENTRY``) — the
+    signature may wrap over several lines — and ends at a column-0 ``}``.
+    """
+    comps: Dict[str, str] = {}
+    cur, buf = None, []
+    for line in hlo_text.splitlines():
+        if cur is None:
+            m = re.match(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+            if m:
+                cur = m.group(1)
+                buf = [line]
+            continue
+        buf.append(line)
+        if line.startswith("}"):
+            comps[cur] = "\n".join(buf)
+            cur = None
+    return comps
+
+
+def _while_trip_counts(comps: Dict[str, str]) -> Dict[str, int]:
+    """Map while-BODY computation name -> known trip count, parsed from the
+    paired condition computation (compare against a constant)."""
+    # find while ops: "... while(...), condition=%cond, body=%body"
+    body_to_cond = {}
+    for text in comps.values():
+        for m in re.finditer(
+                r"while\([^)]*\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)",
+                text):
+            body_to_cond[m.group(2)] = m.group(1)
+    trips: Dict[str, int] = {}
+    for body, cond in body_to_cond.items():
+        ctext = comps.get(cond, "")
+        consts = re.findall(r"constant\((\d+)\)", ctext)
+        if consts:
+            trips[body] = max(int(c) for c in consts)
+    return trips
+
+
+def _computation_multipliers(comps: Dict[str, str]) -> Dict[str, int]:
+    """Execution-count multiplier for every computation: product of trip
+    counts of enclosing while loops (nested loops compose)."""
+    trips = _while_trip_counts(comps)
+    # call graph: computation -> computations it references via body=/to_apply=
+    refs: Dict[str, list] = {}
+    for name, text in comps.items():
+        refs[name] = []
+        for m in re.finditer(r"body=%?([\w.\-]+)", text):
+            refs[name].append((m.group(1), trips.get(m.group(1), 1)))
+        for m in re.finditer(r"(?:to_apply|calls)=%?([\w.\-]+)", text):
+            refs[name].append((m.group(1), 1))
+        # condition computations contain no collectives; skip them
+    mult: Dict[str, int] = {}
+
+    roots = set(comps) - {c for lst in refs.values() for c, _ in lst}
+
+    def visit(name, m):
+        mult[name] = max(mult.get(name, 0), m)
+        for child, t in refs.get(name, []):
+            visit(child, m * t)
+
+    for r in roots:
+        visit(r, 1)
+    for name in comps:
+        mult.setdefault(name, 1)
+    return mult
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-class output bytes of collective ops in optimized HLO (per
+    device), with while-loop (scan) bodies multiplied by their trip count —
+    XLA's own cost model counts loop bodies once, which would undercount
+    per-layer FSDP collectives by n_layers.
+
+    Matches plain and -start async variants; '-done' ops are skipped.
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:  # fallback: treat whole text as one computation
+        comps = {"entry": hlo_text}
+    mults = _computation_multipliers(comps)
+    out = {c: 0 for c in _COLLECTIVES}
+    out["count"] = 0
+    pat = re.compile(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(")
+    for cname, text in comps.items():
+        mul = mults.get(cname, 1)
+        for line in text.splitlines():
+            ls = line.strip()
+            if "-done" in ls:
+                continue
+            m = pat.match(ls)
+            if not m:
+                continue
+            shape_str, op = m.group(1), m.group(2)
+            out[op] += _shape_bytes(shape_str) * mul
+            out["count"] += mul
+    return out
+
+
+# --- TPU v5e hardware constants (per chip) ---------------------------------
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link (brief's figure)
+
+
+def roofline_terms(flops_per_dev: float, bytes_per_dev: float,
+                   coll_bytes_per_dev: float) -> Dict[str, float]:
+    t_compute = flops_per_dev / PEAK_FLOPS
+    t_memory = bytes_per_dev / HBM_BW
+    t_collective = coll_bytes_per_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_collective}
+    dom = max(terms, key=terms.get)
+    terms["bottleneck"] = dom.replace("_s", "")
+    return terms

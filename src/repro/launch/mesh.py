@@ -1,0 +1,68 @@
+"""Production mesh builders.
+
+Single pod: TPU v5e-256 as (data=16, model=16) — ``model`` is the ZeRO-3
+model-shard axis (paper: intra-node NVLink group), ``data`` the model-sync
+axis (paper: inter-node group, sync every tau steps).
+
+Multi-pod: 2 x 256 as (pod=2, data=16, model=16); ``pod`` extends the
+model-sync axis across the DCN — exactly the slow-link regime Local SGD
+amortizes.
+
+Functions, not module constants: importing this module must never touch
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_hierarchical_mesh(sync: int = 4, *, multi_pod: bool = False):
+    """Hierarchical EDiT (beyond-paper, DESIGN.md §9): only ``sync``
+    model-sync replicas; the rest of the data axis joins FSDP, dividing
+    per-device master/optimizer bytes by (16/sync).  Trades sync-group
+    count (Local-SGD parallelism) for memory — the knob that makes
+    nemotron-340b/deepseek-671b EDiT-trainable on 16 GB v5e chips."""
+    assert 16 % sync == 0
+    inner = 16 // sync
+    if multi_pod:
+        return jax.make_mesh((2, sync, inner, 16),
+                             ("pod", "data", "fsdp", "model"),
+                             axis_types=(AxisType.Auto,) * 4)
+    return jax.make_mesh((sync, inner, 16), ("data", "fsdp", "model"),
+                         axis_types=(AxisType.Auto,) * 3)
+
+
+def fsdp_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("fsdp", "model"))
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over the actually-available devices (tests/examples)."""
+    n = len(jax.devices())
+    assert data * model <= n, (data, model, n)
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
+
+
+def replica_axes(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def replica_count(mesh) -> int:
+    s = dict(zip(mesh.axis_names, mesh.devices.shape))
+    r = 1
+    for a in replica_axes(mesh):
+        r *= s[a]
+    return r
+
+
+def model_axis_size(mesh) -> int:
+    s = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return s.get("model", 1)

@@ -1,0 +1,214 @@
+"""PartitionSpec builders for dry-run / launch in_shardings.
+
+Train state layout (EDiT): every param leaf is (R, [n_rep,] ...) — replica
+axis over ('pod','data'), one FSDP dim over 'model'.  Serve params are
+name-aware tensor-parallel.  Caches shard batch over 'data' and the
+sequence dim over 'model' (over ('data','model') for batch=1 long-context).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.dist.sharding import fsdp_spec, tp_spec
+from repro.launch.mesh import fsdp_axes, model_axis_size, replica_axes
+from repro.models import transformer as T
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def _scan_segments(cfg) -> set:
+    return {si for si, seg in enumerate(T.plan_segments(cfg))
+            if seg.kind == "scan"}
+
+
+def _n_stack_prefix(spath: str, scan_segs: set, has_replica: bool) -> int:
+    """Number of leading (replica, layer-stack) dims for a param leaf."""
+    parts = spath.split("/")
+    n = 1 if has_replica else 0
+    for i, p in enumerate(parts):
+        if p == "blocks" and i + 1 < len(parts):
+            if int(parts[i + 1]) in scan_segs:
+                n += 1
+            break
+        if p == "encoder":   # encoder layers are vmap-stacked
+            n += 1
+            break
+    return n
+
+
+def train_state_specs(state, cfg, mesh, *, expert_parallel: bool = False):
+    """Pytree of PartitionSpecs matching an EDiT train state.
+
+    ``expert_parallel``: shard MoE expert stacks on the EXPERT dim (instead
+    of the largest weight dim) so expert einsums compute locally and only
+    token dispatch crosses the 'model' axis (beyond-paper optimization)."""
+    rep = replica_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fax = fsdp_axes(mesh)                  # ('model',) or ('fsdp','model')
+    msz = 1
+    for a in fax:
+        msz *= sizes[a]
+    model_ax = fax if len(fax) > 1 else fax[0]
+    scan_segs = _scan_segments(cfg)
+
+    def _prefer(sub: str, npre: int) -> int:
+        # expert dim immediately follows the (replica, layer-stack) prefix
+        return npre if (expert_parallel and "experts" in sub) else -1
+
+    def spec_for(path, leaf):
+        spath = _path_str(path)
+        top = spath.split("/")[0]
+        shp = leaf.shape
+        if top in ("params",) or top == "inner_opt":
+            if leaf.ndim == 0:
+                return P()
+            sub = spath.split("/", 1)[1] if "/" in spath else ""
+            if top == "inner_opt":
+                # AdamWState paths look like inner_opt/0/params-path
+                sub = sub.split("/", 1)[1] if "/" in sub else sub
+            npre = _n_stack_prefix(sub, scan_segs, has_replica=True)
+            return fsdp_spec(shp, msz, n_prefix=npre, replica_axes=rep,
+                             model_axis=model_ax,
+                             prefer_dim=_prefer(sub, npre))
+        if top in ("anchor", "outer_m", "prev_delta"):
+            sub = spath.split("/", 1)[1] if "/" in spath else ""
+            npre = _n_stack_prefix(sub, scan_segs, has_replica=False)
+            return fsdp_spec(shp, msz, n_prefix=npre, replica_axes=(),
+                             model_axis=model_ax,
+                             prefer_dim=_prefer(sub, npre))
+        if top == "ema":
+            if leaf.ndim == 2:   # (R, n_rep)
+                return P(rep if len(rep) > 1 else rep[0], None)
+            return P()
+        return P()  # step etc.
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(state)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def train_batch_specs(batch, cfg, mesh, replicas: int):
+    """Batch dim sharded over replica axes; within-replica parallelism goes
+    to the fsdp/model axes on the batch dim when divisible, else to the
+    sequence dim (context parallelism — required when global_batch <
+    device count)."""
+    rep = replica_axes(mesh)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    fax = fsdp_axes(mesh)
+    msz = 1
+    for a in fax:
+        msz *= sizes[a]
+
+    def spec_for(leaf):
+        gb = leaf.shape[0]
+        per_rep = gb // replicas
+        if per_rep % msz == 0:
+            d0 = tuple(rep) + fax
+            return P(d0, *([None] * (leaf.ndim - 1)))
+        # context parallel: seq (dim 1) over the fsdp axes
+        ok_seq = leaf.ndim >= 2 and leaf.shape[1] % msz == 0
+        d0 = tuple(rep) if len(rep) > 1 else rep[0]
+        if ok_seq:
+            return P(d0, fax if len(fax) > 1 else fax[0],
+                     *([None] * (leaf.ndim - 2)))
+        return P(d0, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec_for, batch)
+
+
+def serve_param_specs(params, cfg, mesh, global_batch: int = 0):
+    """TP over 'model'; when batch=1 long-context serving leaves the data
+    axes idle, params shard over the full device grid instead (with
+    per-tensor fallback to 16-way where dims don't divide)."""
+    msz = model_axis_size(mesh)
+    rep = replica_axes(mesh)
+    rep_n = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a in rep:
+            rep_n *= s
+    if global_batch and global_batch % rep_n != 0:
+        full = tuple(rep) + ("model",)
+        options = [(full, rep_n * msz), ("model", msz)]
+    else:
+        options = [("model", msz)]
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    specs = [tp_spec(_path_str(p), l.shape, msz, axis_options=options)
+             for p, l in flat]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def cache_specs(cache, cfg, mesh, global_batch: int):
+    """Decode cache: batch over data axes when divisible; sequence / d_inner
+    dims over 'model' (plus the data axes for batch=1 long-context)."""
+    rep = replica_axes(mesh)
+    msz = model_axis_size(mesh)
+    rep_n = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a in rep:
+            rep_n *= s
+    batch_ok = global_batch % rep_n == 0
+    b_ax = (tuple(rep) if len(rep) > 1 else rep[0]) if batch_ok else None
+    seq_ax = "model" if batch_ok else tuple(rep) + ("model",)
+
+    def spec_for(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        # find batch dim: caches are (..., B, seq/feature, ...) with possible
+        # leading layer-stack dims (scan segments): batch dim = nd - rank+...
+        # attn k/v: (L?, B, T, Kv, hd); mla c_kv/k_rope: (L?, B, T, r)
+        # mamba h: (L?, B, mi, st); conv: (L?, B, K-1, mi); cross_k/v like k/v
+        if name in ("k", "v", "cross_k", "cross_v"):
+            base = nd - 4
+            ent = [None] * nd
+            ent[base] = b_ax
+            ent[base + 1] = seq_ax
+            return P(*ent)
+        if name in ("c_kv", "k_rope"):
+            base = nd - 3
+            ent = [None] * nd
+            ent[base] = b_ax
+            ent[base + 1] = seq_ax
+            return P(*ent)
+        if name == "h":
+            base = nd - 3
+            ent = [None] * nd
+            ent[base] = b_ax
+            if leaf.shape[base + 1] % (msz if batch_ok else rep_n * msz) == 0:
+                ent[base + 1] = seq_ax
+            return P(*ent)
+        if name == "conv":
+            base = nd - 3
+            ent = [None] * nd
+            ent[base] = b_ax
+            if leaf.shape[base + 2] % (msz if batch_ok else rep_n * msz) == 0:
+                ent[base + 2] = seq_ax
+            return P(*ent)
+        return P(*([None] * nd))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
+def serve_batch_specs(batch, cfg, mesh, global_batch: int):
+    rep = replica_axes(mesh)
+    rep_n = 1
+    for a, s in zip(mesh.axis_names, mesh.devices.shape):
+        if a in rep:
+            rep_n *= s
+    b_ax = (tuple(rep) if len(rep) > 1 else rep[0]) \
+        if global_batch % rep_n == 0 else None
+
+    def spec_for(leaf):
+        if leaf.ndim == 0:
+            return P()
+        return P(b_ax, *([None] * (leaf.ndim - 1)))
+
+    return jax.tree.map(spec_for, batch)

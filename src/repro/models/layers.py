@@ -1,0 +1,255 @@
+"""Core neural-net layers: norms, rotary, attention (GQA/MQA, sliding window),
+MLP variants.  Pure functional JAX; params are plain dict pytrees.
+
+Conventions:
+* init fns: ``init_*(key, cfg, ...) -> params`` for ONE layer (unstacked).
+* forward fns take ``(params, x, ...)`` where activations are per-replica
+  (the EDiT replica axis is added by ``vmap`` at the train-step level).
+* compute dtype is the dtype of ``x``; params are cast to it on use;
+  normalization/softmax statistics are fp32.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import grad_shard, hint
+
+
+def _normal(key, shape, scale, dtype):
+    return (scale * jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return jnp.ones((d,), dtype)
+
+
+def rms_norm(x, w, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embedding (NeoX-style half rotation)
+# ---------------------------------------------------------------------------
+
+def rope_tables(positions, dim: int, theta: float):
+    """positions: (...,) int32 -> (sin, cos) of shape (..., dim//2), fp32."""
+    half = dim // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x: (..., S, H, hd); sin/cos: (..., S, hd//2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s, c = sin[..., None, :], cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * c - x2 * s, x2 * c + x1 * s], axis=-1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA / MQA, causal, optional sliding window, KV cache decode)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg, dtype=jnp.float32):
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _normal(ks[0], (d, H * hd), d ** -0.5, dtype),
+        "wk": _normal(ks[1], (d, Kv * hd), d ** -0.5, dtype),
+        "wv": _normal(ks[2], (d, Kv * hd), d ** -0.5, dtype),
+        "wo": _normal(ks[3], (H * hd, d), (H * hd) ** -0.5, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_rmsnorm(hd, dtype)
+        p["k_norm"] = init_rmsnorm(hd, dtype)
+    return p
+
+
+def _qkv(p, x, cfg, positions):
+    B, S, _ = x.shape
+    H, Kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ grad_shard(p["wq"].astype(x.dtype))).reshape(B, S, H, hd)
+    k = (x @ grad_shard(p["wk"].astype(x.dtype))).reshape(B, S, Kv, hd)
+    v = (x @ grad_shard(p["wv"].astype(x.dtype))).reshape(B, S, Kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope_tables(positions, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg):
+    """Grouped-query attention core.  q: (B,S,H,hd) k/v: (B,T,Kv,hd),
+    mask: broadcastable to (B,1,1,S,T) boolean (True = attend)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    G = H // Kv
+    qg = q.reshape(B, S, Kv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg, k).astype(jnp.float32)
+    scores = scores * (hd ** -0.5)
+    scores = jnp.where(mask, scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgst,btkh->bskgh", w, v)
+    return out.reshape(B, S, H * hd)
+
+
+def blockwise_attn(q, k, v, cfg, *, causal: bool = True, window: int = 0,
+                   q_block: int = 512, kv_block: int = 1024):
+    """Memory-bounded attention: double scan over query/key blocks with an
+    online softmax (the same algorithm the Pallas flash kernel implements —
+    this is the XLA fallback used when lowering for non-TPU or huge S).
+
+    q: (B,S,H,hd), k/v: (B,T,Kv,hd).  Returns (B,S,H*hd).
+    """
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    G = H // Kv
+    qb = min(q_block, S)
+    kb = min(kv_block, T)
+    nq, nk = S // qb, T // kb
+    assert S % qb == 0 and T % kb == 0, (S, qb, T, kb)
+    qg = q.reshape(B, nq, qb, Kv, G, hd)
+    kg = k.reshape(B, nk, kb, Kv, hd)
+    vg = v.reshape(B, nk, kb, Kv, hd)
+    scale = hd ** -0.5
+
+    def q_step(_, qi_blk):
+        qi, qblk = qi_blk  # qblk: (B,qb,Kv,G,hd)
+        q_pos = qi * qb + jnp.arange(qb)
+
+        def kv_step(carry, kj_blk):
+            m, l, acc = carry
+            kj, kblk, vblk = kj_blk
+            k_pos = kj * kb + jnp.arange(kb)
+            s = jnp.einsum("bqkgh,btkh->bkgqt", qblk, kblk).astype(jnp.float32)
+            s = s * scale
+            msk = jnp.ones((qb, kb), bool)
+            if causal:
+                msk = msk & (k_pos[None, :] <= q_pos[:, None])
+            if window:
+                msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkh->bkgqh", p.astype(qblk.dtype), vblk)
+            acc_new = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, Kv, G, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Kv, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, Kv, G, qb, hd), qblk.dtype)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.arange(nk), jnp.moveaxis(kg, 1, 0), jnp.moveaxis(vg, 1, 0)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None].astype(acc.dtype)
+        # (B,Kv,G,qb,hd) -> (B,qb,H*hd)
+        out = jnp.moveaxis(out, 3, 1).reshape(B, qb, H * hd)
+        return None, out
+
+    _, outs = jax.lax.scan(
+        q_step, None, (jnp.arange(nq), jnp.moveaxis(qg, 1, 0)))
+    return jnp.moveaxis(outs, 0, 1).reshape(B, S, H * hd)
+
+
+def causal_mask(S: int, window: int = 0):
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = j <= i
+    if window:
+        m = m & (i - j < window)
+    return m[None, None, None]  # (1,1,1,S,T)
+
+
+BLOCKWISE_THRESHOLD = 2048
+
+
+def attn_forward(p, x, cfg, positions, window: int = 0, causal: bool = True):
+    """Full-sequence attention (train / prefill).  x: (B,S,d)."""
+    S = x.shape[1]
+    q, k, v = _qkv(p, x, cfg, positions)
+    q, k = hint(q, "qkv"), hint(k, "qkv")
+    if S >= BLOCKWISE_THRESHOLD:
+        out = blockwise_attn(q, k, v, cfg, causal=causal, window=window)
+    else:
+        if causal:
+            mask = causal_mask(S, window)
+        else:
+            mask = jnp.ones((1, 1, 1, S, S), bool)
+        out = _sdpa(q, k, v, mask, cfg)
+    return out @ grad_shard(p["wo"].astype(x.dtype))
+
+
+def init_attn_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    Kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, Kv, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, Kv, hd), dtype),
+    }
+
+
+def attn_decode(p, x, cache, pos, cfg):
+    """Single-token decode.  x: (B,1,d); cache k/v: (B,T,Kv,hd) ring buffer
+    (T = sliding window if set, else max seq); pos: scalar int32 absolute
+    position of the new token."""
+    B = x.shape[0]
+    T = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    slot = jnp.mod(pos, T)
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    k, v = hint(k, "cache"), hint(v, "cache")
+    valid = (jnp.arange(T) <= pos)[None, None, None, None, :]  # ring: all valid once full
+    out = _sdpa(q, k, v, valid, cfg)
+    return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d: int, d_ff: int, activation: str, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w1": _normal(ks[0], (d, d_ff), d ** -0.5, dtype),
+         "w2": _normal(ks[1], (d_ff, d), d_ff ** -0.5, dtype)}
+    if activation in ("swiglu", "geglu"):
+        p["w3"] = _normal(ks[2], (d, d_ff), d ** -0.5, dtype)
+    return p
+
+
+def mlp_forward(p, x, activation: str):
+    h = x @ grad_shard(p["w1"].astype(x.dtype))
+    if activation == "swiglu":
+        h = jax.nn.silu(h) * (x @ grad_shard(p["w3"].astype(x.dtype)))
+    elif activation == "geglu":
+        h = jax.nn.gelu(h) * (x @ grad_shard(p["w3"].astype(x.dtype)))
+    elif activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    elif activation == "gelu":
+        h = jax.nn.gelu(h)
+    else:
+        raise ValueError(activation)
+    return h @ grad_shard(p["w2"].astype(x.dtype))
+
+
+def mlp_param_count(d: int, d_ff: int, activation: str) -> int:
+    return (3 if activation in ("swiglu", "geglu") else 2) * d * d_ff

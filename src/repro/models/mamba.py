@@ -1,0 +1,146 @@
+"""Mamba-1 selective-SSM block [arXiv:2312.00752], as used by Falcon-Mamba
+[arXiv:2410.05355] and Jamba [arXiv:2403.19887].
+
+Training/prefill uses a chunked scan: within a chunk the linear recurrence
+h_t = a_t * h_{t-1} + b_t is evaluated with ``associative_scan`` (parallel,
+TPU-friendly); the (B, d_inner, d_state) carry crosses chunks via
+``lax.scan`` so peak memory is O(chunk * d_inner * d_state), not O(S * ...).
+Decode keeps a constant-size recurrent state + conv ring buffer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import grad_shard
+from repro.models.layers import _normal
+
+
+def dt_rank(cfg) -> int:
+    return max(cfg.d_model // 16, 1)
+
+
+def init_mamba(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    mc = cfg.mamba
+    mi = mc.d_inner(d)
+    st = mc.d_state
+    r = dt_rank(cfg)
+    ks = jax.random.split(key, 7)
+    A = jnp.tile(jnp.arange(1, st + 1, dtype=jnp.float32)[None], (mi, 1))
+    return {
+        "in_proj": _normal(ks[0], (d, 2 * mi), d ** -0.5, dtype),
+        "conv_w": _normal(ks[1], (mc.d_conv, mi), mc.d_conv ** -0.5, dtype),
+        "conv_b": jnp.zeros((mi,), dtype),
+        "x_proj": _normal(ks[2], (mi, r + 2 * st), mi ** -0.5, dtype),
+        "dt_proj": _normal(ks[3], (r, mi), r ** -0.5, dtype),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((mi,), 0.01))).astype(dtype),
+        "A_log": jnp.log(A),                       # fp32
+        "D": jnp.ones((mi,), jnp.float32),
+        "out_proj": _normal(ks[4], (mi, d), mi ** -0.5, dtype),
+    }
+
+
+def _conv1d(x, w, b):
+    """Causal depthwise conv.  x: (B,S,mi), w: (K,mi)."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for j in range(K):
+        shifted = jnp.pad(x, ((0, 0), (K - 1 - j, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + shifted * w[j]
+    return out + b
+
+
+def _ssm_inputs(p, u, cfg):
+    """u: (B,S,mi) post-conv activations -> (a, bx, C) for the recurrence."""
+    mc = cfg.mamba
+    st = mc.d_state
+    r = dt_rank(cfg)
+    proj = u @ p["x_proj"].astype(u.dtype)                       # (B,S,r+2st)
+    dt = jax.nn.softplus(
+        (proj[..., :r] @ p["dt_proj"].astype(u.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                      # (B,S,mi)
+    Bmat = proj[..., r:r + st].astype(jnp.float32)               # (B,S,st)
+    Cmat = proj[..., r + st:].astype(jnp.float32)                # (B,S,st)
+    A = -jnp.exp(p["A_log"])                                     # (mi,st)
+    a = jnp.exp(dt[..., None] * A)                               # (B,S,mi,st)
+    bx = (dt * u.astype(jnp.float32))[..., None] * Bmat[..., None, :]
+    return a, bx, Cmat
+
+
+def _scan_chunked(a, bx, h0, chunk: int):
+    """Linear recurrence h_t = a_t h_{t-1} + bx_t, chunk-parallel.
+    a/bx: (B,S,mi,st); h0: (B,mi,st).  Returns (h_seq (B,S,mi,st), h_last)."""
+    B, S, mi, st = a.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    nc = S // chunk
+    a_c = jnp.moveaxis(a.reshape(B, nc, chunk, mi, st), 1, 0)
+    b_c = jnp.moveaxis(bx.reshape(B, nc, chunk, mi, st), 1, 0)
+
+    def combine(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+
+    def chunk_step(h, ab):
+        a_k, b_k = ab                               # (B,chunk,mi,st)
+        aa, bb = jax.lax.associative_scan(combine, (a_k, b_k), axis=1)
+        h_seq = aa * h[:, None] + bb                # include carry
+        return h_seq[:, -1], h_seq
+
+    h_last, h_seq = jax.lax.scan(chunk_step, h0, (a_c, b_c))
+    h_seq = jnp.moveaxis(h_seq, 0, 1).reshape(B, S, mi, st)
+    return h_seq, h_last
+
+
+def mamba_forward(p, x, cfg, chunk: int = 256, h0=None, return_state=False,
+                  cache_dtype=jnp.bfloat16):
+    """x: (B,S,d) -> (B,S,d).  Full-sequence (train / prefill).
+    With ``return_state`` also returns the decode cache {'h', 'conv'}."""
+    mc = cfg.mamba
+    mi = mc.d_inner(cfg.d_model)
+    xz = x @ grad_shard(p["in_proj"].astype(x.dtype))
+    u_raw, z = xz[..., :mi], xz[..., mi:]
+    u = jax.nn.silu(_conv1d(u_raw, p["conv_w"].astype(x.dtype),
+                            p["conv_b"].astype(x.dtype)))
+    a, bx, Cmat = _ssm_inputs(p, u, cfg)
+    B_, S, _, _ = a.shape
+    if h0 is None:
+        h0 = jnp.zeros((B_, mi, mc.d_state), jnp.float32)
+    h_seq, h_last = _scan_chunked(a, bx, h0, chunk)
+    y = jnp.einsum("bsmt,bst->bsm", h_seq, Cmat)
+    y = (y + p["D"] * u.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ grad_shard(p["out_proj"].astype(x.dtype))
+    if return_state:
+        conv_hist = u_raw[:, -(mc.d_conv - 1):].astype(cache_dtype)
+        return out, {"h": h_last, "conv": conv_hist}
+    return out
+
+
+def init_mamba_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    mc = cfg.mamba
+    mi = mc.d_inner(cfg.d_model)
+    return {
+        "h": jnp.zeros((batch, mi, mc.d_state), jnp.float32),
+        "conv": jnp.zeros((batch, mc.d_conv - 1, mi), dtype),
+    }
+
+
+def mamba_decode(p, x, cache, cfg):
+    """Single-token decode.  x: (B,1,d)."""
+    mc = cfg.mamba
+    mi = mc.d_inner(cfg.d_model)
+    xz = x @ p["in_proj"].astype(x.dtype)
+    u, z = xz[..., :mi], xz[..., mi:]
+    # conv ring: history (B, K-1, mi) + new token
+    hist = jnp.concatenate([cache["conv"].astype(x.dtype), u], axis=1)  # (B,K,mi)
+    w = p["conv_w"].astype(x.dtype)
+    u_conv = jax.nn.silu(jnp.einsum("bkm,km->bm", hist, w) + p["conv_b"].astype(x.dtype))[:, None]
+    a, bx, Cmat = _ssm_inputs(p, u_conv, cfg)
+    h = a[:, 0] * cache["h"] + bx[:, 0]                        # (B,mi,st)
+    y = jnp.einsum("bmt,bt->bm", h, Cmat[:, 0])[:, None]
+    y = (y + p["D"] * u_conv.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"].astype(x.dtype)
+    new_cache = {"h": h, "conv": hist[:, 1:].astype(cache["conv"].dtype)}
+    return out, new_cache

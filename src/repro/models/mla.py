@@ -1,0 +1,136 @@
+"""DeepSeek-V3 Multi-head Latent Attention [arXiv:2412.19437].
+
+Queries go through a low-rank bottleneck (q_lora_rank); keys/values are
+compressed into a single latent c_kv (kv_lora_rank) plus a shared rotary
+key (qk_rope_head_dim).  The decode cache stores ONLY the latent + rope key
+— the paper's memory win — and decoding attends in latent space using the
+absorbed-projection trick (w_uk folded into q, w_uv folded into the output
+projection), so per-token decode cost is O(S · (kv_rank + rope)) per head.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import grad_shard, hint
+from repro.models.layers import _normal, apply_rope, rms_norm, rope_tables
+
+
+def init_mla(key, cfg, dtype=jnp.float32):
+    d, H = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 8)
+    return {
+        "wq_a": _normal(ks[0], (d, m.q_lora_rank), d ** -0.5, dtype),
+        "q_a_norm": jnp.ones((m.q_lora_rank,), dtype),
+        "wq_b": _normal(ks[1], (m.q_lora_rank, H * qk_head),
+                        m.q_lora_rank ** -0.5, dtype),
+        "wkv_a": _normal(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim),
+                         d ** -0.5, dtype),
+        "kv_a_norm": jnp.ones((m.kv_lora_rank,), dtype),
+        "wk_b": _normal(ks[3], (m.kv_lora_rank, H * m.qk_nope_head_dim),
+                        m.kv_lora_rank ** -0.5, dtype),
+        "wv_b": _normal(ks[4], (m.kv_lora_rank, H * m.v_head_dim),
+                        m.kv_lora_rank ** -0.5, dtype),
+        "wo": _normal(ks[5], (H * m.v_head_dim, d),
+                      (H * m.v_head_dim) ** -0.5, dtype),
+    }
+
+
+def _compress(p, x, cfg, positions):
+    """Returns (q_nope, q_rope, c_kv, k_rope)."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    q = rms_norm(x @ grad_shard(p["wq_a"].astype(x.dtype)), p["q_a_norm"], cfg.norm_eps)
+    q = (q @ grad_shard(p["wq_b"].astype(x.dtype))).reshape(B, S, H, qk_head)
+    q_nope, q_rope = q[..., :m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    kv = x @ grad_shard(p["wkv_a"].astype(x.dtype))
+    c_kv, k_rope = kv[..., :m.kv_lora_rank], kv[..., m.kv_lora_rank:]
+    c_kv = rms_norm(c_kv, p["kv_a_norm"], cfg.norm_eps)
+    sin, cos = rope_tables(positions, m.qk_rope_head_dim, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, sin, cos)
+    k_rope = apply_rope(k_rope[..., None, :], sin, cos)[..., 0, :]  # shared head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_forward(p, x, cfg, positions, window: int = 0):
+    """Training / prefill path: decompress K,V and run standard attention
+    blockwise over the sequence."""
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_kv, k_rope = _compress(p, x, cfg, positions)
+    k_nope = (c_kv @ grad_shard(p["wk_b"].astype(x.dtype))).reshape(B, S, H, m.qk_nope_head_dim)
+    v = (c_kv @ grad_shard(p["wv_b"].astype(x.dtype))).reshape(B, S, H, m.v_head_dim)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    qb = min(512, S)
+    nq = S // qb
+    assert S % qb == 0
+
+    def q_step(_, qi):
+        i, qn, qr = qi
+        q_pos = i * qb + jnp.arange(qb)
+        s = jnp.einsum("bqhc,bthc->bhqt", qn, k_nope).astype(jnp.float32)
+        s += jnp.einsum("bqhr,btr->bhqt", qr, k_rope).astype(jnp.float32)
+        s *= scale
+        k_pos = jnp.arange(S)
+        msk = k_pos[None, :] <= q_pos[:, None]
+        if window:
+            msk = msk & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(msk[None, None], s, -1e30)
+        w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+        o = jnp.einsum("bhqt,bthv->bqhv", w, v)
+        return None, o
+
+    _, outs = jax.lax.scan(
+        q_step, None,
+        (jnp.arange(nq),
+         jnp.moveaxis(q_nope.reshape(B, nq, qb, H, -1), 1, 0),
+         jnp.moveaxis(q_rope.reshape(B, nq, qb, H, -1), 1, 0)))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, H * m.v_head_dim)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def init_mla_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, cache_len, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode(p, x, cache, pos, cfg):
+    """Latent-space decode with absorbed projections.  Cache holds the
+    compressed latent only: (B, T, kv_rank) + (B, T, rope_dim)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    T = cache["c_kv"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_new, kr_new = _compress(p, x, cfg, positions)
+    slot = jnp.mod(pos, T)
+    c_kv = jax.lax.dynamic_update_slice(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    c_kv, k_rope = hint(c_kv, "cache"), hint(k_rope, "cache")
+    # absorb wk_b into the query: q_lat (B,1,H,kv_rank)
+    wk_b = p["wk_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhc,khc->bqhk", q_nope, wk_b)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhk,btk->bhqt", q_lat, c_kv).astype(jnp.float32)
+    s += jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope).astype(jnp.float32)
+    s *= scale
+    valid = (jnp.arange(T) <= pos)[None, None, None]
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    # attend in latent space, then decompress through wv_b (absorbed output)
+    lat = jnp.einsum("bhqt,btk->bqhk", w, c_kv)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", lat, wv_b)
+    out = out.reshape(B, 1, H * m.v_head_dim)
+    return out @ p["wo"].astype(x.dtype), {"c_kv": c_kv, "k_rope": k_rope}

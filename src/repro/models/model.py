@@ -1,0 +1,258 @@
+"""Top-level model API.
+
+``build_model(cfg, ...)`` returns a :class:`Model` with pure functions:
+
+* ``init(key) -> params``
+* ``loss(params, batch) -> (loss, metrics)``      (train forward + CE)
+* ``prefill(params, batch, cache_len) -> (logits_last, cache)``
+* ``decode_step(params, cache, tokens, pos) -> (logits, cache)``
+* ``init_cache(batch, cache_len) -> cache``
+* ``input_specs(shape_cfg) -> ShapeDtypeStruct pytrees`` for the dry-run
+
+Batch dict keys: ``tokens`` (B,S) int32 always; ``frames`` (B,F,d) for
+encdec (audio frontend stub); ``prefix_emb`` (B,P,d) for vlm (vision stub).
+For vlm the text length is ``seq_len - n_prefix_tokens`` so the total
+sequence length equals the assigned input shape exactly.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import grad_shard, hint
+from repro.models import layers as L
+from repro.models import transformer as T
+
+LOSS_CHUNK = 512
+
+
+def _embed(params, tokens, dtype):
+    return params["embed"].astype(dtype)[tokens]
+
+
+def _logits_head(params, h):
+    w = params.get("lm_head")
+    if w is None:
+        w = params["embed"].T
+    return h @ grad_shard(w.astype(h.dtype))
+
+
+def chunked_ce_loss(params, h, labels, mask, vocab: int):
+    """Cross-entropy over the vocab computed in sequence chunks so full
+    (B,S,V) logits are never materialized.  h: (B,S,d)."""
+    B, S, d = h.shape
+    chunk = min(LOSS_CHUNK, S)
+    while S % chunk:
+        chunk //= 2
+    nc = S // chunk
+    hc = jnp.moveaxis(h.reshape(B, nc, chunk, d), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, nc, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, nc, chunk), 1, 0)
+
+    def body(acc, xs):
+        hh, ll, mm = xs
+        logits = hint(_logits_head(params, hh), "logits").astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+        nll = (lse - gold) * mm
+        return (acc[0] + nll.sum(), acc[1] + mm.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(body, (jnp.zeros(()), jnp.zeros(())),
+                                 (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+@dataclass
+class Model:
+    cfg: Any
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode_step: Callable
+    init_cache: Callable
+    input_specs: Callable
+
+
+def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
+                cache_dtype=jnp.bfloat16, window: int = 0,
+                remat: bool = True, remat_policy=None) -> Model:
+    """``window`` > 0 enables the sliding-window attention variant
+    (used for long_500k decode on full-attention archs)."""
+    V, d = cfg.vocab_size, cfg.d_model
+    is_encdec = cfg.family == "encdec"
+    is_vlm = cfg.family == "vlm"
+
+    # -- init --------------------------------------------------------------
+    def init(key):
+        ks = jax.random.split(key, 6)
+        params: Dict[str, Any] = {
+            "embed": L._normal(ks[0], (V, d), d ** -0.5, param_dtype),
+            "blocks": T.init_stack(ks[1], cfg, param_dtype),
+            "final_norm": L.init_rmsnorm(d, param_dtype),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = L._normal(ks[2], (d, V), d ** -0.5, param_dtype)
+        if is_encdec:
+            enc_cfg = cfg
+            prog = T.LayerProgram("attn", "dense", cfg.d_ff)
+            enc_keys = jax.random.split(ks[3], cfg.n_encoder_layers)
+            params["encoder"] = {
+                "layers": jax.vmap(
+                    lambda k: T.init_layer(k, prog, enc_cfg, param_dtype))(enc_keys),
+                "norm": L.init_rmsnorm(d, param_dtype),
+            }
+        if cfg.mtp_depth:
+            params["mtp"] = {
+                "proj": L._normal(ks[4], (2 * d, d), (2 * d) ** -0.5, param_dtype),
+                "layer": T.init_layer(ks[5], T.plan_segments(cfg)[-1].programs[0],
+                                      cfg, param_dtype),
+                "norm": L.init_rmsnorm(d, param_dtype),
+            }
+        return params
+
+    # -- encoder (encdec) ----------------------------------------------------
+    def encode(params, frames):
+        x = frames.astype(compute_dtype)
+        pos = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+        prog = T.LayerProgram("attn", "dense", cfg.d_ff)
+
+        def body(h, lp):
+            h, _ = T.layer_forward(lp, prog, h, cfg, pos, train=False)
+            return h, None
+
+        # encoder is bidirectional: override causal by calling attn directly
+        def body_bidir(h, lp):
+            hh = L.rms_norm(h, lp["norm1"], cfg.norm_eps)
+            mix = L.attn_forward(lp["mixer"], hh, cfg, pos, causal=False)
+            h = h + mix
+            hh = L.rms_norm(h, lp["norm2"], cfg.norm_eps)
+            h = h + L.mlp_forward(lp["ffn"], hh, cfg.activation)
+            return h, None
+
+        x, _ = jax.lax.scan(body_bidir, x, params["encoder"]["layers"])
+        return L.rms_norm(x, params["encoder"]["norm"], cfg.norm_eps)
+
+    # -- assemble the decoder input sequence --------------------------------
+    def _decoder_input(params, batch):
+        tokens = batch["tokens"]
+        x = _embed(params, tokens, compute_dtype)
+        loss_mask = jnp.ones(tokens.shape, jnp.float32)
+        if is_vlm:
+            x = jnp.concatenate([batch["prefix_emb"].astype(compute_dtype), x],
+                                axis=1)
+            loss_mask = jnp.concatenate(
+                [jnp.zeros(batch["prefix_emb"].shape[:2], jnp.float32), loss_mask],
+                axis=1)
+        return x, loss_mask
+
+    # -- train loss ----------------------------------------------------------
+    def loss_fn(params, batch):
+        x, loss_mask = _decoder_input(params, batch)
+        x = hint(x, "act")
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        enc_out = encode(params, batch["frames"]) if is_encdec else None
+        h, aux = T.stack_forward(params["blocks"], x, cfg, pos, window=window,
+                                 enc_out=enc_out, train=True, remat=remat,
+                                 remat_policy=remat_policy)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        # next-token labels over the full (possibly prefix-extended) sequence
+        tokens = batch["tokens"]
+        if is_vlm:
+            P = batch["prefix_emb"].shape[1]
+            full_tokens = jnp.concatenate(
+                [jnp.zeros((B, P), tokens.dtype), tokens], axis=1)
+        else:
+            full_tokens = tokens
+        labels = jnp.concatenate(
+            [full_tokens[:, 1:], jnp.zeros((B, 1), tokens.dtype)], axis=1)
+        mask = loss_mask.at[:, -1].set(0.0)
+        if is_vlm:
+            # predict first text token from last prefix position
+            Pn = batch["prefix_emb"].shape[1]
+            mask = mask.at[:, Pn - 1].set(1.0)
+        ce = chunked_ce_loss(params, h, labels, mask, V)
+        metrics = {"ce": ce, "aux": aux}
+        total = ce + aux
+        if cfg.mtp_depth and "mtp" in params:
+            mtp = params["mtp"]
+            emb_next = _embed(params, labels, compute_dtype)
+            hcat = jnp.concatenate(
+                [L.rms_norm(h, mtp["norm"], cfg.norm_eps), emb_next], axis=-1)
+            h2 = hcat @ mtp["proj"].astype(compute_dtype)
+            prog = T.plan_segments(cfg)[-1].programs[0]
+            h2, _ = T.layer_forward(mtp["layer"], prog, h2, cfg, pos,
+                                    train=False)
+            labels2 = jnp.concatenate(
+                [full_tokens[:, 2:], jnp.zeros((B, 2), tokens.dtype)], axis=1)
+            mask2 = mask.at[:, -2].set(0.0)
+            mtp_ce = chunked_ce_loss(params, h2, labels2, mask2, V)
+            metrics["mtp_ce"] = mtp_ce
+            total = total + 0.3 * mtp_ce
+        metrics["loss"] = total
+        return total, metrics
+
+    # -- caches ---------------------------------------------------------------
+    def init_cache(batch_size: int, cache_len: int, enc_len: int = 0):
+        eff = min(cache_len, window) if window else cache_len
+        return T.init_stack_cache(cfg, batch_size, eff, enc_len, cache_dtype)
+
+    # -- prefill ---------------------------------------------------------------
+    def prefill(params, batch, cache_len: Optional[int] = None):
+        x, _ = _decoder_input(params, batch)
+        x = hint(x, "act")
+        B, S = x.shape[:2]
+        pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+        enc_out = encode(params, batch["frames"]) if is_encdec else None
+        cache = init_cache(B, cache_len or S,
+                           enc_out.shape[1] if is_encdec else 0)
+        h, cache = T.stack_prefill(params["blocks"], cache, x, cfg, pos,
+                                   window=window, enc_out=enc_out)
+        h = L.rms_norm(h[:, -1:], params["final_norm"], cfg.norm_eps)
+        logits = hint(_logits_head(params, h), "logits")
+        return logits, cache
+
+    # -- decode ---------------------------------------------------------------
+    def decode_step(params, cache, tokens, pos):
+        """tokens: (B,1) int32; pos: scalar int32 absolute position."""
+        x = _embed(params, tokens, compute_dtype)
+        x = hint(x, "act")
+        h, cache = T.stack_decode(params["blocks"], cache, x, cfg, pos)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = hint(_logits_head(params, h), "logits")
+        return logits, cache
+
+    # -- dry-run input specs ----------------------------------------------------
+    def input_specs(shape_cfg) -> Dict[str, Any]:
+        S, GB = shape_cfg.seq_len, shape_cfg.global_batch
+        sds = jax.ShapeDtypeStruct
+        if shape_cfg.kind == "train":
+            text = S - cfg.n_prefix_tokens if is_vlm else S
+            b = {"tokens": sds((GB, text), jnp.int32)}
+            if is_vlm:
+                b["prefix_emb"] = sds((GB, cfg.n_prefix_tokens, d), compute_dtype)
+            if is_encdec:
+                b["frames"] = sds((GB, max(S // 4, 8), d), compute_dtype)
+            return {"batch": b}
+        if shape_cfg.kind == "prefill":
+            text = S - cfg.n_prefix_tokens if is_vlm else S
+            b = {"tokens": sds((GB, text), jnp.int32)}
+            if is_vlm:
+                b["prefix_emb"] = sds((GB, cfg.n_prefix_tokens, d), compute_dtype)
+            if is_encdec:
+                b["frames"] = sds((GB, max(S // 4, 8), d), compute_dtype)
+            return {"batch": b}
+        # decode: one token with a cache of length S
+        enc_len = min(max(S // 4, 8), 8192) if is_encdec else 0
+        cache = jax.eval_shape(lambda: init_cache(GB, S, enc_len))
+        return {"cache": cache,
+                "tokens": sds((GB, 1), jnp.int32),
+                "pos": sds((), jnp.int32)}
+
+    return Model(cfg=cfg, init=init, loss=loss_fn, prefill=prefill,
+                 decode_step=decode_step, init_cache=init_cache,
+                 input_specs=input_specs)

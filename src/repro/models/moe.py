@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer: top-k router, capacity-based dispatch/combine,
+optional always-on shared experts (DeepSeek style), load-balance aux loss.
+
+Two dispatch strategies:
+
+* **expert-sharded** (classic): scatter tokens into an (E, C, d) buffer whose
+  expert dim is sharded — GSPMD lowers the cross-shard scatter by
+  broadcasting the token slab (measured: the dominant collective for MoE
+  training, EXPERIMENTS.md §Perf pair B).
+* **locality-preserving** (beyond-paper, ``moe_token_shards_axes`` on the
+  sharding policy): tokens are reshaped to (n_shards, T/n, d) along their
+  OWN sharding and the whole dispatch/compute/combine is ``vmap``-ed over
+  the shard dim, so every scatter/gather is provably local; only the expert
+  weights move — and those ride the per-layer FSDP all-gather that training
+  pays anyway.  Per-shard capacity also matches the paper's per-worker
+  batch framing.
+
+Compute FLOPs scale with *active* experts only (top-k) in both paths —
+crucial for an honest MoE roofline.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import current_policy, grad_shard, hint
+from repro.models.layers import _normal, mlp_forward
+
+
+def init_moe(key, cfg, dtype=jnp.float32):
+    d = cfg.d_model
+    m = cfg.moe
+    d_ff = m.d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    glu = cfg.activation in ("swiglu", "geglu")
+    p = {
+        "router": _normal(ks[0], (d, m.n_experts), d ** -0.5, jnp.float32),
+        "experts": {
+            "w1": _normal(ks[1], (m.n_experts, d, d_ff), d ** -0.5, dtype),
+            "w2": _normal(ks[2], (m.n_experts, d_ff, d), d_ff ** -0.5, dtype),
+        },
+    }
+    if glu:
+        p["experts"]["w3"] = _normal(ks[3], (m.n_experts, d, d_ff), d ** -0.5, dtype)
+    if m.n_shared:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(ks[4], d, m.n_shared * d_ff, cfg.activation, dtype)
+    return p
+
+
+def _capacity(n_tokens: int, cfg, train: bool) -> int:
+    m = cfg.moe
+    if not train:
+        # inference: exact (dropless) for small token counts (decode steps),
+        # 4x headroom for large prefills (drops only under extreme skew)
+        if n_tokens * m.top_k <= 4096:
+            return n_tokens
+        c = int(math.ceil(n_tokens * m.top_k / m.n_experts * 4.0))
+    else:
+        c = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8
+
+
+def _moe_tokens(p, xt, cfg, C: int, train: bool):
+    """Dispatch/compute/combine for one flat token group xt: (T, d).
+    Returns (out (T, d), aux scalar).  vmap-able over a leading shard dim."""
+    m = cfg.moe
+    T, d = xt.shape
+
+    logits = (xt.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, expert_idx = jax.lax.top_k(probs, m.top_k)                     # (T,k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(expert_idx[:, 0], m.n_experts), axis=0)
+    density_proxy = jnp.mean(probs, axis=0)
+    aux = m.n_experts * jnp.sum(density * density_proxy) * m.aux_loss_coef
+
+    # position of each (token, k) slot within its expert
+    onehot = jax.nn.one_hot(expert_idx, m.n_experts, dtype=jnp.int32)    # (T,k,E)
+    flat = onehot.reshape(T * m.top_k, m.n_experts)
+    pos = jnp.cumsum(flat, axis=0) - flat                                # (T*k,E)
+    pos_in_e = (pos * flat).sum(-1).reshape(T, m.top_k)                  # (T,k)
+    keep = pos_in_e < C
+    gate = gate * keep
+
+    # dispatch: (E, C, d)
+    buf = jnp.zeros((m.n_experts, C, d), xt.dtype)
+    e_flat = expert_idx.reshape(-1)
+    pos_flat = jnp.where(keep, pos_in_e, C - 1).reshape(-1)
+    x_rep = jnp.repeat(xt[:, None, :], m.top_k, axis=1).reshape(-1, d)
+    x_rep = x_rep * keep.reshape(-1, 1)
+    buf = buf.at[e_flat, pos_flat].add(x_rep, mode="drop")
+    buf = hint(buf, "moe_buf")
+
+    # expert computation (E,C,d) -> (E,C,d)
+    w1 = grad_shard(p["experts"]["w1"].astype(xt.dtype))
+    w2 = grad_shard(p["experts"]["w2"].astype(xt.dtype))
+    h = jnp.einsum("ecd,edf->ecf", buf, w1)
+    if cfg.activation in ("swiglu", "geglu"):
+        w3 = grad_shard(p["experts"]["w3"].astype(xt.dtype))
+        act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
+        h = act(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
+    elif cfg.activation == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        h = jax.nn.gelu(h)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, w2)
+    out_buf = hint(out_buf, "moe_buf")
+
+    # combine
+    gathered = out_buf[e_flat, pos_flat].reshape(T, m.top_k, d)
+    out = jnp.sum(gathered * gate[..., None].astype(xt.dtype), axis=1)
+    return out, aux.astype(jnp.float32)
+
+
+def _token_shard_count(T: int) -> int:
+    """Shard count for the locality-preserving path (0 = classic path)."""
+    pol = current_policy()
+    axes = getattr(pol, "moe_token_shards_axes", ())
+    if not axes:
+        return 0
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return 0
+    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    n = 1
+    for a in axes:
+        n *= sizes.get(a, 1)
+    return n if (n > 1 and T % n == 0 and T // n >= 8) else 0
+
+
+def moe_forward(p, x, cfg, train: bool = True) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,d) -> (out, aux_loss)."""
+    B, S, d = x.shape
+    T = B * S
+    xt = x.reshape(T, d)
+    n = _token_shard_count(T)
+    if n:
+        C = _capacity(T // n, cfg, train)
+        xs = hint(xt.reshape(n, T // n, d), "moe_tokens")
+        out, aux = jax.vmap(lambda xg: _moe_tokens(p, xg, cfg, C, train))(xs)
+        out = hint(out, "moe_tokens").reshape(T, d)
+        aux = jnp.mean(aux)
+    else:
+        C = _capacity(T, cfg, train)
+        out, aux = _moe_tokens(p, xt, cfg, C, train)
+    if cfg.moe.n_shared:
+        out = out + mlp_forward(p["shared"], xt, cfg.activation)
+    return out.reshape(B, S, d), aux

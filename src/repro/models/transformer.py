@@ -1,0 +1,366 @@
+"""Decoder-stack assembly for all architecture families.
+
+A model is a sequence of **segments**; each segment is either
+``unroll`` (heterogeneous few layers, plain python loop) or ``scan``
+(a repeating pattern of ``programs`` whose params are stacked over the
+repeat dim and driven by ``lax.scan``).  This keeps HLO size O(pattern)
+instead of O(n_layers) — essential for 61-96 layer dry-run compiles —
+while supporting heterogeneous stacks:
+
+* dense / qwen / granite / nemotron / olmoe:  scan x L of [1 program]
+* deepseek-v3: unroll x 3 dense-FFN MLA layers, then scan x 58 of [MLA+MoE]
+* jamba:       scan x 4 of [8 programs] (mamba/attn 7:1, dense/MoE alternating)
+* falcon-mamba: scan x 64 of [mamba]
+* seamless (decoder): scan x 12 of [attn+cross+dense]; encoder built separately
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import hint
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import mla as MLA
+from repro.models import moe as MOE
+
+
+@dataclass(frozen=True)
+class LayerProgram:
+    mixer: str            # 'attn' | 'mamba' | 'mla'
+    ffn: str              # 'dense' | 'moe'
+    d_ff: int = 0         # dense ffn width (0 -> cfg.d_ff)
+    cross: bool = False   # encoder-decoder cross attention
+
+
+@dataclass(frozen=True)
+class Segment:
+    kind: str                      # 'scan' | 'unroll'
+    repeat: int
+    programs: Tuple[LayerProgram, ...]
+
+
+def plan_segments(cfg) -> Tuple[Segment, ...]:
+    segs: List[Segment] = []
+    mixer_of = lambda i: ("mla" if cfg.mla is not None else
+                          ("attn" if cfg.is_attn_layer(i) else "mamba"))
+    if cfg.family == "encdec":
+        prog = LayerProgram("attn", "dense", cfg.d_ff, cross=True)
+        return (Segment("scan", cfg.n_layers, (prog,)),)
+    k = cfg.dense_d_ff_first_k
+    if k:
+        progs = tuple(LayerProgram(mixer_of(i), "dense", cfg.dense_d_ff)
+                      for i in range(k))
+        segs.append(Segment("unroll", 1, progs))
+    rest = cfg.n_layers - k
+    if cfg.family == "hybrid" and cfg.attn_layer_period:
+        P = cfg.attn_layer_period
+        assert rest % P == 0
+        progs = tuple(
+            LayerProgram(mixer_of(i), "moe" if cfg.is_moe_layer(i) else "dense",
+                         cfg.d_ff)
+            for i in range(P))
+        segs.append(Segment("scan", rest // P, progs))
+    else:
+        # layers k..L-1 must share one program for a single scan
+        progs = {(mixer_of(i), cfg.is_moe_layer(i)) for i in range(k, cfg.n_layers)}
+        assert len(progs) == 1, f"non-uniform suffix: {progs}"
+        mix, is_moe = progs.pop()
+        ffn = "moe" if is_moe else ("dense" if cfg.d_ff else "none")
+        segs.append(Segment("scan", rest, (LayerProgram(mix, ffn, cfg.d_ff),)))
+    return tuple(segs)
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, prog: LayerProgram, cfg, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_rmsnorm(cfg.d_model, dtype),
+                         "norm2": L.init_rmsnorm(cfg.d_model, dtype)}
+    if prog.mixer == "attn":
+        p["mixer"] = L.init_attention(ks[0], cfg, dtype)
+    elif prog.mixer == "mla":
+        p["mixer"] = MLA.init_mla(ks[0], cfg, dtype)
+    else:
+        p["mixer"] = M.init_mamba(ks[0], cfg, dtype)
+    if prog.cross:
+        p["norm_cross"] = L.init_rmsnorm(cfg.d_model, dtype)
+        p["cross"] = L.init_attention(ks[2], cfg, dtype)
+    if prog.ffn == "moe":
+        p["ffn"] = MOE.init_moe(ks[1], cfg, dtype)
+    elif prog.ffn == "dense":
+        p["ffn"] = L.init_mlp(ks[1], cfg.d_model, prog.d_ff or cfg.d_ff,
+                              cfg.activation, dtype)
+    else:
+        del p["norm2"]
+    return p
+
+
+def init_layer_cache(prog: LayerProgram, cfg, batch, cache_len, enc_len=0,
+                     dtype=jnp.bfloat16):
+    c: Dict[str, Any] = {}
+    if prog.mixer == "attn":
+        c["self"] = L.init_attn_cache(cfg, batch, cache_len, dtype)
+    elif prog.mixer == "mla":
+        c["self"] = MLA.init_mla_cache(cfg, batch, cache_len, dtype)
+    else:
+        c["self"] = M.init_mamba_cache(cfg, batch, dtype)
+    if prog.cross:
+        c["cross_k"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+        c["cross_v"] = jnp.zeros((batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dtype)
+    return c
+
+
+def _cross_attn(p, x, k, v, cfg):
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.head_dim
+    q = (x @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
+    mask = jnp.ones((1, 1, 1, S, k.shape[1]), bool)
+    out = L._sdpa(q, k.astype(x.dtype), v.astype(x.dtype), mask, cfg)
+    return out @ p["wo"].astype(x.dtype)
+
+
+def _cross_kv(p, enc_out, cfg):
+    B, F, _ = enc_out.shape
+    Kv, hd = cfg.n_kv_heads, cfg.head_dim
+    k = (enc_out @ p["wk"].astype(enc_out.dtype)).reshape(B, F, Kv, hd)
+    v = (enc_out @ p["wv"].astype(enc_out.dtype)).reshape(B, F, Kv, hd)
+    return k, v
+
+
+def layer_forward(p, prog: LayerProgram, x, cfg, positions, *, window=0,
+                  enc_out=None, train=True):
+    """Full-sequence layer.  Returns (x, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if prog.mixer == "attn":
+        mix = L.attn_forward(p["mixer"], h, cfg, positions, window=window)
+    elif prog.mixer == "mla":
+        mix = MLA.mla_forward(p["mixer"], h, cfg, positions, window=window)
+    else:
+        mix = M.mamba_forward(p["mixer"], h, cfg)
+    x = x + hint(mix, "act")
+    if prog.cross:
+        hc = L.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        k, v = _cross_kv(p["cross"], enc_out, cfg)
+        x = x + _cross_attn(p["cross"], hc, k, v, cfg)
+    if prog.ffn != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if prog.ffn == "moe":
+            f, a = MOE.moe_forward(p["ffn"], h, cfg, train=train)
+            aux = aux + a
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + hint(f, "act")
+    x = hint(x, "act")
+    return x, aux
+
+
+def _fill_cache(cache_arr, vals, S: int):
+    """Write the last min(S,Tc) entries of ``vals`` (B,S,...) into the ring
+    cache (B,Tc,...), at ring slots (abs position) % Tc."""
+    Tc = cache_arr.shape[1]
+    tail = vals[:, -Tc:].astype(cache_arr.dtype)
+    if S >= Tc:
+        return jnp.roll(tail, S % Tc, axis=1)
+    return jax.lax.dynamic_update_slice(
+        cache_arr, tail, (0, 0) + (0,) * (cache_arr.ndim - 2))
+
+
+def layer_prefill(p, prog, x, cfg, positions, cache, *, window=0, enc_out=None):
+    """Prefill: full-sequence forward that also fills the decode cache."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    S = h.shape[1]
+    if prog.mixer == "attn":
+        q, k, v = L._qkv(p["mixer"], h, cfg, positions)
+        if S >= L.BLOCKWISE_THRESHOLD:
+            out = L.blockwise_attn(q, k, v, cfg, causal=True, window=window)
+        else:
+            out = L._sdpa(q, k, v, L.causal_mask(S, window), cfg)
+        mix = out @ p["mixer"]["wo"].astype(x.dtype)
+        new_self = {"k": _fill_cache(cache["self"]["k"], k, S),
+                    "v": _fill_cache(cache["self"]["v"], v, S)}
+    elif prog.mixer == "mla":
+        mix = MLA.mla_forward(p["mixer"], h, cfg, positions, window=window)
+        # recompute latent for the cache (cheap: two matmuls)
+        _, _, c_kv, k_rope = MLA._compress(p["mixer"], h, cfg, positions)
+        new_self = {"c_kv": _fill_cache(cache["self"]["c_kv"], c_kv, S),
+                    "k_rope": _fill_cache(cache["self"]["k_rope"], k_rope, S)}
+    else:
+        mix, st = M.mamba_forward(p["mixer"], h, cfg, return_state=True,
+                                  cache_dtype=cache["self"]["conv"].dtype)
+        new_self = st
+    x = x + hint(mix, "act")
+    new_cache = {"self": new_self}
+    if prog.cross:
+        hc = L.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        k, v = _cross_kv(p["cross"], enc_out, cfg)
+        x = x + _cross_attn(p["cross"], hc, k, v, cfg)
+        kd = cache["cross_k"].dtype
+        new_cache["cross_k"] = k.astype(kd)
+        new_cache["cross_v"] = v.astype(kd)
+    if prog.ffn != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if prog.ffn == "moe":
+            f, _ = MOE.moe_forward(p["ffn"], h, cfg, train=False)
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + hint(f, "act")
+    return hint(x, "act"), new_cache
+
+
+def layer_decode(p, prog, x, cfg, cache, pos):
+    """One-token decode.  Returns (x, new_cache)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if prog.mixer == "attn":
+        mix, new_self = L.attn_decode(p["mixer"], h, cache["self"], pos, cfg)
+    elif prog.mixer == "mla":
+        mix, new_self = MLA.mla_decode(p["mixer"], h, cache["self"], pos, cfg)
+    else:
+        mix, new_self = M.mamba_decode(p["mixer"], h, cache["self"], cfg)
+    x = x + mix
+    new_cache = dict(cache)
+    new_cache["self"] = new_self
+    if prog.cross:
+        hc = L.rms_norm(x, p["norm_cross"], cfg.norm_eps)
+        x = x + _cross_attn(p["cross"], hc, cache["cross_k"], cache["cross_v"], cfg)
+    if prog.ffn != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if prog.ffn == "moe":
+            f, _ = MOE.moe_forward(p["ffn"], h, cfg, train=False)
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + f
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack init / apply
+# ---------------------------------------------------------------------------
+
+def init_stack(key, cfg, dtype):
+    """Returns a list of segment params."""
+    segs = plan_segments(cfg)
+    out = []
+    for si, seg in enumerate(segs):
+        kseg = jax.random.fold_in(key, si)
+        if seg.kind == "unroll":
+            out.append([init_layer(jax.random.fold_in(kseg, i), prog, cfg, dtype)
+                        for i, prog in enumerate(seg.programs)])
+        else:
+            pos_params = []
+            for pi, prog in enumerate(seg.programs):
+                ks = jax.random.split(jax.random.fold_in(kseg, pi), seg.repeat)
+                stacked = jax.vmap(
+                    lambda k: init_layer(k, prog, cfg, dtype))(ks)
+                pos_params.append(stacked)
+            out.append(pos_params)
+    return out
+
+
+def init_stack_cache(cfg, batch, cache_len, enc_len=0, dtype=jnp.bfloat16):
+    segs = plan_segments(cfg)
+    out = []
+    for seg in segs:
+        if seg.kind == "unroll":
+            out.append([init_layer_cache(prog, cfg, batch, cache_len, enc_len, dtype)
+                        for prog in seg.programs])
+        else:
+            pos_caches = []
+            for prog in seg.programs:
+                one = init_layer_cache(prog, cfg, batch, cache_len, enc_len, dtype)
+                pos_caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (seg.repeat,) + a.shape), one))
+            out.append(pos_caches)
+    return out
+
+
+def stack_forward(stack_params, x, cfg, positions, *, window=0, enc_out=None,
+                  train=True, remat=True, remat_policy=None):
+    """Full-sequence forward through all segments.  Returns (x, aux_total)."""
+    segs = plan_segments(cfg)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def make_layer_fn(prog):
+        # statics (prog/cfg/window/train) live in the closure; arrays are
+        # explicit args so jax.checkpoint differentiates them correctly.
+        def one(lp, h, positions_, enc_out_):
+            return layer_forward(lp, prog, h, cfg, positions_, window=window,
+                                 enc_out=enc_out_, train=train)
+        if remat and train:
+            kw = {"policy": remat_policy} if remat_policy is not None else {}
+            one = jax.checkpoint(one, prevent_cse=False, **kw)
+        return one
+
+    for seg, seg_p in zip(segs, stack_params):
+        layer_fns = [make_layer_fn(prog) for prog in seg.programs]
+        if seg.kind == "unroll":
+            for fn, lp in zip(layer_fns, seg_p):
+                x, aux = fn(lp, x, positions, enc_out)
+                aux_total = aux_total + aux
+        else:
+            def body(carry, rep_params, _fns=layer_fns):
+                h, aux_acc = carry
+                for fn, lp in zip(_fns, rep_params):
+                    h, aux = fn(lp, h, positions, enc_out)
+                    aux_acc = aux_acc + aux
+                return (h, aux_acc), None
+
+            (x, aux_total), _ = jax.lax.scan(body, (x, aux_total), seg_p)
+    return x, aux_total
+
+
+def stack_prefill(stack_params, cache, x, cfg, positions, *, window=0,
+                  enc_out=None):
+    segs = plan_segments(cfg)
+    new_cache = []
+    for seg, seg_p, seg_c in zip(segs, stack_params, cache):
+        if seg.kind == "unroll":
+            ncs = []
+            for prog, lp, lc in zip(seg.programs, seg_p, seg_c):
+                x, nc = layer_prefill(lp, prog, x, cfg, positions, lc,
+                                      window=window, enc_out=enc_out)
+                ncs.append(nc)
+            new_cache.append(ncs)
+        else:
+            def body(h, rep, _seg=seg):
+                rep_params, rep_cache = rep
+                ncs = []
+                for prog, lp, lc in zip(_seg.programs, rep_params, rep_cache):
+                    h, nc = layer_prefill(lp, prog, h, cfg, positions, lc,
+                                          window=window, enc_out=enc_out)
+                    ncs.append(nc)
+                return h, ncs
+
+            x, nc_stacked = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_cache.append(nc_stacked)
+    return x, new_cache
+
+
+def stack_decode(stack_params, cache, x, cfg, pos):
+    segs = plan_segments(cfg)
+    new_cache = []
+    for seg, seg_p, seg_c in zip(segs, stack_params, cache):
+        if seg.kind == "unroll":
+            ncs = []
+            for prog, lp, lc in zip(seg.programs, seg_p, seg_c):
+                x, nc = layer_decode(lp, prog, x, cfg, lc, pos)
+                ncs.append(nc)
+            new_cache.append(ncs)
+        else:
+            def body(h, rep, _seg=seg):
+                rep_params, rep_cache = rep
+                ncs = []
+                for prog, lp, lc in zip(_seg.programs, rep_params, rep_cache):
+                    h, nc = layer_decode(lp, prog, h, cfg, lc, pos)
+                    ncs.append(nc)
+                return h, ncs
+
+            x, nc_stacked = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_cache.append(nc_stacked)
+    return x, new_cache

@@ -1,0 +1,2 @@
+from repro.optim.adamw import AdamW, AdamWState, SGDM
+from repro.optim.schedules import constant, cosine_with_warmup

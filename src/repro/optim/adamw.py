@@ -1,0 +1,84 @@
+"""AdamW inner optimizer (functional; optax is not available offline).
+
+Works on arbitrary pytrees; the EDiT replica axis is just a leading dim of
+every leaf, so the same code serves both replicated local updates and plain
+single-copy training.  Moments are fp32 regardless of param dtype.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    mu: Any
+    nu: Any
+    count: jnp.ndarray
+
+
+@dataclass(frozen=True)
+class AdamW:
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(jax.tree.map(z, params), jax.tree.map(z, params),
+                          jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state: AdamWState, params, lr):
+        count = state.count + 1
+        b1, b2 = self.b1, self.b2
+        c = count.astype(jnp.float32)
+        bc1 = 1.0 - b1 ** c
+        bc2 = 1.0 - b2 ** c
+
+        def upd(g, m, v, p):
+            g = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            step = mhat / (jnp.sqrt(vhat) + self.eps)
+            step = step + self.weight_decay * p.astype(jnp.float32)
+            return m, v, (p.astype(jnp.float32) - lr * step).astype(p.dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+        mu = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        nu = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(mu, nu, count)
+
+
+@dataclass(frozen=True)
+class SGDM:
+    """SGD with (optionally Nesterov) momentum — used as the Theorem-1 inner
+    optimizer and as a baseline."""
+    momentum: float = 0.0
+    nesterov: bool = False
+
+    def init(self, params):
+        return AdamWState(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+            None, jnp.zeros((), jnp.int32))
+
+    def update(self, grads, state, params, lr):
+        mu = self.momentum
+
+        def upd(g, m, p):
+            g = g.astype(jnp.float32)
+            m = mu * m + g
+            d = g + mu * m if self.nesterov else m
+            if mu == 0.0:
+                d = g
+            return m, (p.astype(jnp.float32) - lr * d).astype(p.dtype)
+
+        out = jax.tree.map(upd, grads, state.mu, params)
+        m = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_p = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_p, AdamWState(m, None, state.count + 1)

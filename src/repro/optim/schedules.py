@@ -1,0 +1,21 @@
+"""LR schedules (cosine with linear warmup, constant)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(base_lr: float, warmup_steps: int, total_steps: int,
+                       min_ratio: float = 0.1):
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = (step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1)
+        prog = jnp.clip(prog, 0.0, 1.0)
+        cos = base_lr * (min_ratio + (1 - min_ratio) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup_steps, warm, cos)
+    return sched
+
+
+def constant(base_lr: float):
+    return lambda step: jnp.full((), base_lr, jnp.float32)

@@ -1,0 +1,69 @@
+"""Minimal batched serving engine: prefill + greedy/temperature decode.
+
+Serving uses consolidated parameters (post-sync replica 0 of an EDiT train
+state, or a plain param tree).  The decode loop is a jitted step driven from
+python; the dry-run lowers a single ``serve_step`` per the brief.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+
+
+@dataclass
+class ServeConfig:
+    max_new_tokens: int = 32
+    temperature: float = 0.0      # 0 = greedy
+    cache_len: int = 0            # 0 -> prompt_len + max_new_tokens
+    seed: int = 0
+
+
+class Engine:
+    def __init__(self, model: Model, params, scfg: ServeConfig = ServeConfig()):
+        self.model = model
+        self.params = params
+        self.scfg = scfg
+        self._decode = jax.jit(model.decode_step)
+
+    def generate(self, batch: Dict[str, Any]) -> np.ndarray:
+        """batch: same structure as prefill input.  Returns generated ids
+        (B, max_new_tokens)."""
+        scfg = self.scfg
+        prompt = batch["tokens"]
+        B, S = prompt.shape
+        npfx = (batch["prefix_emb"].shape[1]
+                if "prefix_emb" in batch else 0)
+        total0 = S + npfx
+        cache_len = scfg.cache_len or (total0 + scfg.max_new_tokens)
+        prefill = jax.jit(functools.partial(self.model.prefill,
+                                            cache_len=cache_len))
+        logits, cache = prefill(self.params, batch)
+        key = jax.random.PRNGKey(scfg.seed)
+        outs = []
+        tok = self._sample(logits[:, -1], key)
+        for i in range(scfg.max_new_tokens):
+            outs.append(np.asarray(tok[:, 0]))
+            logits, cache = self._decode(self.params, cache, tok,
+                                         jnp.int32(total0 + i))
+            key, k = jax.random.split(key)
+            tok = self._sample(logits[:, -1], k)
+        return np.stack(outs, axis=1)
+
+    def _sample(self, logits, key):
+        if self.scfg.temperature <= 0.0:
+            return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits / self.scfg.temperature, -1)[:, None].astype(jnp.int32)
+
+
+def consolidated_params(train_state) -> Any:
+    """Extract serving params from an EDiT train state (replica 0 after the
+    replicas have been synchronized)."""
+    return jax.tree.map(lambda a: a[0], train_state["params"])

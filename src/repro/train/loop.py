@@ -1,0 +1,93 @@
+"""Training loop: wires model + strategy + data + optimizer + checkpointing.
+
+Used by examples/ and benchmarks/; the multi-pod path instead goes through
+launch/dryrun.py (ShapeDtypeStructs, no allocation).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.data.pipeline import SyntheticLM
+from repro.models import Model, build_model
+from repro.optim import AdamW, cosine_with_warmup
+
+
+@dataclass
+class TrainerConfig:
+    total_steps: int = 200
+    inner_lr: float = 1.5e-4
+    lr_warmup: int = 20
+    log_every: int = 10
+    eval_every: int = 0
+    eval_batches: int = 4
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, model: Model, strategy: Strategy, data: SyntheticLM,
+                 tcfg: TrainerConfig, inner_opt=None, lr_sched=None,
+                 active_fn: Optional[Callable[[int], np.ndarray]] = None):
+        self.model = model
+        self.strategy = strategy
+        self.data = data
+        self.tcfg = tcfg
+        self.inner_opt = inner_opt or AdamW()
+        self.lr_sched = lr_sched or cosine_with_warmup(
+            tcfg.inner_lr, tcfg.lr_warmup, tcfg.total_steps)
+        self.active_fn = active_fn
+        self.state = init_train_state(model, strategy, self.inner_opt,
+                                      jax.random.PRNGKey(tcfg.seed))
+        self._step_fn = jax.jit(make_train_step(
+            model, strategy, self.inner_opt, self.lr_sched))
+        self._eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[0])
+        self.history: List[Dict[str, float]] = []
+
+    def eval_ppl(self) -> float:
+        """Held-out PPL with the replica-0 (post-sync: consolidated) params."""
+        p0 = jax.tree.map(lambda a: a[0], self.state["params"])
+        val = SyntheticLM(self.data.vocab_size, self.data.seq_len,
+                          max(self.data.global_batch // 4, 1),
+                          seed=self.data.seed, markov_q=self.data.markov_q,
+                          split="valid")
+        losses = []
+        for i in range(self.tcfg.eval_batches):
+            b = {"tokens": jnp.asarray(val.batch(i))}
+            losses.append(float(self._eval_fn(p0, b)))
+        return float(np.exp(np.mean(losses)))
+
+    def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
+        steps = steps or self.tcfg.total_steps
+        t0 = time.time()
+        for _ in range(steps):
+            step = int(self.state["step"])
+            batch = {"tokens": jnp.asarray(self.data.batch(step))}
+            if self.active_fn is not None:
+                active = jnp.asarray(self.active_fn(step))
+                self.state, m = self._step_fn(self.state, batch, active)
+            else:
+                self.state, m = self._step_fn(self.state, batch)
+            rec = {"step": step, "loss": float(m["loss"]),
+                   "lr": float(m["lr"]), "grad_norm": float(m["grad_norm"])}
+            if self.tcfg.eval_every and (step + 1) % self.tcfg.eval_every == 0:
+                rec["ppl"] = self.eval_ppl()
+            self.history.append(rec)
+            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
+                dt = time.time() - t0
+                extra = f" ppl={rec['ppl']:.2f}" if "ppl" in rec else ""
+                print(f"step {step:5d} loss {rec['loss']:.4f} "
+                      f"lr {rec['lr']:.2e} ({dt:.1f}s){extra}", flush=True)
+            if (self.tcfg.ckpt_dir and self.tcfg.ckpt_every
+                    and (step + 1) % self.tcfg.ckpt_every == 0):
+                from repro.checkpoint.store import save
+                save(f"{self.tcfg.ckpt_dir}/step_{step+1}", self.state,
+                     {"step": step + 1, "strategy": self.strategy.name})
+        return self.history

@@ -1,0 +1,10 @@
+import os
+import sys
+
+# Smoke tests / kernels see the single real CPU device; ONLY the dry-run
+# scripts force 512 host devices (per the brief, never set globally here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+jax.config.update("jax_enable_x64", False)

@@ -1,0 +1,56 @@
+"""Validate the analytic roofline cost model against XLA cost_analysis on a
+1-layer model (scan length 1 — the one case where XLA's while-body-once
+counting is exact)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from benchmarks.costmodel import prefill_cost, train_cost
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.models import build_model
+
+
+def _one_layer_cfg():
+    return dataclasses.replace(
+        get_config("llama_350m"), n_layers=1, d_model=512, d_ff=1408,
+        n_heads=8, n_kv_heads=8, head_dim=64, vocab_size=2048)
+
+
+def test_prefill_flops_match_xla():
+    cfg = _one_layer_cfg()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    shape = ShapeConfig("t", seq_len=512, global_batch=2, kind="prefill")
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    batch = {"tokens": jax.ShapeDtypeStruct((2, 512), jnp.int32)}
+    compiled = jax.jit(model.prefill).lower(params, batch).compile()
+    xla_flops = compiled.cost_analysis()["flops"]
+    model_est = prefill_cost(cfg, shape).hlo_flops
+    ratio = model_est / xla_flops
+    # analytic model counts matmul MACs x2; XLA adds elementwise/softmax ops
+    # and the cache fill. Require same order of magnitude, tight-ish band.
+    assert 0.5 < ratio < 1.7, (model_est, xla_flops, ratio)
+
+
+def test_train_flops_match_xla():
+    from repro.core import Strategy, init_train_state, make_train_step
+    from repro.optim import AdamW, constant
+    cfg = _one_layer_cfg()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    shape = ShapeConfig("t", seq_len=256, global_batch=4, kind="train")
+    strat = Strategy(name="baseline", replicas=1, inner_clip=0.0)
+    opt = AdamW()
+    state = jax.eval_shape(
+        lambda k: init_train_state(model, strat, opt, k),
+        jax.random.PRNGKey(0))
+    step = make_train_step(model, strat, opt, constant(1e-3))
+    batch = {"tokens": jax.ShapeDtypeStruct((4, 256), jnp.int32)}
+    compiled = jax.jit(step).lower(state, batch).compile()
+    xla_flops = compiled.cost_analysis()["flops"]
+    est = train_cost(cfg, shape, replicas=1, model_shard=1,
+                     remat=False).hlo_flops
+    ratio = est / xla_flops
+    assert 0.4 < ratio < 2.0, (est, xla_flops, ratio)

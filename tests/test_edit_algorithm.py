@@ -1,0 +1,165 @@
+"""EDiT algorithm invariants (integration-level, small model)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.core.penalty import PenaltyConfig
+from repro.models import build_model
+from repro.optim import SGDM, AdamW, constant
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_config("llama_350m").reduced()
+    return build_model(cfg, compute_dtype=jnp.float32, remat=False)
+
+
+def _run(model, strategy, opt, steps, seed=0, lr=1e-2, active_fn=None):
+    state = init_train_state(model, strategy, opt, jax.random.PRNGKey(7))
+    step = jax.jit(make_train_step(model, strategy, opt, constant(lr)))
+    key = jax.random.PRNGKey(seed)
+    for i in range(steps):
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(
+            k, (8, 16), 0, model.cfg.vocab_size)}
+        if active_fn is not None:
+            state, m = step(state, batch, active_fn(i))
+        else:
+            state, m = step(state, batch)
+    return state
+
+
+def _max_replica_spread(params):
+    spread = 0.0
+    for leaf in jax.tree.leaves(params):
+        spread = max(spread, float(jnp.abs(leaf - leaf[:1]).max()))
+    return spread
+
+
+def test_replicas_identical_during_warmup(model):
+    strat = Strategy(name="edit", replicas=4, sync_interval=4, warmup_steps=100)
+    state = _run(model, strat, AdamW(), 5)
+    assert _max_replica_spread(state["params"]) == 0.0
+
+
+def test_replicas_diverge_then_resync(model):
+    strat = Strategy(name="edit", replicas=4, sync_interval=4, warmup_steps=2)
+    opt = AdamW()
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(7))
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-2)))
+    key = jax.random.PRNGKey(0)
+    spreads = []
+    for i in range(9):
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(k, (8, 16), 0,
+                                              model.cfg.vocab_size)}
+        state, _ = step(state, batch)
+        spreads.append(_max_replica_spread(state["params"]))
+    # steps 0-2 warmup: identical; divergence after; resync at step 6
+    # (sync happens at the START of the step when (s-warmup)%tau==0, s>warmup)
+    assert spreads[0] == 0.0 and spreads[1] == 0.0
+    assert spreads[3] > 0.0 and spreads[5] > 0.0
+    # after the sync boundary the new params are broadcast + one local step;
+    # the spread right after broadcast is 0 inside the step, so check the
+    # sync actually pulled replicas together vs the step before
+    assert min(spreads[5:]) < max(spreads[3:6]) * 10  # loose sanity
+
+
+def test_post_local_sgd_tau1_equals_baseline_with_sgd(model):
+    """With an SGD inner optimizer, averaging params every step (Post Local
+    SGD, tau=1, nu=1, mu=0) equals averaging grads every step (Baseline) —
+    linearity of the update.  Property from the Local-SGD literature."""
+    opt = SGDM(momentum=0.0)
+    # inner_clip is nonlinear (clip(avg g) != avg(clip g)) -> disable it for
+    # the exact-equivalence property
+    base = _run(model, Strategy(name="baseline", replicas=4, warmup_steps=0,
+                                inner_clip=0.0), opt, 4)
+    pls = _run(model, Strategy(name="post_local_sgd", replicas=4,
+                               sync_interval=1, warmup_steps=0,
+                               inner_clip=0.0), opt, 4)
+    # compare replica-0 params after the final sync boundary: run 1 more
+    # step so PLS syncs; instead compare anchors loosely via param means
+    b0 = jax.tree.leaves(jax.tree.map(lambda a: a[0], base["params"]))
+    p0 = jax.tree.leaves(jax.tree.map(lambda a: a[0], pls["params"]))
+    # PLS syncs at the START of each step, so its replica params equal the
+    # baseline trajectory up to one local step of divergence; the averaged
+    # (anchor) params must match the baseline exactly at boundaries.
+    pa = jax.tree.leaves(pls["anchor"])
+    # baseline replica-0 params at step 4 == PLS anchor updated at step-4
+    # boundary == average of PLS params after 3 steps + 1 sync... The exact
+    # invariant: baseline params after k steps == PLS anchor after sync at
+    # step k.  Our last sync happened at the start of step 3 covering steps
+    # 0-2, so re-run baseline for 3 steps for the comparison.
+    base3 = _run(model, Strategy(name="baseline", replicas=4, warmup_steps=0,
+                                 inner_clip=0.0), opt, 3)
+    b3 = jax.tree.leaves(jax.tree.map(lambda a: a[0], base3["params"]))
+    for x, y in zip(b3, pa):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y),
+                                   atol=1e-5, rtol=1e-4)
+
+
+def test_a_edit_all_active_equals_edit(model):
+    opt = AdamW()
+    s_edit = _run(model, Strategy(name="edit", replicas=4, sync_interval=3,
+                                  warmup_steps=1), opt, 7)
+    s_aedit = _run(model, Strategy(name="a_edit", replicas=4, sync_interval=3,
+                                   warmup_steps=1), opt, 7,
+                   active_fn=lambda i: jnp.ones((4,), bool))
+    for x, y in zip(jax.tree.leaves(s_edit["params"]),
+                    jax.tree.leaves(s_aedit["params"])):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=1e-6)
+
+
+def test_a_edit_inactive_replica_frozen(model):
+    opt = AdamW()
+    strat = Strategy(name="a_edit", replicas=4, sync_interval=100,
+                     warmup_steps=0)
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(7))
+    p_before = jax.tree.map(lambda a: a[3].copy(), state["params"])
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-2)))
+    active = jnp.array([True, True, True, False])
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(5), (8, 16), 0,
+                                          model.cfg.vocab_size)}
+    state, _ = step(state, batch, active)
+    # replica 3 unchanged, replica 0 changed
+    for b, a in zip(jax.tree.leaves(p_before),
+                    jax.tree.leaves(jax.tree.map(lambda x: x[3],
+                                                 state["params"]))):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(a))
+    moved = any(
+        float(jnp.abs(l[0] - l[3]).max()) > 0
+        for l in jax.tree.leaves(state["params"]))
+    assert moved
+
+
+def test_anomalous_replica_rejected_at_sync(model):
+    """Feed one replica garbage (huge LR burst via corrupted labels is slow;
+    instead poison its params directly) and check the sync keeps the anchor
+    close to the healthy replicas."""
+    opt = AdamW()
+    strat = Strategy(name="edit", replicas=4, sync_interval=2, warmup_steps=0,
+                     penalty=PenaltyConfig(ema_warmup_syncs=0))
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(7))
+    # prime EMA stats with plausible small norms
+    for k in state["ema"]:
+        if k != "count":
+            state["ema"][k]["mu"] = jnp.full_like(state["ema"][k]["mu"], 0.05)
+            state["ema"][k]["sigma"] = jnp.full_like(
+                state["ema"][k]["sigma"], 0.01)
+    state["ema"]["count"] = jnp.int32(100)
+    # poison replica 2
+    state["params"] = jax.tree.map(
+        lambda a: a.at[2].add(7.0), state["params"])
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-4)))
+    key = jax.random.PRNGKey(3)
+    for i in range(3):  # sync fires at start of step with step%2==0, step>0
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(k, (8, 16), 0,
+                                              model.cfg.vocab_size)}
+        state, m = step(state, batch)
+    # anchor must not have absorbed the +7 poison
+    for leaf in jax.tree.leaves(state["anchor"]):
+        assert float(jnp.abs(leaf).max()) < 3.0

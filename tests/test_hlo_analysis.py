@@ -1,0 +1,66 @@
+"""HLO collective parser: shape-bytes, computation splitting, while-loop
+trip-count multipliers."""
+import textwrap
+
+from repro.launch.hlo_analysis import (_shape_bytes, _split_computations,
+                                       _while_trip_counts, collective_bytes,
+                                       roofline_terms)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[128,256]") == 128 * 256 * 2
+    assert _shape_bytes("(f32[4,4], bf16[2])") == 64 + 4
+    assert _shape_bytes("pred[16]") == 16
+    assert _shape_bytes("f32[]") == 4
+
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %cond.1 (arg: (s32[], f32[8])) -> pred[] {
+      %arg = (s32[], f32[8]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %limit = s32[] constant(12)
+      ROOT %lt = pred[] compare(%i, %limit), direction=LT
+    }
+
+    %body.1 (arg: (s32[], f32[8])) -> (s32[], f32[8]) {
+      %arg = (s32[], f32[8]) parameter(0)
+      %x = f32[8] get-tuple-element(%arg), index=1
+      %ag = f32[128] all-gather(%x), dimensions={0}
+      %red = f32[8] all-reduce(%x), to_apply=%sum
+      ROOT %t = (s32[], f32[8]) tuple(%i2, %red)
+    }
+
+    ENTRY %main (p0: f32[8]) -> f32[8] {
+      %p0 = f32[8] parameter(0)
+      %w = (s32[], f32[8]) while(%init), condition=%cond.1, body=%body.1
+      %ar2 = f32[16,2] all-reduce(%y), to_apply=%sum
+      ROOT %out = f32[8] get-tuple-element(%w), index=1
+    }
+    """)
+
+
+def test_split_and_trips():
+    comps = _split_computations(HLO)
+    assert set(comps) >= {"cond.1", "body.1", "main"}
+    trips = _while_trip_counts(comps)
+    assert trips == {"body.1": 12}
+
+
+def test_collective_bytes_with_loop_multiplier():
+    cb = collective_bytes(HLO)
+    # all-gather: 128 f32 x 12 trips = 6144 bytes
+    assert cb["all-gather"] == 128 * 4 * 12
+    # all-reduce: 8 f32 x 12 (in body) + 32 f32 (entry) = 384 + 128
+    assert cb["all-reduce"] == 8 * 4 * 12 + 16 * 2 * 4
+    assert cb["count"] == 25
+
+
+def test_roofline_terms_pick_bottleneck():
+    t = roofline_terms(197e12, 100e9, 1e9)   # 1s compute, ~0.12s mem
+    assert t["bottleneck"] == "compute"
+    t = roofline_terms(1e12, 819e9 * 2, 1e9)
+    assert t["bottleneck"] == "memory"
+    t = roofline_terms(1e12, 1e9, 50e9 * 3)
+    assert t["bottleneck"] == "collective"

@@ -1,0 +1,134 @@
+"""Pseudo-gradient-penalty unit + property-style tests (paper Alg. 2).
+
+hypothesis is not installed offline; property tests emulate it with seeded
+random sweeps over many draws (documented in DESIGN.md).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.penalty import (PenaltyConfig, ema_update, group_norms,
+                                penalized_pseudo_gradient)
+
+
+def _mk_delta(key, R, n_rep, shape=(8, 16)):
+    return {"w": jax.random.normal(key, (R, n_rep) + shape, jnp.float32)}
+
+
+def _stats(delta, n_rep):
+    return group_norms(delta, n_rep, stacked=True)
+
+
+def test_weights_sum_to_one_and_suppress_large_norms():
+    key = jax.random.PRNGKey(0)
+    R, n_rep = 6, 3
+    delta = _mk_delta(key, R, n_rep)
+    # blow up replica 2's pseudo gradient
+    delta["w"] = delta["w"].at[2].mul(100.0)
+    G = _stats(delta, n_rep)
+    mu, sigma = jnp.zeros_like(G), jnp.ones_like(G)
+    pcfg = PenaltyConfig(ema_warmup_syncs=1000)  # anomaly off (not warmed)
+    d_hat, rollback, *_ , info = penalized_pseudo_gradient(
+        delta, G, mu, sigma, jnp.int32(0), pcfg, n_rep, True)
+    # softmax(-G): the blown-up replica gets ~0 weight -> result bounded
+    assert not bool(rollback.any())
+    assert float(jnp.abs(d_hat["w"]).max()) < 50.0
+
+
+def test_anomaly_elimination_and_rollback():
+    key = jax.random.PRNGKey(1)
+    R, n_rep = 4, 2
+    delta = _mk_delta(key, R, n_rep)
+    G = _stats(delta, n_rep)
+    # EMA stats say the typical norm is tiny -> every replica anomalous
+    mu = jnp.zeros_like(G)
+    sigma = jnp.full_like(G, 1e-6)
+    pcfg = PenaltyConfig(ema_warmup_syncs=0)
+    d_hat, rollback, mu2, s2, info = penalized_pseudo_gradient(
+        delta, G, mu, sigma, jnp.int32(100), pcfg, n_rep, True)
+    assert bool(rollback.all()), "all-anomalous must roll back"
+    assert float(jnp.abs(d_hat["w"]).max()) == 0.0
+    # EMA update skipped for anomalous entries
+    np.testing.assert_allclose(np.asarray(mu2), np.asarray(mu))
+
+
+def test_single_anomalous_worker_gets_zero_weight():
+    key = jax.random.PRNGKey(2)
+    R, n_rep = 4, 1
+    delta = _mk_delta(key, R, n_rep)
+    delta["w"] = delta["w"].at[0].mul(1000.0)
+    G = _stats(delta, n_rep)
+    mu = jnp.full_like(G, float(jnp.median(G)))
+    sigma = jnp.full_like(G, 1.0)
+    pcfg = PenaltyConfig(ema_warmup_syncs=0)
+    d_hat, rollback, *_ = penalized_pseudo_gradient(
+        delta, G, mu, sigma, jnp.int32(100), pcfg, n_rep, True)
+    assert not bool(rollback.any())
+    # result equals softmax over the 3 healthy replicas only
+    G_h = G.at[0].set(jnp.inf)
+    w = jax.nn.softmax(-G_h, axis=0)
+    exp = jnp.einsum("rn,rnij->nij", w, delta["w"])
+    np.testing.assert_allclose(np.asarray(d_hat["w"]), np.asarray(exp),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_clip_bounds_norm():
+    """Property: after the penalty, ||delta_hat|| <= phi (+eps) always."""
+    pcfg = PenaltyConfig(clip_threshold=0.5, ema_warmup_syncs=1000)
+    for seed in range(20):
+        key = jax.random.PRNGKey(seed)
+        R, n_rep = 5, 2
+        delta = _mk_delta(key, R, n_rep)
+        G = _stats(delta, n_rep)
+        d_hat, *_ = penalized_pseudo_gradient(
+            delta, G, jnp.zeros_like(G), jnp.ones_like(G), jnp.int32(0),
+            pcfg, n_rep, True)
+        norms = jnp.sqrt(jnp.sum(d_hat["w"] ** 2, axis=(1, 2)))
+        assert float(norms.max()) <= 0.5 + 1e-4, seed
+
+
+def test_identical_replicas_are_fixed_point():
+    """Property: if all replicas hold the same small delta, the weighted
+    average returns it unchanged (weights uniform, no clip)."""
+    for seed in range(10):
+        key = jax.random.PRNGKey(100 + seed)
+        base = jax.random.normal(key, (1, 2, 8, 16)) * 0.01
+        delta = {"w": jnp.tile(base, (4, 1, 1, 1))}
+        G = _stats(delta, 2)
+        pcfg = PenaltyConfig(ema_warmup_syncs=1000, clip_threshold=1e9)
+        d_hat, *_ = penalized_pseudo_gradient(
+            delta, G, jnp.zeros_like(G), jnp.ones_like(G), jnp.int32(0),
+            pcfg, 2, True)
+        np.testing.assert_allclose(np.asarray(d_hat["w"]),
+                                   np.asarray(base[0]), rtol=1e-5, atol=1e-7)
+
+
+def test_ema_update_matches_paper_eq1():
+    mu, sigma = jnp.float32(2.0), jnp.float32(0.5)
+    G = jnp.float32(3.0)
+    alpha = 0.02
+    mu2, s2 = ema_update(mu, sigma, G, alpha, jnp.bool_(True))
+    mu_exp = alpha * 3.0 + (1 - alpha) * 2.0
+    var_exp = (1 - alpha) * 0.25 + alpha * (3.0 - mu_exp) ** 2
+    assert abs(float(mu2) - mu_exp) < 1e-6
+    assert abs(float(s2) - var_exp ** 0.5) < 1e-6
+    # skipped when invalid
+    mu3, s3 = ema_update(mu, sigma, G, alpha, jnp.bool_(False))
+    assert float(mu3) == 2.0 and float(s3) == 0.5
+
+
+def test_group_norms_match_flat_norm():
+    """Property: group_norms == norm of concatenated flattened leaves."""
+    for seed in range(10):
+        key = jax.random.PRNGKey(seed)
+        ks = jax.random.split(key, 2)
+        R, n_rep = 3, 4
+        tree = {"a": jax.random.normal(ks[0], (R, n_rep, 5, 7)),
+                "b": jax.random.normal(ks[1], (R, n_rep, 11))}
+        G = group_norms(tree, n_rep, stacked=True)
+        for r in range(R):
+            for l in range(n_rep):
+                flat = jnp.concatenate([tree["a"][r, l].ravel(),
+                                        tree["b"][r, l].ravel()])
+                assert abs(float(G[r, l]) - float(jnp.linalg.norm(flat))) < 1e-4

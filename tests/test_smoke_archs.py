@@ -1,0 +1,74 @@
+"""Per-architecture smoke tests (brief requirement f): a REDUCED variant of
+each assigned family (2 layers, d_model<=512, <=4 experts) runs one forward
+and one EDiT train step on CPU; output shapes + no NaNs asserted."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.models import build_model
+from repro.optim import AdamW, constant
+
+ASSIGNED = [a for a in ARCH_IDS if not a.startswith("llama")]
+
+
+def _batch(cfg, key, B=2, S=32):
+    b = {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        b["tokens"] = b["tokens"][:, : S - cfg.n_prefix_tokens]
+        b["prefix_emb"] = jax.random.normal(
+            key, (B, cfg.n_prefix_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(key, (B, 8, cfg.d_model), jnp.float32)
+    return b
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_forward_and_shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert loss.shape == ()
+    assert not bool(jnp.isnan(loss)), f"{arch} loss is NaN"
+    assert float(loss) > 0
+
+
+@pytest.mark.parametrize("arch", ASSIGNED)
+def test_one_edit_train_step(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    strat = Strategy(name="edit", replicas=2, sync_interval=2, warmup_steps=0)
+    opt = AdamW()
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-3)))
+    key = jax.random.PRNGKey(1)
+    batch = _batch(cfg, key, B=4)
+    state, m = step(state, batch)
+    assert int(state["step"]) == 1
+    assert not bool(jnp.isnan(m["loss"]))
+    # params changed and are finite
+    leaf = jax.tree.leaves(state["params"])[0]
+    assert bool(jnp.all(jnp.isfinite(leaf)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_4b", "falcon_mamba_7b",
+                                  "jamba_v0_1_52b", "olmoe_1b_7b"])
+def test_decode_shapes(arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key, B=2, S=16)
+    logits, cache = jax.jit(lambda p, b: model.prefill(p, b, cache_len=24))(
+        params, batch)
+    assert logits.shape == (2, 1, cfg.vocab_size)
+    tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+    logits2, cache2 = jax.jit(model.decode_step)(params, cache, tok,
+                                                 jnp.int32(16))
+    assert logits2.shape == (2, 1, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits2).any())

@@ -1,0 +1,101 @@
+"""Optimizers, schedules, data pipeline, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore, save
+from repro.data import SyntheticLM
+from repro.optim import SGDM, AdamW, constant, cosine_with_warmup
+
+
+def test_adamw_matches_reference_scalar():
+    opt = AdamW(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.0)
+    p = {"w": jnp.array([1.0])}
+    st = opt.init(p)
+    g = {"w": jnp.array([0.5])}
+    p2, st2 = opt.update(g, st, p, 0.1)
+    # step 1: m=0.05, v=0.00025 -> mhat=0.5, vhat=0.25 -> step = 0.5/0.5 = 1
+    assert abs(float(p2["w"][0]) - (1.0 - 0.1 * 1.0)) < 1e-5
+
+
+def test_adamw_weight_decay_decoupled():
+    opt = AdamW(weight_decay=0.1)
+    p = {"w": jnp.array([2.0])}
+    st = opt.init(p)
+    g = {"w": jnp.array([0.0])}
+    p2, _ = opt.update(g, st, p, 0.5)
+    assert abs(float(p2["w"][0]) - (2.0 - 0.5 * 0.1 * 2.0)) < 1e-6
+
+
+def test_sgdm_nesterov():
+    opt = SGDM(momentum=0.9, nesterov=True)
+    p = {"w": jnp.array([0.0])}
+    st = opt.init(p)
+    g = {"w": jnp.array([1.0])}
+    p2, st2 = opt.update(g, st, p, 1.0)
+    # m = 0.9*0 + 1 = 1; d = g + 0.9*m = 1.9
+    assert abs(float(p2["w"][0]) + 1.9) < 1e-6
+
+
+def test_cosine_schedule_shape():
+    s = cosine_with_warmup(1e-3, 10, 100, min_ratio=0.1)
+    assert float(s(0)) == 0.0
+    assert abs(float(s(10)) - 1e-3) < 1e-9
+    assert float(s(100)) == pytest.approx(1e-4, rel=1e-3)
+    assert float(s(55)) < float(s(20))
+
+
+def test_data_determinism_and_shapes():
+    d1 = SyntheticLM(512, 64, 16, seed=9)
+    d2 = SyntheticLM(512, 64, 16, seed=9)
+    b1, b2 = d1.batch(3), d2.batch(3)
+    np.testing.assert_array_equal(b1, b2)
+    assert b1.shape == (16, 64) and b1.dtype == np.int32
+    assert not np.array_equal(d1.batch(3), d1.batch(4))
+    assert not np.array_equal(
+        d1.batch(3), SyntheticLM(512, 64, 16, seed=9, split="valid").batch(3))
+
+
+def test_data_markov_structure_learnable():
+    d = SyntheticLM(64, 128, 4, seed=1, markov_q=1.0)
+    b = d.batch(0)
+    # with q=1 every transition follows the permutation
+    assert np.array_equal(d.perm[b[:, :-1]], b[:, 1:])
+    assert d.entropy_floor() == pytest.approx(0.0, abs=1e-9)
+
+
+def test_data_corruption_window():
+    d = SyntheticLM(512, 64, 16, seed=2, replicas=4, corrupt_replicas=(1,),
+                    corrupt_steps=(5, 6), markov_q=1.0)
+    clean = d.batch(4)
+    assert np.array_equal(d.perm[clean[:, :-1]], clean[:, 1:])
+    poisoned = d.batch(5)
+    rep1 = poisoned[4:8]
+    frac = np.mean(d.perm[rep1[:, :-1]] == rep1[:, 1:])
+    assert frac < 0.1  # replica 1's slice is noise
+
+
+def test_checkpoint_roundtrip_nested():
+    tree = {
+        "params": {"blocks": [[{"w": jnp.arange(6.0).reshape(2, 3)}],
+                              [{"m": jnp.ones((4,), jnp.bfloat16)}]],
+                   "embed": jnp.zeros((5, 2))},
+        "step": jnp.int32(17),
+        "ema": {"count": jnp.int32(3),
+                "blocks/0/0": {"mu": jnp.ones((2, 1))}},
+    }
+    with tempfile.TemporaryDirectory() as d:
+        save(d, tree, {"note": "test"})
+        back = restore(d)
+        from repro.checkpoint import load_metadata
+        assert load_metadata(d)["note"] == "test"
+    assert jax.tree_util.tree_structure(tree) == \
+        jax.tree_util.tree_structure(back)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))

@@ -1,0 +1,81 @@
+"""End-to-end behaviour tests for the EDiT system."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import Strategy
+from repro.data import SyntheticLM
+from repro.models import build_model
+from repro.serve import Engine, ServeConfig, consolidated_params
+from repro.train import Trainer, TrainerConfig
+
+
+@pytest.fixture(scope="module")
+def trained():
+    cfg = get_config("llama_350m").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    data = SyntheticLM(cfg.vocab_size, 64, 16, seed=3, markov_q=0.9,
+                       replicas=4)
+    strat = Strategy(name="edit", replicas=4, sync_interval=8, warmup_steps=4)
+    tr = Trainer(model, strat, data,
+                 TrainerConfig(total_steps=50, inner_lr=3e-3, lr_warmup=5,
+                               log_every=0))
+    tr.run()
+    return model, tr, data
+
+
+def test_training_converges_toward_entropy_floor(trained):
+    model, tr, data = trained
+    first = tr.history[0]["loss"]
+    last = np.mean([h["loss"] for h in tr.history[-5:]])
+    assert last < first * 0.5, (first, last)
+    # within striking distance of the floor on this tiny run
+    assert last < data.entropy_floor() + 2.5
+
+
+def test_eval_ppl_finite_and_consistent(trained):
+    model, tr, _ = trained
+    ppl = tr.eval_ppl()
+    assert 1.0 < ppl < 200.0
+
+
+def test_serving_from_trained_state(trained):
+    model, tr, data = trained
+    eng = Engine(model, consolidated_params(tr.state),
+                 ServeConfig(max_new_tokens=12))
+    prompt = jnp.asarray(data.batch(0)[:2, :16])
+    out = eng.generate({"tokens": prompt})
+    assert out.shape == (2, 12)
+    # the model learned the permutation: greedy continuation should follow
+    # pi at a rate far above chance (1/V)
+    last = np.asarray(prompt[:, -1])
+    hit = float(np.mean(data.perm[last] == out[:, 0]))
+    assert hit >= 0.5, hit
+
+
+def test_elastic_resume_scale_down(trained):
+    """Scale-down elasticity: consolidate a 4-replica state and restart
+    training with 2 replicas from the consolidated params."""
+    model, tr, data = trained
+    from repro.core import init_train_state
+    from repro.optim import AdamW
+    p0 = consolidated_params(tr.state)
+    strat2 = Strategy(name="edit", replicas=2, sync_interval=8,
+                      warmup_steps=0)
+    opt = AdamW()
+    state2 = init_train_state(model, strat2, opt, jax.random.PRNGKey(0))
+    state2["params"] = jax.tree.map(
+        lambda a: jnp.broadcast_to(a[None], (2,) + a.shape), p0)
+    state2["anchor"] = p0
+    # SAME corpus (seed fixes the Markov permutation); only the worker
+    # count / global batch changes across the elastic event
+    data2 = SyntheticLM(model.cfg.vocab_size, 64, 8, seed=3, markov_q=0.9,
+                        replicas=2)
+    tr2 = Trainer(model, strat2, data2,
+                  TrainerConfig(total_steps=6, inner_lr=1e-3, log_every=0))
+    tr2.state = state2
+    hist = tr2.run(6)
+    # resumed training stays near the converged loss (no catastrophic jump)
+    assert hist[-1]["loss"] < tr.history[0]["loss"] * 0.7
