@@ -1,0 +1,10 @@
+"""EDiT reproduction package.
+
+Importing :mod:`repro` installs the jax version-compat shims (see
+:mod:`repro.dist.compat`) so every entry point — tests, benchmarks, the
+dry-run driver — can use the modern explicit-mesh API regardless of the
+installed jax.  No device state is touched at import time.
+"""
+from repro.dist import compat as _compat
+
+_compat.install()

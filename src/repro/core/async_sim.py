@@ -113,6 +113,4 @@ def effective_steps_per_round(speeds: WorkerSpeedModel, tau_time: float,
                 break
             elapsed = np.where(fits, elapsed + t, elapsed)
             counts += fits
-            if (~fits).all():
-                break
     return counts / rounds

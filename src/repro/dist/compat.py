@@ -1,0 +1,235 @@
+"""Version shims so the sharding subsystem runs on both old and new jax.
+
+The repo targets the modern explicit-mesh API (``jax.set_mesh``,
+``jax.sharding.AxisType``, ``jax.sharding.get_abstract_mesh``, raw
+``PartitionSpec`` leaves in ``jit(in_shardings=...)``).  Older jaxlib
+builds (0.4.x, like the one baked into this container) predate all four,
+but expose equivalent machinery through the legacy mesh context manager
+(``with mesh:`` + ``pxla.thread_resources``).  ``install()`` bridges the
+gap by patching the missing names into the ``jax`` namespace; on a jax
+that already has them it is a no-op.  It runs automatically on
+``import repro`` so scripts may use the modern spelling unconditionally.
+
+Nothing here touches device state at import time.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+from contextvars import ContextVar
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Mesh most recently activated through the ``set_mesh`` shim.  Newer jax
+# tracks this itself; see :func:`active_mesh` for the unified lookup.
+_ACTIVE_MESH: ContextVar[Any] = ContextVar("repro_active_mesh", default=None)
+
+_installed = False
+
+
+def _thread_mesh():
+    """The legacy global mesh (``with mesh:``), or None."""
+    try:
+        from jax.interpreters import pxla
+        m = pxla.thread_resources.env.physical_mesh
+        return None if m.empty else m
+    except Exception:
+        return None
+
+
+def active_mesh():
+    """The mesh in scope for sharding decisions, or None.
+
+    Checks, in order: the ``set_mesh`` shim's contextvar, the modern
+    ``get_abstract_mesh`` (new jax), and the legacy thread-local physical
+    mesh (old jax).  Returns a mesh object with ``axis_names`` /
+    ``axis_sizes`` / ``empty``, which both Mesh and AbstractMesh provide.
+    """
+    m = _ACTIVE_MESH.get()
+    if m is not None:
+        return m
+    get_abs = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get_abs is not None and not getattr(get_abs, "_repro_shim", False):
+        try:
+            m = get_abs()
+            if m is not None and not m.empty:
+                return m
+        except Exception:
+            pass
+    return _thread_mesh()
+
+
+def install() -> None:
+    """Patch modern sharding entry points into an old jax.  Idempotent."""
+    global _installed
+    if _installed:
+        return
+    _installed = True
+
+    # jax.set_mesh arrived in the same release train as AxisType and
+    # raw-PartitionSpec jit shardings; its presence is the cheap proxy for
+    # "this jax is modern" (a behavioral probe would touch device state).
+    modern = hasattr(jax, "set_mesh")
+
+    if not hasattr(jax.sharding, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jax.sharding.AxisType = AxisType
+
+    if not hasattr(jax, "make_mesh"):
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            import math
+            n = math.prod(axis_shapes)
+            devs = list(devices) if devices is not None else jax.devices()[:n]
+            import numpy as np
+            return jax.sharding.Mesh(
+                np.asarray(devs).reshape(axis_shapes), axis_names)
+
+        jax.make_mesh = make_mesh
+    elif "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            # old jax has no sharding-in-types; Auto is the only behavior
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not modern:
+        @contextlib.contextmanager
+        def set_mesh(mesh):
+            token = _ACTIVE_MESH.set(mesh)
+            try:
+                with mesh:     # legacy context: enables raw-P constraints
+                    yield mesh
+            finally:
+                _ACTIVE_MESH.reset(token)
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax.sharding, "get_abstract_mesh"):
+        def get_abstract_mesh():
+            return active_mesh()
+
+        get_abstract_mesh._repro_shim = True
+        jax.sharding.get_abstract_mesh = get_abstract_mesh
+
+    if not modern:
+        _wrap_jit()
+        _wrap_cost_analysis()
+
+
+# ---------------------------------------------------------------------------
+# jit(in_shardings=<PartitionSpec pytree>) support for old jax
+# ---------------------------------------------------------------------------
+
+def _has_spec_leaves(tree) -> bool:
+    return any(isinstance(l, P) for l in jax.tree_util.tree_leaves(
+        tree, is_leaf=lambda x: isinstance(x, P)))
+
+
+def _resolve_specs(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s) if isinstance(s, P) else s,
+        tree, is_leaf=lambda x: isinstance(x, P))
+
+
+class _DeferredJit:
+    """``jit`` whose PartitionSpec shardings bind to the mesh at call time.
+
+    Old jax only accepts concrete ``Sharding`` objects in ``in_shardings``;
+    the modern API resolves raw specs against the ambient mesh.  This
+    wrapper reproduces that: the underlying jitted callable is built (and
+    cached) per active mesh the first time it is called / lowered.
+    """
+
+    def __init__(self, fun, kwargs):
+        self._fun = fun
+        self._kwargs = kwargs
+        self._cache = {}
+        functools.update_wrapper(self, fun)
+
+    def _jitted(self):
+        mesh = active_mesh()
+        if mesh is None:
+            raise RuntimeError(
+                "jit with PartitionSpec shardings requires an active mesh "
+                "(wrap the call in `with jax.set_mesh(mesh):`)")
+        entry = self._cache.get(mesh)
+        if entry is None:
+            kw = dict(self._kwargs)
+            for k in ("in_shardings", "out_shardings"):
+                if k in kw:
+                    kw[k] = _resolve_specs(kw[k], mesh)
+            entry = (_ORIG_JIT(self._fun, **kw), kw.get("in_shardings"))
+            self._cache[mesh] = entry
+        return entry
+
+    def __call__(self, *args, **kwargs):
+        jitted, in_sh = self._jitted()
+        if (isinstance(in_sh, (tuple, list)) and not kwargs
+                and len(in_sh) == len(args)):
+            # modern jit reshards args to explicit in_shardings; old pjit
+            # errors on committed args whose sharding drifted (e.g. loop
+            # carries whose unconstrained output sharding differs).  None
+            # entries (sharding left to jit) must not hit device_put.
+            args = tuple(a if s is None else jax.device_put(a, s)
+                         for a, s in zip(args, in_sh))
+        return jitted(*args, **kwargs)
+
+    def lower(self, *args, **kwargs):
+        return self._jitted()[0].lower(*args, **kwargs)
+
+    def eval_shape(self, *args, **kwargs):
+        return self._jitted()[0].eval_shape(*args, **kwargs)
+
+
+def _wrap_cost_analysis() -> None:
+    """Old jax returns a one-element list from Compiled.cost_analysis();
+    modern jax returns the dict directly.  Normalize to the dict."""
+    try:
+        from jax._src import stages
+    except Exception:
+        return
+    orig = stages.Compiled.cost_analysis
+
+    @functools.wraps(orig)
+    def cost_analysis(self):
+        out = orig(self)
+        if isinstance(out, list):
+            return out[0] if out else {}
+        return out
+
+    stages.Compiled.cost_analysis = cost_analysis
+
+
+_ORIG_JIT = None
+
+
+def _wrap_jit() -> None:
+    global _ORIG_JIT
+    if _ORIG_JIT is not None:
+        return
+    _ORIG_JIT = jax.jit
+
+    @functools.wraps(_ORIG_JIT)
+    def jit(fun=None, **kwargs):
+        if fun is None:           # decorator-with-arguments form
+            return functools.partial(jit, **kwargs)
+        if (_has_spec_leaves(kwargs.get("in_shardings"))
+                or _has_spec_leaves(kwargs.get("out_shardings"))):
+            return _DeferredJit(fun, kwargs)
+        return _ORIG_JIT(fun, **kwargs)
+
+    jax.jit = jit

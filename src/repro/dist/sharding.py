@@ -1,0 +1,361 @@
+"""The distribution contract: sharding policies, activation hints, gradient
+reduce-scatter, and PartitionSpec builders (DESIGN.md §10).
+
+Everything the model/launch layers know about distribution flows through
+four entry points:
+
+* :func:`fsdp_spec` / :func:`tp_spec` — *parameter* placement.  FSDP
+  (train, ZeRO-3 within a replica) shards the largest divisible dim of
+  each leaf over the model/fsdp axes; TP (serve) is name-aware
+  column/row/expert parallelism with fallback across axis options.
+* :func:`hint` — *activation* placement.  Models annotate tensors with a
+  semantic **role** (``act``, ``qkv``, ``logits``, ``cache``, ``moe_buf``,
+  ``moe_tokens``); the active :class:`ShardingPolicy` maps roles to mesh
+  axes.  Outside a mesh/policy (unit tests, single device) it is an exact
+  no-op, so model code never branches on distribution.
+* :func:`grad_shard` — identity-forward ``custom_vjp`` that constrains the
+  cotangent of a weight to the weight's FSDP sharding, so GSPMD lowers
+  per-layer gradient all-reduces into reduce-scatters (ZeRO-2; the
+  whole-tree variant is ``grad_specs`` in :mod:`repro.core.edit`).
+* :func:`use_policy` / :func:`current_policy` — contextvar-scoped policy
+  switching.  Policies are trace-time constants: :mod:`repro.models.moe`
+  branches on ``current_policy()`` to pick its dispatch strategy.
+
+Policies deliberately know nothing about tensor *names* — only roles and
+shapes — which is what lets one model implementation serve every regime
+(EDiT train, hierarchical/multi-pod train, TP serve, long-context serve,
+sequence-parallel serve) by swapping a ~10-line policy object.
+"""
+from __future__ import annotations
+
+import contextlib
+import functools
+from contextvars import ContextVar
+from dataclasses import dataclass, field
+from typing import Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.dist import compat
+
+compat.install()
+
+active_mesh = compat.active_mesh
+
+Axes = Union[str, Tuple[str, ...]]
+
+# One role placement: put ``axes`` on the FIRST candidate dim whose size the
+# mesh extent of ``axes`` divides.  Candidate dims may be negative
+# (right-relative), so one role covers tensors of different ranks.
+Placement = Tuple[Tuple[str, ...], Tuple[int, ...]]
+
+
+# ---------------------------------------------------------------------------
+# Policy machinery
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ShardingPolicy:
+    """Per-role activation sharding for one execution regime.
+
+    ``roles``: role name -> placements (see :data:`Placement`).  Unknown
+    roles are never constrained — adding a hint to a model is always safe.
+    ``grad_axes``: mesh axes gradients are reduce-scattered over by
+    :func:`grad_shard` (empty = grads left to GSPMD, e.g. serving).
+    ``moe_token_shards_axes``: non-empty enables the locality-preserving
+    MoE dispatch (tokens vmapped over their own shards; see
+    :mod:`repro.models.moe`).
+    ``expert_parallel``: params were laid out with the MoE expert-dim
+    preference (``train_state_specs(..., expert_parallel=True)``);
+    :func:`grad_shard` honors the same preference so expert-stack
+    cotangents land on the weight's shards.  Derive the variant with
+    ``dataclasses.replace(policy, expert_parallel=True)``.
+    """
+    name: str
+    roles: Mapping[str, Tuple[Placement, ...]]
+    grad_axes: Tuple[str, ...] = ()
+    moe_token_shards_axes: Tuple[str, ...] = ()
+    expert_parallel: bool = False
+
+
+def _train_roles(fsdp: Tuple[str, ...]) -> Mapping[str, Tuple[Placement, ...]]:
+    """FSDP training: within one replica the batch dim carries the
+    model/fsdp axes (falling back to the sequence dim under context
+    parallelism); weights stay sharded, activations never shard features."""
+    return {
+        "act":        ((fsdp, (0, 1)),),
+        "qkv":        ((fsdp, (0,)),),
+        "logits":     ((fsdp, (0,)),),
+        "moe_buf":    ((fsdp, (0,)),),      # (E, C, d): expert-sharded buffer
+        "moe_tokens": ((fsdp, (0,)),),      # (n, T/n, d): shard dim
+    }
+
+
+TRAIN_POLICY = ShardingPolicy(
+    name="train", roles=_train_roles(("model",)), grad_axes=("model",))
+
+TRAIN_POLICY_HIER = ShardingPolicy(
+    name="train_hier", roles=_train_roles(("fsdp", "model")),
+    grad_axes=("fsdp", "model"))
+
+# Multi-pod: replica axes ('pod','data') are handled by the train-step vmap;
+# within a replica the roles match single-pod train.  Token dispatch crossing
+# the DCN is what the locality-preserving MoE path avoids, so it is on here.
+TRAIN_POLICY_MULTIPOD = ShardingPolicy(
+    name="train_multipod", roles=_train_roles(("model",)),
+    grad_axes=("model",), moe_token_shards_axes=("model",))
+
+SERVE_POLICY = ShardingPolicy(
+    name="serve",
+    roles={
+        "act":     ((("data",), (0,)),),
+        "qkv":     ((("model",), (2,)),),   # (B,S,H,hd): head-parallel
+        "logits":  ((("model",), (-1,)),),  # vocab-parallel head
+        "cache":   ((("data",), (0,)), (("model",), (1,))),
+        "moe_buf": ((("model",), (0,)),),
+    })
+
+# batch=1 long-context: the data axes would sit idle, so the sequence dim
+# takes the full device grid (matches serve_param_specs / cache_specs).
+SERVE_LONG_POLICY = ShardingPolicy(
+    name="serve_long",
+    roles={
+        "act":     ((("data", "model"), (1,)),),
+        "qkv":     ((("data", "model"), (1,)),),
+        "logits":  ((("model",), (-1,)),),
+        "cache":   ((("data", "model"), (1,)),),
+        "moe_buf": ((("model",), (0,)),),
+    })
+
+# sequence parallelism: residual stream sharded over ('data' x batch,
+# 'model' x sequence) so norm/elementwise work is divided too.
+SERVE_SP_POLICY = ShardingPolicy(
+    name="serve_sp",
+    roles={
+        "act":     ((("data",), (0,)), (("model",), (1,))),
+        "qkv":     ((("data",), (0,)), (("model",), (1,))),
+        "logits":  ((("model",), (-1,)),),
+        "cache":   ((("data",), (0,)), (("model",), (1,))),
+        "moe_buf": ((("model",), (0,)),),
+    })
+
+
+_POLICY: ContextVar[Optional[ShardingPolicy]] = ContextVar(
+    "repro_sharding_policy", default=None)
+
+
+@contextlib.contextmanager
+def use_policy(policy: Optional[ShardingPolicy]):
+    """Activate ``policy`` for the dynamic extent of the block (nests;
+    restores the previous policy on exit).  Policies are read at trace
+    time, so enter this context before ``jit``-tracing/lowering."""
+    token = _POLICY.set(policy)
+    try:
+        yield policy
+    finally:
+        _POLICY.reset(token)
+
+
+def current_policy() -> Optional[ShardingPolicy]:
+    return _POLICY.get()
+
+
+# ---------------------------------------------------------------------------
+# Activation hints
+# ---------------------------------------------------------------------------
+
+def _mesh_sizes(mesh) -> dict:
+    return dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+
+def _placement_spec(shape, placements, sizes) -> Optional[P]:
+    """Resolve role placements against a shape + mesh sizes, or None if
+    nothing applies.  Skips axes absent from the mesh, size-1 axes, dims
+    the axes' extent doesn't divide, and already-claimed dims/axes."""
+    nd = len(shape)
+    entries = [None] * nd
+    used_axes = set()
+    for axes, dims in placements:
+        axes = tuple(a for a in axes
+                     if sizes.get(a, 1) > 1 and a not in used_axes)
+        if not axes:
+            continue
+        extent = 1
+        for a in axes:
+            extent *= sizes[a]
+        for dim in dims:
+            d = dim if dim >= 0 else nd + dim
+            if not 0 <= d < nd or entries[d] is not None:
+                continue
+            if shape[d] % extent == 0:
+                entries[d] = axes if len(axes) > 1 else axes[0]
+                used_axes.update(axes)
+                break
+    if all(e is None for e in entries):
+        return None
+    return P(*entries)
+
+
+def hint(x, role: str):
+    """Constrain ``x`` to the active policy's sharding for ``role``.
+
+    An exact no-op (returns ``x`` itself) when any of these is missing: an
+    active policy, a non-empty mesh, a placement for ``role`` that divides
+    ``x``'s dims.  Model code therefore calls it unconditionally.
+    """
+    pol = current_policy()
+    if pol is None:
+        return x
+    placements = pol.roles.get(role)
+    if not placements:
+        return x
+    mesh = active_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = _placement_spec(x.shape, placements, _mesh_sizes(mesh))
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+# ---------------------------------------------------------------------------
+# Gradient reduce-scatter (ZeRO-2)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _grad_constrained(spec, w):
+    return w
+
+
+def _grad_constrained_fwd(spec, w):
+    return w, None
+
+
+def _grad_constrained_bwd(spec, _res, g):
+    return (jax.lax.with_sharding_constraint(g, spec),)
+
+
+_grad_constrained.defvjp(_grad_constrained_fwd, _grad_constrained_bwd)
+
+
+def grad_shard(w, prefer_dim: int = -1):
+    """Identity on ``w`` whose cotangent is constrained to ``w``'s FSDP
+    sharding.
+
+    Under a train policy + mesh, the per-layer weight gradient produced by
+    backprop is forced onto the same shards as the weight, so GSPMD emits a
+    reduce-scatter instead of an all-reduce (1/model_axis the bytes) and
+    the optimizer update runs on shards.  On a single device, outside a
+    mesh/policy, or under a serve policy it is exactly identity in both
+    value and gradient.
+
+    ``prefer_dim`` mirrors :func:`fsdp_spec`'s argument and is honored only
+    when the policy was laid out expert-parallel — callers with expert
+    stacks (``moe.py``) pass the expert dim so weight and cotangent agree
+    in both layouts.
+    """
+    pol = current_policy()
+    if pol is None or not pol.grad_axes:
+        return w
+    mesh = active_mesh()
+    if mesh is None or mesh.empty:
+        return w
+    sizes = _mesh_sizes(mesh)
+    axes = tuple(a for a in pol.grad_axes if sizes.get(a, 1) > 1)
+    if not axes:
+        return w
+    msz = 1
+    for a in axes:
+        msz *= sizes[a]
+    # Same dim-choice rule as the weight itself (n_prefix dims — replica /
+    # layer-stack — are outside the per-layer view grad_shard sees).
+    spec = fsdp_spec(w.shape, msz, n_prefix=0, replica_axes=(),
+                     model_axis=axes if len(axes) > 1 else axes[0],
+                     prefer_dim=prefer_dim if pol.expert_parallel else -1)
+    if all(e is None for e in spec):
+        return w
+    return _grad_constrained(spec, w)
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+def fsdp_spec(shape: Sequence[int], msz: int, *, n_prefix: int = 0,
+              replica_axes: Tuple[str, ...] = (), model_axis: Axes = "model",
+              prefer_dim: int = -1) -> P:
+    """FSDP placement for one parameter leaf.
+
+    ``shape[:n_prefix]`` are prefix dims (leading replica axis if
+    ``replica_axes`` is non-empty, then layer-stack dims) and never carry
+    the model axes.  Of the remaining dims, the largest one divisible by
+    ``msz`` is sharded over ``model_axis`` (a name or a tuple for
+    hierarchical meshes); ties pick the leftmost; no divisible dim means
+    the leaf is replicated within the replica.  ``prefer_dim`` (absolute
+    index, -1 = off) wins over the size rule when divisible — used to pin
+    MoE expert stacks to the expert dim so expert einsums stay local.
+    """
+    nd = len(shape)
+    entries = [None] * nd
+    if replica_axes and n_prefix >= 1 and nd >= 1:
+        entries[0] = (tuple(replica_axes) if len(replica_axes) > 1
+                      else replica_axes[0])
+    if msz > 1:
+        pick = None
+        if (0 <= prefer_dim < nd and prefer_dim >= n_prefix
+                and shape[prefer_dim] % msz == 0):
+            pick = prefer_dim
+        else:
+            best = 0
+            for i in range(n_prefix, nd):
+                if shape[i] % msz == 0 and shape[i] > best:
+                    best, pick = shape[i], i
+        if pick is not None:
+            entries[pick] = model_axis
+    return P(*entries)
+
+
+# tensor-parallel classification by trailing path component:
+#   column-parallel (shard the output/last dim) — QKV and up projections,
+#   gate projections, the LM head, MLA low-rank ups, mamba input projection;
+#   row-parallel (shard the reduction dim, i.e. dim -2) — output projections,
+#   FFN down projections, and the embedding table (vocab = dim -2).
+# Dims are right-relative so stacked (scan-segment) leaves classify the same.
+_COL_PARALLEL = frozenset({
+    "wq", "wk", "wv", "w1", "w3", "lm_head",
+    "wq_a", "wq_b", "wkv_a", "wk_b", "wv_b",
+    "in_proj", "x_proj", "dt_proj",
+})
+_ROW_PARALLEL = frozenset({"wo", "w2", "out_proj", "embed"})
+
+
+def tp_spec(name: str, shape: Sequence[int], msz: int, *,
+            axis_options=None) -> P:
+    """Name-aware tensor-parallel placement for serving.
+
+    ``axis_options``: ordered ``[(axes, extent), ...]`` fallbacks — the
+    first option whose extent divides the parallel dim wins (e.g. try the
+    full device grid for batch=1 long-context, fall back to the model
+    axis).  Default: ``[("model", msz)]``.  Unrecognized or 1-D leaves
+    (norms, biases, routers) replicate.
+    """
+    if axis_options is None:
+        axis_options = [("model", msz)]
+    nd = len(shape)
+    parts = name.split("/")
+    leaf = parts[-1]
+    if "experts" in parts and nd >= 3:
+        dim = nd - 3                       # (..., E, d_in, d_out): expert dim
+    elif leaf in _COL_PARALLEL and nd >= 2:
+        dim = nd - 1
+    elif leaf in _ROW_PARALLEL and nd >= 2:
+        dim = nd - 2
+    else:
+        return P(*([None] * nd))
+    for axes, extent in axis_options:
+        if extent > 1 and shape[dim] % extent == 0:
+            entries = [None] * nd
+            entries[dim] = axes
+            return P(*entries)
+    return P(*([None] * nd))

@@ -11,6 +11,7 @@ Usage:
       --mesh both --out results/dryrun
 """
 import argparse
+import dataclasses
 import json
 import time
 import traceback
@@ -109,6 +110,8 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
     if shape.kind == "train":
         policy = TRAIN_POLICY_HIER if "hier4" in opts else (
             TRAIN_POLICY_MULTIPOD if multi_pod else TRAIN_POLICY)
+        if "expert_parallel" in opts:
+            policy = dataclasses.replace(policy, expert_parallel=True)
     elif shape.global_batch < replica_count(mesh):
         policy = SERVE_LONG_POLICY
     elif "seq_parallel" in opts:

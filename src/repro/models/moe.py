@@ -97,12 +97,13 @@ def _moe_tokens(p, xt, cfg, C: int, train: bool):
     buf = buf.at[e_flat, pos_flat].add(x_rep, mode="drop")
     buf = hint(buf, "moe_buf")
 
-    # expert computation (E,C,d) -> (E,C,d)
-    w1 = grad_shard(p["experts"]["w1"].astype(xt.dtype))
-    w2 = grad_shard(p["experts"]["w2"].astype(xt.dtype))
+    # expert computation (E,C,d) -> (E,C,d); expert stacks pass the expert
+    # dim so cotangents match the expert-parallel weight layout when active
+    w1 = grad_shard(p["experts"]["w1"].astype(xt.dtype), prefer_dim=0)
+    w2 = grad_shard(p["experts"]["w2"].astype(xt.dtype), prefer_dim=0)
     h = jnp.einsum("ecd,edf->ecf", buf, w1)
     if cfg.activation in ("swiglu", "geglu"):
-        w3 = grad_shard(p["experts"]["w3"].astype(xt.dtype))
+        w3 = grad_shard(p["experts"]["w3"].astype(xt.dtype), prefer_dim=0)
         act = jax.nn.silu if cfg.activation == "swiglu" else jax.nn.gelu
         h = act(h) * jnp.einsum("ecd,edf->ecf", buf, w3)
     elif cfg.activation == "relu2":

@@ -126,3 +126,54 @@ def test_grad_shard_identity_outside_mesh():
     f = lambda w: jnp.sum(grad_shard(w) ** 2)
     g = jax.grad(f)(x)
     np.testing.assert_allclose(np.asarray(g), np.asarray(2 * x))
+
+
+def test_grad_shard_identity_value_and_grad_under_policy():
+    """On a single device grad_shard must be exactly identity in value AND
+    gradient even with a train policy active (mesh axes are all size 1)."""
+    from repro.dist.sharding import TRAIN_POLICY, grad_shard, use_policy
+    from repro.launch.mesh import make_host_mesh
+    x = jnp.arange(12.0).reshape(3, 4)
+    mesh = make_host_mesh(1, 1)
+    with jax.set_mesh(mesh), use_policy(TRAIN_POLICY):
+        y = grad_shard(x)
+        g = jax.grad(lambda w: jnp.sum(grad_shard(w) ** 2))(x)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+    np.testing.assert_allclose(np.asarray(g), np.asarray(2 * x))
+
+
+def test_hint_is_noop_without_mesh_or_policy():
+    from repro.dist.sharding import TRAIN_POLICY, current_policy, hint, use_policy
+    x = jnp.ones((4, 8))
+    assert hint(x, "act") is x                 # no policy, no mesh
+    with use_policy(TRAIN_POLICY):
+        assert hint(x, "act") is x             # policy but no mesh
+        assert hint(x, "no_such_role") is x
+    assert current_policy() is None
+
+
+def test_use_policy_nests_and_restores():
+    from repro.dist.sharding import (SERVE_POLICY, TRAIN_POLICY,
+                                     current_policy, use_policy)
+    assert current_policy() is None
+    with use_policy(TRAIN_POLICY):
+        assert current_policy() is TRAIN_POLICY
+        with use_policy(SERVE_POLICY):
+            assert current_policy() is SERVE_POLICY
+        assert current_policy() is TRAIN_POLICY
+        with pytest.raises(RuntimeError):
+            with use_policy(SERVE_POLICY):
+                assert current_policy() is SERVE_POLICY
+                raise RuntimeError("boom")
+        assert current_policy() is TRAIN_POLICY  # restored on exception too
+    assert current_policy() is None
+
+
+def test_effective_steps_per_round_consistent_lag():
+    """Deterministic consistent-lag scenario: worker 0 takes 3.0 s/step,
+    the rest 1.0 s/step; in a tau_time=9 window they fit exactly 3 and 9
+    inner steps (regression for the dead trailing break in the loop)."""
+    eff = effective_steps_per_round(
+        WorkerSpeedModel(4, base_time=1.0, consistent_lag={0: 2.0}),
+        tau_time=9.0, rounds=5)
+    np.testing.assert_allclose(eff, [3.0, 9.0, 9.0, 9.0])

@@ -49,6 +49,7 @@ SUBPROCESS_PROG = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
     import sys; sys.path.insert(0, "src")
+    import repro  # noqa: F401  (installs jax compat shims on old jax)
     import jax, jax.numpy as jnp
     from jax.sharding import AxisType
     from repro.configs import get_config
