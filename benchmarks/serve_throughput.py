@@ -1,0 +1,93 @@
+"""Serving throughput: continuous batching vs sequential per-request decode.
+
+The acceptance claim for the continuous engine: at >= 4 concurrent
+requests, one pooled decode step per token beats decoding each request on
+its own (the old per-request path), because the pooled step amortizes the
+python/dispatch overhead and the matmuls over the whole slot batch.
+
+Rows:
+  serve/sequential_oneshot,<us per generated token>,tok_s=...
+  serve/continuous_slots<k>,<us per generated token>,tok_s=...
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import FAST, bench_model, emit
+
+import jax                                   # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+
+from repro.serve import (ContinuousConfig, ContinuousEngine,  # noqa: E402
+                         OneShotEngine, Request, ServeConfig)
+
+PROMPT_LEN = 16
+NEW_TOKENS = 24 if FAST else 64
+N_REQUESTS = 8 if FAST else 16
+CACHE_LEN = 128
+
+
+def _prompts(vocab: int):
+    rng = np.random.default_rng(0)
+    return [rng.integers(0, vocab, size=PROMPT_LEN, dtype=np.int32)
+            for _ in range(N_REQUESTS)]
+
+
+def bench_sequential(model, params, prompts) -> float:
+    """The old serving path: one request at a time, batch=1 decode."""
+    eng = OneShotEngine(model, params,
+                        ServeConfig(max_new_tokens=NEW_TOKENS,
+                                    cache_len=CACHE_LEN))
+    eng.generate({"tokens": jnp.asarray(prompts[0])[None]})   # warm compiles
+    t0 = time.perf_counter()
+    for p in prompts:
+        eng.generate({"tokens": jnp.asarray(p)[None]})
+    return time.perf_counter() - t0
+
+
+def bench_continuous(model, params, prompts, max_slots: int) -> float:
+    ccfg = ContinuousConfig(max_slots=max_slots, cache_len=CACHE_LEN)
+    # warm compiles (prefill/insert/decode/argmax) on a throwaway engine
+    warm = ContinuousEngine(model, params, ccfg)
+    warm.generate(prompts[:1], max_new_tokens=2)
+    eng = ContinuousEngine(model, params, ccfg)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(uid=i, tokens=p, max_new_tokens=NEW_TOKENS))
+    t0 = time.perf_counter()
+    eng.run()
+    return time.perf_counter() - t0
+
+
+def main() -> None:
+    model = bench_model(seq_len=PROMPT_LEN)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = _prompts(model.cfg.vocab_size)
+    total_tokens = N_REQUESTS * NEW_TOKENS
+
+    t_seq = bench_sequential(model, params, prompts)
+    emit("serve/sequential_oneshot", t_seq / total_tokens * 1e6,
+         f"tok_s={total_tokens / t_seq:.1f}")
+
+    speedup_at_4 = None
+    for slots in (4, 8):
+        t_cont = bench_continuous(model, params, prompts, slots)
+        emit(f"serve/continuous_slots{slots}", t_cont / total_tokens * 1e6,
+             f"tok_s={total_tokens / t_cont:.1f}")
+        if slots == 4:
+            speedup_at_4 = t_seq / t_cont
+    print(f"# continuous(4 slots) vs sequential speedup: "
+          f"{speedup_at_4:.2f}x", flush=True)
+    if speedup_at_4 <= 1.0:
+        # hard-fail only when asked (BENCH_STRICT=1): wall-clock assertions
+        # on loaded shared CI runners would turn timing jitter into red runs
+        msg = "continuous batching did not beat sequential per-request decode"
+        if os.environ.get("BENCH_STRICT", "0") == "1":
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -79,10 +79,12 @@ def build_decode_program(cfg, shape, mesh, window: int):
     cache, tokens, pos = sp["cache"], sp["tokens"], sp["pos"]
     p_specs = SP.serve_param_specs(params, cfg, mesh, shape.global_batch)
     c_specs = SP.cache_specs(cache, cfg, mesh, shape.global_batch)
-    t_specs = SP.serve_batch_specs(tokens, cfg, mesh, shape.global_batch)
-    from jax.sharding import PartitionSpec as P
+    # tokens (GB,1) and per-slot positions (GB,) shard with the slot dim
+    io_specs = SP.serve_batch_specs({"tokens": tokens, "pos": pos},
+                                    cfg, mesh, shape.global_batch)
     jf = jax.jit(model.decode_step,
-                 in_shardings=(p_specs, c_specs, t_specs, P()))
+                 in_shardings=(p_specs, c_specs,
+                               io_specs["tokens"], io_specs["pos"]))
     return jf, (params, cache, tokens, pos)
 
 

@@ -160,37 +160,22 @@ def cache_specs(cache, cfg, mesh, global_batch: int):
     def spec_for(path, leaf):
         name = _path_str(path).split("/")[-1]
         nd = leaf.ndim
-        # find batch dim: caches are (..., B, seq/feature, ...) with possible
-        # leading layer-stack dims (scan segments): batch dim = nd - rank+...
-        # attn k/v: (L?, B, T, Kv, hd); mla c_kv/k_rope: (L?, B, T, r)
-        # mamba h: (L?, B, mi, st); conv: (L?, B, K-1, mi); cross_k/v like k/v
-        if name in ("k", "v", "cross_k", "cross_v"):
-            base = nd - 4
-            ent = [None] * nd
-            ent[base] = b_ax
-            ent[base + 1] = seq_ax
-            return P(*ent)
-        if name in ("c_kv", "k_rope"):
-            base = nd - 3
-            ent = [None] * nd
-            ent[base] = b_ax
-            ent[base + 1] = seq_ax
-            return P(*ent)
-        if name == "h":
-            base = nd - 3
-            ent = [None] * nd
-            ent[base] = b_ax
-            if leaf.shape[base + 1] % (msz if batch_ok else rep_n * msz) == 0:
-                ent[base + 1] = seq_ax
-            return P(*ent)
-        if name == "conv":
-            base = nd - 3
-            ent = [None] * nd
-            ent[base] = b_ax
-            if leaf.shape[base + 2] % (msz if batch_ok else rep_n * msz) == 0:
-                ent[base + 2] = seq_ax
-            return P(*ent)
-        return P(*([None] * nd))
+        # caches are (..., B, seq/feature, ...) with possible leading
+        # layer-stack dims (scan segments); the batch/slot dim is located by
+        # leaf name (same rule the serve slot pool uses to scatter requests)
+        if name not in T.CACHE_LEAF_RANKS:
+            return P(*([None] * nd))
+        base = T.cache_batch_dim(name, nd)
+        ent = [None] * nd
+        ent[base] = b_ax
+        if name in ("k", "v", "cross_k", "cross_v", "c_kv", "k_rope"):
+            ent[base + 1] = seq_ax          # sequence dim
+        else:
+            # mamba state: shard d_inner (h: dim base+1, conv: dim base+2)
+            d_in = base + (1 if name == "h" else 2)
+            if leaf.shape[d_in] % (msz if batch_ok else rep_n * msz) == 0:
+                ent[d_in] = seq_ax
+        return P(*ent)
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
     return jax.tree_util.tree_unflatten(

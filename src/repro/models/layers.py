@@ -204,21 +204,35 @@ def init_attn_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
     }
 
 
+def ring_update(cache_arr, new, slot):
+    """Write one new entry per batch row into a ring cache.  cache_arr:
+    (B,T,...); new: (B,1,...); slot: (B,) int32 per-row ring position."""
+    return jax.vmap(
+        lambda c, n, s: jax.lax.dynamic_update_slice(
+            c, n.astype(c.dtype), (s,) + (0,) * (c.ndim - 1))
+    )(cache_arr, new, slot)
+
+
+def decode_positions(pos, batch: int):
+    """Normalize a decode position argument — scalar int32 (uniform batch)
+    or (B,) vector (per-slot positions, continuous batching) — to (B,)."""
+    return jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (batch,))
+
+
 def attn_decode(p, x, cache, pos, cfg):
     """Single-token decode.  x: (B,1,d); cache k/v: (B,T,Kv,hd) ring buffer
-    (T = sliding window if set, else max seq); pos: scalar int32 absolute
-    position of the new token."""
+    (T = sliding window if set, else max seq); pos: absolute position of
+    each new token — scalar int32 or per-row (B,) vector."""
     B = x.shape[0]
     T = cache["k"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    pos = decode_positions(pos, B)
+    q, k_new, v_new = _qkv(p, x, cfg, pos[:, None])
     slot = jnp.mod(pos, T)
-    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
-                                     (0, slot, 0, 0))
-    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
-                                     (0, slot, 0, 0))
+    k = ring_update(cache["k"], k_new, slot)
+    v = ring_update(cache["v"], v_new, slot)
     k, v = hint(k, "cache"), hint(v, "cache")
-    valid = (jnp.arange(T) <= pos)[None, None, None, None, :]  # ring: all valid once full
+    # ring: all valid once full
+    valid = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, None, None, :]
     out = _sdpa(q, k, v, valid, cfg)
     return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
 

@@ -13,7 +13,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import grad_shard, hint
-from repro.models.layers import _normal, apply_rope, rms_norm, rope_tables
+from repro.models.layers import (_normal, apply_rope, decode_positions,
+                                 ring_update, rms_norm, rope_tables)
 
 
 def init_mla(key, cfg, dtype=jnp.float32):
@@ -105,18 +106,17 @@ def init_mla_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
 
 def mla_decode(p, x, cache, pos, cfg):
     """Latent-space decode with absorbed projections.  Cache holds the
-    compressed latent only: (B, T, kv_rank) + (B, T, rope_dim)."""
+    compressed latent only: (B, T, kv_rank) + (B, T, rope_dim).  ``pos`` is
+    the absolute position of each new token — scalar int32 or (B,) vector."""
     m = cfg.mla
     B = x.shape[0]
     H = cfg.n_heads
     T = cache["c_kv"].shape[1]
-    positions = jnp.full((B, 1), pos, jnp.int32)
-    q_nope, q_rope, c_new, kr_new = _compress(p, x, cfg, positions)
+    pos = decode_positions(pos, B)
+    q_nope, q_rope, c_new, kr_new = _compress(p, x, cfg, pos[:, None])
     slot = jnp.mod(pos, T)
-    c_kv = jax.lax.dynamic_update_slice(
-        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), (0, slot, 0))
-    k_rope = jax.lax.dynamic_update_slice(
-        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+    c_kv = ring_update(cache["c_kv"], c_new, slot)
+    k_rope = ring_update(cache["k_rope"], kr_new, slot)
     c_kv, k_rope = hint(c_kv, "cache"), hint(k_rope, "cache")
     # absorb wk_b into the query: q_lat (B,1,H,kv_rank)
     wk_b = p["wk_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
@@ -125,7 +125,7 @@ def mla_decode(p, x, cache, pos, cfg):
     s = jnp.einsum("bqhk,btk->bhqt", q_lat, c_kv).astype(jnp.float32)
     s += jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope).astype(jnp.float32)
     s *= scale
-    valid = (jnp.arange(T) <= pos)[None, None, None]
+    valid = (jnp.arange(T)[None, :] <= pos[:, None])[:, None, None, :]
     s = jnp.where(valid, s, -1e30)
     w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
     # attend in latent space, then decompress through wv_b (absorbed output)

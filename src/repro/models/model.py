@@ -218,7 +218,9 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
 
     # -- decode ---------------------------------------------------------------
     def decode_step(params, cache, tokens, pos):
-        """tokens: (B,1) int32; pos: scalar int32 absolute position."""
+        """tokens: (B,1) int32; pos: absolute position of each new token —
+        scalar int32 (uniform batch) or (B,) vector (per-slot positions,
+        continuous batching)."""
         x = _embed(params, tokens, compute_dtype)
         x = hint(x, "act")
         h, cache = T.stack_decode(params["blocks"], cache, x, cfg, pos)
@@ -246,12 +248,13 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
             if is_encdec:
                 b["frames"] = sds((GB, max(S // 4, 8), d), compute_dtype)
             return {"batch": b}
-        # decode: one token with a cache of length S
+        # decode: one token per slot with a pooled cache of length S;
+        # positions are per-slot (continuous batching)
         enc_len = min(max(S // 4, 8), 8192) if is_encdec else 0
         cache = jax.eval_shape(lambda: init_cache(GB, S, enc_len))
         return {"cache": cache,
                 "tokens": sds((GB, 1), jnp.int32),
-                "pos": sds((), jnp.int32)}
+                "pos": sds((GB,), jnp.int32)}
 
     return Model(cfg=cfg, init=init, loss=loss_fn, prefill=prefill,
                  decode_step=decode_step, init_cache=init_cache,

@@ -101,6 +101,20 @@ def init_layer(key, prog: LayerProgram, cfg, dtype):
     return p
 
 
+# trailing rank of each cache leaf AFTER its batch/slot dim; leading dims
+# (layer-stack from scan segments) sit left of the batch dim, so the batch
+# dim is right-relative and the same for stacked and unstacked leaves.
+#   attn k/v + cross_k/v: (B, T, Kv, hd); mla c_kv/k_rope: (B, T, r)
+#   mamba h: (B, mi, st); conv: (B, K-1, mi)
+CACHE_LEAF_RANKS = {"k": 3, "v": 3, "cross_k": 3, "cross_v": 3,
+                    "c_kv": 2, "k_rope": 2, "h": 2, "conv": 2}
+
+
+def cache_batch_dim(name: str, ndim: int) -> int:
+    """Index of the batch (slot) dim of a cache leaf named ``name``."""
+    return ndim - 1 - CACHE_LEAF_RANKS[name]
+
+
 def init_layer_cache(prog: LayerProgram, cfg, batch, cache_len, enc_len=0,
                      dtype=jnp.bfloat16):
     c: Dict[str, Any] = {}

@@ -1,1 +1,5 @@
-from repro.serve.engine import Engine, ServeConfig, consolidated_params
+from repro.serve.cache import SlotKVPool, slot_insert
+from repro.serve.engine import (ContinuousConfig, ContinuousEngine, Engine,
+                                OneShotEngine, ServeConfig,
+                                consolidated_params)
+from repro.serve.scheduler import Request, RequestQueue, Scheduler

@@ -1,0 +1,89 @@
+"""Slotted KV-cache pool for continuous batching (DESIGN.md §11).
+
+The pool is ONE decode cache of batch dim ``max_slots`` — the same pytree
+``model.init_cache`` builds, so the jitted decode step sees a fixed shape
+for the whole engine lifetime.  Each slot holds one in-flight request:
+
+* a free list hands out slot indices (allocation) and takes them back when
+  a sequence retires (eviction);
+* ``insert`` scatters a freshly prefilled single-request cache into the
+  slot's rows of every leaf (batch dim located by name via
+  :func:`repro.models.transformer.cache_batch_dim`, so stacked scan-segment
+  leaves and unstacked leaves resolve identically);
+* per-slot position counters live host-side and feed the decode step's
+  (B,) position vector.
+
+Leaves updated by ``insert`` are re-hinted with the ``cache`` sharding
+role, so under a serve policy + mesh the pool keeps the placement the
+policy assigns (batch over ``data``, sequence over ``model``); outside a
+mesh the hint is an exact no-op.
+"""
+from __future__ import annotations
+
+from typing import Any, List, Optional
+
+import jax
+import numpy as np
+
+from repro.dist.sharding import hint
+from repro.models.transformer import cache_batch_dim
+
+
+def _leaf_name(path) -> str:
+    return str(getattr(path[-1], "key", getattr(path[-1], "idx", path[-1])))
+
+
+def slot_insert(pool, new, slot):
+    """Scatter a single-request cache ``new`` (batch dim 1, same cache_len)
+    into ``pool`` at slot index ``slot`` (traced int32)."""
+    def upd(path, p_leaf, n_leaf):
+        b = cache_batch_dim(_leaf_name(path), p_leaf.ndim)
+        starts = [0] * p_leaf.ndim
+        starts[b] = slot
+        out = jax.lax.dynamic_update_slice(
+            p_leaf, n_leaf.astype(p_leaf.dtype), tuple(starts))
+        return hint(out, "cache")
+    return jax.tree_util.tree_map_with_path(upd, pool, new)
+
+
+class SlotKVPool:
+    """Fixed ``max_slots × cache_len`` decode-cache pool with free-list
+    allocation.  Holds the device cache pytree plus host-side per-slot
+    position counters and last-token buffer (the decode step's inputs)."""
+
+    def __init__(self, model, max_slots: int, cache_len: int,
+                 enc_len: int = 0):
+        self.max_slots = max_slots
+        self.cache_len = cache_len
+        self.enc_len = enc_len
+        self.cache = model.init_cache(max_slots, cache_len, enc_len)
+        # absolute position the slot's next decode writes (== tokens so far)
+        self.positions = np.zeros((max_slots,), np.int32)
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self._free: List[int] = list(range(max_slots - 1, -1, -1))
+        # donate the pool so each admission updates in place (no O(pool) copy)
+        self._insert = jax.jit(slot_insert, donate_argnums=(0,))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self) -> Optional[int]:
+        return self._free.pop() if self._free else None
+
+    def release(self, slot: int) -> None:
+        assert slot not in self._free, f"double free of slot {slot}"
+        # freed slots keep decoding as padding rows: reset them to benign
+        # values (token 0, position 0) so ring writes stay in-bounds
+        self.positions[slot] = 0
+        self.tokens[slot] = 0
+        self._free.append(slot)
+
+    def insert(self, slot: int, request_cache: Any, first_token: int,
+               n_tokens: int) -> None:
+        """Install a prefilled request: cache rows, first sampled token,
+        and the position counter (= prompt + prefix length)."""
+        self.cache = self._insert(self.cache, request_cache,
+                                  np.int32(slot))
+        self.tokens[slot] = first_token
+        self.positions[slot] = n_tokens

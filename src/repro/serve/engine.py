@@ -1,20 +1,35 @@
-"""Minimal batched serving engine: prefill + greedy/temperature decode.
+"""Serving engines.
 
-Serving uses consolidated parameters (post-sync replica 0 of an EDiT train
-state, or a plain param tree).  The decode loop is a jitted step driven from
-python; the dry-run lowers a single ``serve_step`` per the brief.
+Two engines share the model's pure prefill/decode functions:
+
+* :class:`OneShotEngine` — the original one-batch engine (prefill a fixed
+  batch, python-driven greedy/temperature decode).  It is the *reference
+  oracle*: per-request outputs of the continuous engine are differentially
+  tested against it (tests/test_serve_continuous.py).
+* :class:`ContinuousEngine` — continuous batching over a slotted KV-cache
+  pool (DESIGN.md §11).  Variable-length requests are admitted into free
+  slots as they arrive, every step advances ALL active slots with one
+  jitted decode call carrying per-slot position vectors, and finished
+  sequences (EOS / token budget) retire immediately so their slot is
+  reusable on the next step.
+
+Sampling is per-request (each request owns a PRNG key chain seeded by its
+``seed``), so a seeded temperature stream reproduces exactly regardless of
+what else shares the batch — the property the differential tests pin down.
 """
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass
-from typing import Any, Dict, Optional
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
+from repro.serve.cache import SlotKVPool
+from repro.serve.scheduler import Request, RequestQueue, Scheduler
 
 
 @dataclass
@@ -25,12 +40,26 @@ class ServeConfig:
     seed: int = 0
 
 
-class Engine:
+class OneShotEngine:
+    """One prompt batch at a time: prefill, then decode the whole batch in
+    lock step.  Compiled prefill is memoized by ``cache_len`` (jax re-uses
+    traces per input shape within one jitted callable), so repeated
+    ``generate`` calls never recompile."""
+
     def __init__(self, model: Model, params, scfg: ServeConfig = ServeConfig()):
         self.model = model
         self.params = params
         self.scfg = scfg
         self._decode = jax.jit(model.decode_step)
+        self._prefill_fns: Dict[int, Callable] = {}
+
+    def prefill_fn(self, cache_len: int) -> Callable:
+        fn = self._prefill_fns.get(cache_len)
+        if fn is None:
+            fn = jax.jit(functools.partial(self.model.prefill,
+                                           cache_len=cache_len))
+            self._prefill_fns[cache_len] = fn
+        return fn
 
     def generate(self, batch: Dict[str, Any]) -> np.ndarray:
         """batch: same structure as prefill input.  Returns generated ids
@@ -42,9 +71,7 @@ class Engine:
                 if "prefix_emb" in batch else 0)
         total0 = S + npfx
         cache_len = scfg.cache_len or (total0 + scfg.max_new_tokens)
-        prefill = jax.jit(functools.partial(self.model.prefill,
-                                            cache_len=cache_len))
-        logits, cache = prefill(self.params, batch)
+        logits, cache = self.prefill_fn(cache_len)(self.params, batch)
         key = jax.random.PRNGKey(scfg.seed)
         outs = []
         tok = self._sample(logits[:, -1], key)
@@ -61,6 +88,154 @@ class Engine:
             return jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
         return jax.random.categorical(
             key, logits / self.scfg.temperature, -1)[:, None].astype(jnp.int32)
+
+
+# backwards-compatible name for the original engine
+Engine = OneShotEngine
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching
+# ---------------------------------------------------------------------------
+
+@dataclass
+class ContinuousConfig:
+    max_slots: int = 8
+    cache_len: int = 256
+    eos_id: int = -1              # < 0: disabled
+    enc_len: int = 0              # encdec: fixed encoder length per request
+
+
+@dataclass
+class _SlotState:
+    req: Request
+    key: Any
+    emitted: List[int] = field(default_factory=list)
+
+
+class ContinuousEngine:
+    """Slot-pooled continuous batching.
+
+    ``submit`` enqueues requests; each ``step()`` admits as many queued
+    requests as there are free slots (per-request prefill scattered into
+    the pool) and then advances every active slot with ONE jitted decode
+    call.  ``stream`` (uid, token, done) fires per generated token.
+    """
+
+    def __init__(self, model: Model, params,
+                 ccfg: ContinuousConfig = ContinuousConfig(), *,
+                 stream: Optional[Callable[[int, int, bool], None]] = None):
+        self.model = model
+        self.params = params
+        self.ccfg = ccfg
+        self.pool = SlotKVPool(model, ccfg.max_slots, ccfg.cache_len,
+                               ccfg.enc_len)
+        self.queue = RequestQueue()
+        self.scheduler = Scheduler(self.queue, self.pool)
+        self.stream = stream
+        self.finished: Dict[int, np.ndarray] = {}
+        self.stats = {"decode_steps": 0, "prefills": 0}
+        self._active: Dict[int, _SlotState] = {}
+        # donate the pool cache: the per-token ring update aliases in place
+        # instead of copying the whole max_slots x cache_len pool every step
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._argmax = jax.jit(lambda lg: jnp.argmax(lg, -1).astype(jnp.int32))
+        # cache_len is fixed for the pool's lifetime, so ONE jitted prefill
+        # suffices — jax caches one trace per distinct (prompt, extras) shape
+        self._prefill = jax.jit(functools.partial(model.prefill,
+                                                  cache_len=ccfg.cache_len))
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.submit(req)
+
+    def _admit(self) -> None:
+        for slot, req in self.scheduler.next_admissions():
+            batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :],
+                     **req.extras}
+            logits, rcache = self._prefill(self.params, batch)
+            self.stats["prefills"] += 1
+            st = _SlotState(req=req, key=jax.random.PRNGKey(req.seed))
+            tok = self._sample_one(logits[:, -1], st.key, req.temperature)
+            total0 = req.prompt_len + Scheduler.prefix_len(req)
+            self.pool.insert(slot, rcache, tok, total0)
+            self._active[slot] = st
+            self._emit(slot, st, tok)
+
+    # -- sampling (must mirror OneShotEngine._sample at B=1 exactly) ---------
+
+    @staticmethod
+    def _sample_one(logits, key, temperature: float) -> int:
+        """logits: (1, V) -> token id."""
+        if temperature <= 0.0:
+            return int(jnp.argmax(logits, -1)[0])
+        return int(jax.random.categorical(key, logits / temperature, -1)[0])
+
+    # -- stepping ------------------------------------------------------------
+
+    def _emit(self, slot: int, st: _SlotState, tok: int) -> None:
+        st.emitted.append(tok)
+        done = (len(st.emitted) >= st.req.max_new_tokens
+                or (self.ccfg.eos_id >= 0 and tok == self.ccfg.eos_id))
+        if self.stream is not None:
+            self.stream(st.req.uid, tok, done)
+        if done:
+            self.finished[st.req.uid] = np.asarray(st.emitted, np.int32)
+            del self._active[slot]
+            self.pool.release(slot)
+
+    def step(self) -> bool:
+        """Admit waiting requests, then advance all active slots by one
+        token.  Returns True while any request is active or queued."""
+        self._admit()
+        if not self._active:
+            return len(self.queue) > 0
+        logits, self.pool.cache = self._decode(
+            self.params, self.pool.cache,
+            jnp.asarray(self.pool.tokens), jnp.asarray(self.pool.positions))
+        self.stats["decode_steps"] += 1
+        lg = logits[:, -1]                      # (max_slots, V)
+        greedy = None
+        for slot, st in list(self._active.items()):
+            if st.req.temperature <= 0.0:
+                if greedy is None:              # one argmax for all slots
+                    greedy = np.asarray(self._argmax(lg))
+                tok = int(greedy[slot])
+            else:
+                st.key, k = jax.random.split(st.key)
+                tok = self._sample_one(lg[slot:slot + 1], k,
+                                       st.req.temperature)
+            self.pool.positions[slot] += 1
+            self.pool.tokens[slot] = tok
+            self._emit(slot, st, tok)
+        return bool(self._active) or len(self.queue) > 0
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain queue + slots; returns {uid: generated ids}."""
+        while self.step():
+            pass
+        return self.finished
+
+    # -- convenience ---------------------------------------------------------
+
+    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> List[np.ndarray]:
+        """Submit one request per prompt and drain; returns outputs in
+        prompt order."""
+        base = len(self.finished)
+        for i, p in enumerate(prompts):
+            self.submit(Request(uid=base + i, tokens=np.asarray(p, np.int32),
+                                max_new_tokens=max_new_tokens,
+                                temperature=temperature, seed=seed + i))
+        out = self.run()
+        missing = [i for i in range(len(prompts)) if base + i not in out]
+        if missing:
+            raise ValueError(
+                f"requests {missing} were rejected by the scheduler "
+                f"(prompt + max_new_tokens exceeds cache_len="
+                f"{self.pool.cache_len}?)")
+        return [out[base + i] for i in range(len(prompts))]
 
 
 def consolidated_params(train_state) -> Any:

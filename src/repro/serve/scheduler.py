@@ -1,0 +1,95 @@
+"""Request admission for the continuous-batching engine (DESIGN.md §11).
+
+A :class:`Request` is one generation job: prompt tokens, a per-request
+sampling spec (temperature + seed, so seeded streams are reproducible
+per request, not per batch), and a token budget.  The :class:`Scheduler`
+is deliberately small and policy-shaped: FCFS admission of queued
+requests into free pool slots, rejecting up front anything whose
+prompt + budget cannot fit the pool's ``cache_len`` (it would silently
+wrap the ring and corrupt the sequence).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    tokens: np.ndarray                  # (S,) int32 prompt
+    max_new_tokens: int = 32
+    temperature: float = 0.0            # 0 = greedy
+    seed: int = 0
+    # per-request model extras, each with a leading batch dim of 1:
+    # 'prefix_emb' (1,P,d) for vlm, 'frames' (1,F,d) for encdec
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.tokens).shape[-1])
+
+
+class RequestQueue:
+    """FIFO admission queue."""
+
+    def __init__(self):
+        self._q: deque = deque()
+
+    def submit(self, req: Request) -> None:
+        self._q.append(req)
+
+    def pop(self) -> Optional[Request]:
+        return self._q.popleft() if self._q else None
+
+    def push_front(self, req: Request) -> None:
+        self._q.appendleft(req)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class Scheduler:
+    """FCFS scheduler: pairs queued requests with free slots.
+
+    ``prefix_len(req)`` is the number of non-token positions the model
+    prepends (vlm prefix embeddings); the total footprint
+    prompt + prefix + max_new_tokens must fit ``pool.cache_len``.
+    """
+
+    def __init__(self, queue: RequestQueue, pool):
+        self.queue = queue
+        self.pool = pool
+        self.rejected: List[Request] = []
+
+    @staticmethod
+    def prefix_len(req: Request) -> int:
+        pe = req.extras.get("prefix_emb")
+        return 0 if pe is None else int(pe.shape[1])
+
+    def fits(self, req: Request) -> bool:
+        total = req.prompt_len + self.prefix_len(req) + req.max_new_tokens
+        if total > self.pool.cache_len:
+            return False
+        frames = req.extras.get("frames")
+        if frames is not None and frames.shape[1] != self.pool.enc_len:
+            # a shorter encoder would leave the previous occupant's stale
+            # cross k/v in the slot's trailing rows — reject, don't corrupt
+            return False
+        return True
+
+    def next_admissions(self) -> List[Tuple[int, Request]]:
+        """Allocate slots for as many queued requests as fit; requests that
+        can never fit the pool are dropped into ``rejected``."""
+        admissions: List[Tuple[int, Request]] = []
+        while self.pool.n_free and len(self.queue):
+            req = self.queue.pop()
+            if not self.fits(req):
+                self.rejected.append(req)
+                continue
+            slot = self.pool.alloc()
+            admissions.append((slot, req))
+        return admissions

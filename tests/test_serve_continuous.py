@@ -1,0 +1,188 @@
+"""Differential tests: the continuous-batching engine must be token-identical
+to the one-shot oracle per request — under randomized arrival order, slot
+eviction/reuse, variable prompt lengths and token budgets, for greedy AND
+seeded temperature sampling — across transformer, MLA, and MoE families.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (ContinuousConfig, ContinuousEngine, OneShotEngine,
+                         Request, ServeConfig)
+
+ARCHS = ["qwen3_4b",          # dense transformer (GQA, qk-norm)
+         "deepseek_v3_671b",  # MLA latent cache (+ MoE)
+         "olmoe_1b_7b"]       # MoE
+
+CACHE_LEN = 64
+PROMPT_LENS = (4, 6, 9)       # small set bounds prefill compiles
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def setup(request):
+    cfg = get_config(request.param).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    oracle = OneShotEngine(model, params, ServeConfig(cache_len=CACHE_LEN))
+    return cfg, model, params, oracle
+
+
+def _requests(cfg, rng, n, temperature=0.0):
+    return [Request(uid=i,
+                    tokens=rng.integers(0, cfg.vocab_size,
+                                        size=rng.choice(PROMPT_LENS),
+                                        dtype=np.int32),
+                    max_new_tokens=int(rng.integers(3, 9)),
+                    temperature=temperature,
+                    seed=1000 + i)
+            for i in range(n)]
+
+
+def _oracle_out(oracle, req):
+    """Per-request reference: the one-shot engine at batch 1 with the
+    request's own sampling spec."""
+    oracle.scfg = ServeConfig(max_new_tokens=req.max_new_tokens,
+                              temperature=req.temperature,
+                              cache_len=CACHE_LEN, seed=req.seed)
+    return oracle.generate({"tokens": jnp.asarray(req.tokens)[None]})[0]
+
+
+def _run_continuous(model, params, reqs, rng, max_slots=2, eos_id=-1,
+                    stream=None):
+    """Drive the engine with randomized arrivals (requests trickle in while
+    earlier ones are mid-decode) and tight slot count (forces eviction and
+    slot reuse)."""
+    ce = ContinuousEngine(
+        model, params,
+        ContinuousConfig(max_slots=max_slots, cache_len=CACHE_LEN,
+                         eos_id=eos_id),
+        stream=stream)
+    pending = list(reqs)
+    rng.shuffle(pending)
+    while True:
+        if pending and rng.random() < 0.6:
+            ce.submit(pending.pop())
+        busy = ce.step()
+        if not busy and not pending:
+            break
+    return ce
+
+
+def test_continuous_matches_oneshot_greedy(setup):
+    cfg, model, params, oracle = setup
+    rng = np.random.default_rng(0)
+    reqs = _requests(cfg, rng, 6)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    ce = _run_continuous(model, params, reqs, rng, max_slots=2)
+    assert ce.stats["decode_steps"] < sum(r.max_new_tokens for r in reqs)
+    for r in reqs:
+        np.testing.assert_array_equal(ce.finished[r.uid], expected[r.uid],
+                                      err_msg=f"uid={r.uid}")
+
+
+def test_continuous_matches_oneshot_temperature(setup):
+    cfg, model, params, oracle = setup
+    rng = np.random.default_rng(1)
+    reqs = _requests(cfg, rng, 5, temperature=0.7)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    ce = _run_continuous(model, params, reqs, rng, max_slots=3)
+    for r in reqs:
+        np.testing.assert_array_equal(ce.finished[r.uid], expected[r.uid],
+                                      err_msg=f"uid={r.uid}")
+
+
+def test_eos_retires_early_and_streams(setup):
+    cfg, model, params, oracle = setup
+    rng = np.random.default_rng(2)
+    reqs = _requests(cfg, rng, 4)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    # choose an eos id that one oracle output actually emits mid-sequence
+    pick = reqs[0]
+    eos = int(expected[pick.uid][min(2, len(expected[pick.uid]) - 1)])
+    events = []
+    ce = _run_continuous(model, params, reqs, rng, max_slots=2, eos_id=eos,
+                         stream=lambda uid, tok, done: events.append(
+                             (uid, tok, done)))
+    for r in reqs:
+        exp = expected[r.uid]
+        hits = np.nonzero(exp == eos)[0]
+        if hits.size:                      # truncated at first EOS, inclusive
+            exp = exp[:hits[0] + 1]
+        np.testing.assert_array_equal(ce.finished[r.uid], exp,
+                                      err_msg=f"uid={r.uid} eos={eos}")
+        streamed = [t for (u, t, _) in events if u == r.uid]
+        assert streamed == list(ce.finished[r.uid])
+        assert sum(1 for (u, _, d) in events if u == r.uid and d) == 1
+
+
+def test_prefill_compile_memoization(setup):
+    """Satellite: compiled prefill is memoized — repeated generates with the
+    same shapes never rebuild or retrace the jitted prefill."""
+    cfg, model, params, _ = setup
+    eng = OneShotEngine(model, params,
+                        ServeConfig(max_new_tokens=2, cache_len=CACHE_LEN))
+    prompt = {"tokens": jnp.zeros((2, 5), jnp.int32)}
+    eng.generate(prompt)
+    fn = eng.prefill_fn(CACHE_LEN)
+    n0 = fn._cache_size()
+    eng.generate(prompt)
+    eng.generate(prompt)
+    assert len(eng._prefill_fns) == 1
+    assert eng.prefill_fn(CACHE_LEN) is fn
+    assert fn._cache_size() == n0 == 1
+
+    ce = ContinuousEngine(model, params,
+                          ContinuousConfig(max_slots=2, cache_len=CACHE_LEN))
+    rng = np.random.default_rng(3)
+    for i in range(3):                    # same prompt length every time
+        ce.submit(Request(uid=i, tokens=rng.integers(
+            0, cfg.vocab_size, size=6, dtype=np.int32), max_new_tokens=2))
+    ce.run()
+    assert ce.stats["prefills"] == 3
+    assert ce._prefill._cache_size() == 1  # one shape -> one compiled prefill
+
+
+def test_scheduler_rejects_oversized_requests(setup):
+    cfg, model, params, _ = setup
+    ce = ContinuousEngine(model, params,
+                          ContinuousConfig(max_slots=2, cache_len=CACHE_LEN))
+    rng = np.random.default_rng(4)
+    ok = Request(uid=0, tokens=rng.integers(0, cfg.vocab_size, size=4,
+                                            dtype=np.int32),
+                 max_new_tokens=3)
+    too_big = Request(uid=1, tokens=rng.integers(0, cfg.vocab_size,
+                                                 size=CACHE_LEN,
+                                                 dtype=np.int32),
+                      max_new_tokens=8)
+    ce.submit(ok)
+    ce.submit(too_big)
+    ce.run()
+    assert 0 in ce.finished and 1 not in ce.finished
+    assert [r.uid for r in ce.scheduler.rejected] == [1]
+    # the convenience API surfaces rejections instead of KeyError-ing
+    with pytest.raises(ValueError, match="rejected"):
+        ce.generate([too_big.tokens], max_new_tokens=8)
+    # encoder length must match the pool's enc_len exactly (a shorter
+    # encoder would decode against a previous occupant's stale cross k/v)
+    frames = np.zeros((1, 8, cfg.d_model), np.float32)
+    mismatched = Request(uid=9, tokens=ok.tokens, max_new_tokens=3,
+                         extras={"frames": frames})
+    assert not ce.scheduler.fits(mismatched)
+
+
+def test_slot_pool_free_list(setup):
+    _, model, params, _ = setup
+    ce = ContinuousEngine(model, params,
+                          ContinuousConfig(max_slots=3, cache_len=CACHE_LEN))
+    pool = ce.pool
+    assert pool.n_free == 3
+    s0, s1 = pool.alloc(), pool.alloc()
+    assert {s0, s1} == {0, 1} and pool.n_free == 1
+    pool.release(s0)
+    assert pool.n_free == 2
+    with pytest.raises(AssertionError):
+        pool.release(s0)                  # double free
