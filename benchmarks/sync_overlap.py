@@ -1,0 +1,60 @@
+"""Streamed layer-wise sync vs monolithic boundary sync (PR-3 tentpole).
+
+Measures the train-step wall time ON the sync boundary (Algorithm-2 fires)
+and OFF it (cond skips), for both pipelines.  On the single-device CPU box
+the collectives are local so the boundary premium mostly shows the sync
+math; the structural win (per-group collectives overlapped with forward
+compute) is verified by the HLO attribution test and recorded per-arch by
+the dry-run's ``sync_overlap`` field.
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, bench_model, emit, time_step
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.optim import AdamW, constant
+
+TAU = 8
+
+
+def _setup(streamed: bool):
+    model = bench_model(seq_len=64)
+    strat = Strategy(name="edit", replicas=4, sync_interval=TAU,
+                     warmup_steps=0)
+    opt = AdamW()
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-3),
+                                   streamed=streamed))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (16, 64), 0,
+                                          model.cfg.vocab_size)}
+    return step, state, batch
+
+
+def main() -> None:
+    iters = 3 if FAST else 10
+    times = {}
+    for streamed in (True, False):
+        step, state, batch = _setup(streamed)
+        kind = "streamed" if streamed else "monolithic"
+        for boundary in (True, False):
+            # (step - warmup) % tau == 0 and step > warmup -> sync fires
+            s = dict(state)
+            s["step"] = jnp.int32(TAU if boundary else TAU + 1)
+            t = time_step(lambda st, b: step(st, b)[1], (s, batch),
+                          iters=iters)
+            where = "boundary" if boundary else "off_boundary"
+            times[(kind, where)] = t
+            emit(f"sync_overlap/{kind}_{where}", t * 1e6, f"tau={TAU}")
+    for kind in ("streamed", "monolithic"):
+        premium = times[(kind, "boundary")] / max(
+            times[(kind, "off_boundary")], 1e-9)
+        emit(f"sync_overlap/{kind}_boundary_premium",
+             premium, "boundary_step_time/off_boundary_step_time")
+    ratio = times[("streamed", "boundary")] / max(
+        times[("monolithic", "boundary")], 1e-9)
+    emit("sync_overlap/streamed_vs_monolithic_boundary", ratio,
+         "streamed/monolithic boundary step time (1.0 = parity)")
+
+
+if __name__ == "__main__":
+    main()

@@ -6,17 +6,22 @@ over the ``data``/``pod`` mesh axes; the ``model`` axis provides ZeRO-3
 sharding *within* each replica.  One global step:
 
 1. (sync gate) if step > warmup and (step-warmup) % tau == 0: run the
-   pseudo-gradient-penalty sync (Algorithm 2) — per-module weighted
-   averaging over R + Nesterov outer update + broadcast back.  In the
-   paper this happens layer-wise inside the forward pass with prefetch;
-   here the per-layer sync ops live in the same XLA program as the step,
-   and the latency-hiding scheduler provides the overlap (DESIGN.md §2).
+   pseudo-gradient-penalty sync (Algorithm 2) — streamed *layer-wise*
+   through ``core.stream.SyncSchedule``: each module group's sync is its
+   own cond emitted in forward-consumption order, so XLA overlaps group
+   g+1's collectives with group g's compute (DESIGN.md §2, §12).  The
+   group-aligned state (``anchor``/``outer_m``/``ema``/``prev_delta`` keyed
+   by ``penalty.module_groups`` group) never re-splits whole-model trees at
+   the boundary.
 2. per-replica forward/backward via ``vmap`` (grads never cross R).
 3. warmup / Baseline: grads are additionally averaged over R each step.
 4. inner optimizer (AdamW) update; A-EDiT masks updates of inactive
    replicas (its variable per-round step counts).
 
-Strategies: baseline | post_local_sgd | diloco | co2_star | edit | a_edit.
+Strategies: baseline | post_local_sgd | diloco | co2_star | edit | a_edit —
+all five sync strategies (and the end-of-warmup re-anchor) share the one
+``core.stream`` pipeline; ``streamed=False`` keeps the old monolithic
+boundary sync as the numerical-equivalence oracle.
 """
 from __future__ import annotations
 
@@ -27,6 +32,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import penalty as PEN
+from repro.core import stream as STR
 from repro.core.outer_opt import Nesterov
 from repro.core.penalty import PenaltyConfig
 
@@ -87,69 +93,44 @@ def _per_replica_clip(grads, max_norm: float):
 
 
 # ---------------------------------------------------------------------------
-# Sync step (Algorithm 2 wrapper over module groups)
+# Whole-tree sync wrapper (compat / external callers)
 # ---------------------------------------------------------------------------
 
 def make_sync_fn(cfg, strategy: Strategy):
+    """Monolithic whole-model sync over plain (un-grouped) trees.  The hot
+    path is ``core.stream.SyncSchedule`` on the group-aligned state; this
+    wrapper survives for external callers and property tests that reason
+    about one boundary sync in isolation."""
     outer = strategy.outer_optimizer()
     groups = PEN.module_groups(cfg)
-    pcfg = strategy.penalty
 
     def sync(params, anchor, outer_m, ema):
         R = jax.tree.leaves(params)[0].shape[0]
         gp = PEN.split_by_group(params, cfg)
         ga = PEN.split_by_group(anchor, cfg)
         gm = PEN.split_by_group(outer_m, cfg)
-        new_params_g, new_anchor_g, new_m_g = {}, {}, {}
+        new_p, new_a, new_m = {}, {}, {}
         new_ema = {"count": ema["count"] + 1}
         infos = []
         for g in groups:
-            pg, ag, mg = gp[g.key], ga[g.key], gm[g.key]
-            delta = jax.tree.map(
-                lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
-                pg, ag)
             if strategy.uses_penalty:
-                G = PEN.group_norms(delta, g.n_rep, g.stacked)
-                mu = ema.get(g.key, {}).get("mu", jnp.zeros_like(G))
-                sigma = ema.get(g.key, {}).get("sigma", jnp.ones_like(G))
-                d_hat, rollback, mu2, s2, info = PEN.penalized_pseudo_gradient(
-                    delta, G, mu, sigma, ema["count"], pcfg, g.n_rep, g.stacked)
-                new_ema[g.key] = {"mu": mu2, "sigma": s2}
-                infos.append(info)
+                ema_g = ema.get(g.key) or {
+                    "mu": jnp.zeros((R, g.n_rep), jnp.float32),
+                    "sigma": jnp.ones((R, g.n_rep), jnp.float32)}
             else:
-                d_hat = jax.tree.map(lambda d: jnp.mean(d, axis=0), delta)
-                rollback = jnp.zeros((g.n_rep,), bool)
-                if g.key in ema:
-                    new_ema[g.key] = ema[g.key]
-            a2, m2 = outer.update(ag, mg, d_hat)
-
-            def sel(new, old, stacked=g.stacked):
-                if not pcfg.enable_anomaly:
-                    return new
-                if stacked:
-                    rb = rollback.reshape(rollback.shape + (1,) * (new.ndim - 1))
-                else:
-                    rb = rollback[0]
-                return jnp.where(rb, old, new)
-
-            a2 = jax.tree.map(lambda n, o: sel(n, o.astype(jnp.float32)).astype(o.dtype),
-                              a2, ag)
-            m2 = jax.tree.map(sel, m2, mg)
-            new_anchor_g[g.key] = a2
-            new_m_g[g.key] = m2
-            new_params_g[g.key] = jax.tree.map(
-                lambda a, p: jnp.broadcast_to(
-                    a[None].astype(p.dtype), p.shape), a2, pg)
-        new_params = PEN.merge_groups(new_params_g, params)
-        new_anchor = PEN.merge_groups(new_anchor_g, anchor)
-        new_m = PEN.merge_groups(new_m_g, outer_m)
-        if infos:
-            info = {k: jnp.mean(jnp.stack([i[k] for i in infos]))
-                    for k in infos[0]}
-        else:
-            info = {k: jnp.zeros(()) for k in
-                    ("anomalous_frac", "rollback_frac", "mean_norm", "mean_beta")}
-        return new_params, new_anchor, new_m, new_ema, info
+                ema_g = None
+            pg2, a2, m2, ema2, _, info = STR.sync_group(
+                g, strategy, outer, gp[g.key], ga[g.key], gm[g.key],
+                ema_g, ema["count"])
+            new_p[g.key], new_a[g.key], new_m[g.key] = pg2, a2, m2
+            if ema2 is not None:
+                new_ema[g.key] = ema2
+            infos.append(info)
+        info = {k: jnp.mean(jnp.stack([i[k] for i in infos]))
+                for k in STR.INFO_KEYS}
+        return (PEN.merge_groups(new_p, params),
+                PEN.merge_groups(new_a, anchor),
+                PEN.merge_groups(new_m, outer_m), new_ema, info)
 
     return sync
 
@@ -160,6 +141,7 @@ def make_sync_fn(cfg, strategy: Strategy):
 
 def init_train_state(model, strategy: Strategy, inner_opt, key) -> Dict[str, Any]:
     R = strategy.replicas
+    cfg = model.cfg
     p0 = model.init(key)
     params = _bcast(p0, R)
     state: Dict[str, Any] = {
@@ -168,20 +150,34 @@ def init_train_state(model, strategy: Strategy, inner_opt, key) -> Dict[str, Any
         "step": jnp.zeros((), jnp.int32),
     }
     if strategy.uses_outer:
-        state["anchor"] = p0
-        state["outer_m"] = Nesterov().init(p0)
+        # group-aligned outer state: one entry per module group, aligned
+        # with transformer.plan_segments — no whole-tree re-split at sync
+        state["anchor"] = PEN.split_by_group(p0, cfg)
+        state["outer_m"] = PEN.split_by_group(Nesterov().init(p0), cfg)
         state["ema"] = {"count": jnp.zeros((), jnp.int32)}
         if strategy.uses_penalty:
             # materialize EMA stats with the right shapes
-            for g in PEN.module_groups(model.cfg):
+            for g in PEN.module_groups(cfg):
                 state["ema"][g.key] = {
                     "mu": jnp.zeros((R, g.n_rep), jnp.float32),
                     "sigma": jnp.ones((R, g.n_rep), jnp.float32),
                 }
         if strategy.delayed:
-            state["prev_delta"] = jax.tree.map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), p0)
+            state["prev_delta"] = PEN.split_by_group(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), p0), cfg)
     return state
+
+
+def migrate_train_state(state: Dict[str, Any], cfg) -> Dict[str, Any]:
+    """Convert a pre-PR-3 train state (whole-model ``anchor``/``outer_m``/
+    ``prev_delta`` trees) to the group-aligned layout.  Idempotent — the
+    group-aligned layout is detected by its ``globals`` entry."""
+    out = dict(state)
+    for k in ("anchor", "outer_m", "prev_delta"):
+        tree = out.get(k)
+        if isinstance(tree, dict) and "globals" not in tree:
+            out[k] = PEN.split_by_group(tree, cfg)
+    return out
 
 
 _CAST_EXCLUDE = ("A_log", "D", "router")  # keep fp32 (SSM dynamics, routing)
@@ -203,24 +199,39 @@ def _cast_for_compute(params, dtype):
 
 
 def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
-                    cast_params_dtype=None, grad_specs=None) -> Callable:
+                    cast_params_dtype=None, grad_specs=None,
+                    streamed: bool = True) -> Callable:
     """Returns train_step(state, batch, active=None) -> (state, metrics).
 
     ``batch`` leaves have a leading global-batch dim divisible by R.
     ``active``: (R,) bool — A-EDiT per-replica step mask (None = all on).
     ``cast_params_dtype``: e.g. jnp.bfloat16 — pre-cast master weights so
-    FSDP all-gathers move half the bytes (see _cast_for_compute).
+    FSDP all-gathers move half the bytes; the block cast rides the
+    per-segment param-provider hook, so each segment's cast (and the
+    all-gather behind it) is emitted at its consumption point.
     ``grad_specs``: pytree of PartitionSpecs matching params — constraining
     gradients to the param sharding makes GSPMD REDUCE-SCATTER them into
     shards instead of all-reducing the full tensors (ZeRO-2-style gradient
     sharding; 1/model_axis the bytes).
+    ``streamed``: per-group layer-wise sync pipeline (default); False emits
+    the monolithic whole-model boundary sync (the differential oracle).
+
+    Step metrics include the sync telemetry: ``synced`` (1.0 on boundary
+    steps) and Algorithm-2's ``anomalous_frac`` / ``rollback_frac`` /
+    ``mean_norm`` / ``mean_beta`` (zeros off-boundary).
     """
     cfg = model.cfg
     R = strategy.replicas
-    sync_fn = make_sync_fn(cfg, strategy) if strategy.uses_outer else None
+    schedule = STR.SyncSchedule(cfg, strategy) if strategy.uses_outer else None
     if cast_params_dtype is not None:
+        def _provider(si, pi, pos_params):
+            return _cast_for_compute(pos_params, cast_params_dtype)
+
         def _loss(p, b):
-            return model.loss(_cast_for_compute(p, cast_params_dtype), b)
+            rest = {k: v for k, v in p.items() if k != "blocks"}
+            rest = _cast_for_compute(rest, cast_params_dtype)
+            return model.loss({**rest, "blocks": p["blocks"]}, b,
+                              param_provider=_provider)
     else:
         _loss = model.loss
     grad_fn = jax.value_and_grad(_loss, has_aux=True)
@@ -231,50 +242,19 @@ def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
             lambda a: a.reshape((R, a.shape[0] // R) + a.shape[1:]), batch)
 
         # ---- periodic sync (Algorithm 1 lines 7-9: start of the round) ----
-        metrics_sync = None
+        sync_info = STR.zero_info()
+        sync_info["synced"] = jnp.zeros(())
         if strategy.uses_outer:
             past_warm = step > strategy.warmup_steps
             at_boundary = jnp.equal(
                 jnp.mod(step - strategy.warmup_steps,
                         strategy.sync_interval), 0)
             do_sync = jnp.logical_and(past_warm, at_boundary)
-
-            def run_sync(s):
-                if strategy.delayed:
-                    # CO2*: apply the one-round-stale pseudo gradient, then
-                    # store the fresh one for the next boundary.
-                    delta_now = jax.tree.map(
-                        lambda p, a: jnp.mean(
-                            p.astype(jnp.float32) - a.astype(jnp.float32)[None],
-                            axis=0),
-                        s["params"], s["anchor"])
-                    outer = strategy.outer_optimizer()
-                    a2, m2 = outer.update(s["anchor"], s["outer_m"],
-                                          s["prev_delta"])
-                    new = dict(s)
-                    new["anchor"] = a2
-                    new["outer_m"] = m2
-                    new["prev_delta"] = delta_now
-                    new["params"] = jax.tree.map(
-                        lambda a, p: jnp.broadcast_to(a[None].astype(p.dtype),
-                                                      p.shape), a2, s["params"])
-                    new["ema"] = {"count": s["ema"]["count"] + 1}
-                    return new
-                p2, a2, m2, ema2, _info = sync_fn(
-                    s["params"], s["anchor"], s["outer_m"], s["ema"])
-                new = dict(s)
-                new.update(params=p2, anchor=a2, outer_m=m2, ema=ema2)
-                return new
-
-            def refresh_anchor(s):
-                # end of warmup: replicas are identical; re-anchor
-                new = dict(s)
-                new["anchor"] = jax.tree.map(lambda p: p[0], s["params"])
-                return new
-
-            state = jax.lax.cond(do_sync, run_sync, lambda s: s, state)
-            state = jax.lax.cond(jnp.equal(step, strategy.warmup_steps),
-                                 refresh_anchor, lambda s: s, state)
+            at_warm_end = jnp.equal(step, strategy.warmup_steps)
+            state, info = schedule.apply(state, do_sync, at_warm_end,
+                                         streamed=streamed)
+            sync_info.update(info)
+            sync_info["synced"] = do_sync.astype(jnp.float32)
 
         # ---- per-replica forward/backward ----------------------------------
         (losses, metrics), grads = jax.vmap(grad_fn)(state["params"], batch_r)
@@ -317,6 +297,7 @@ def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
             "grad_norm": jnp.mean(gnorm),
             "lr": lr,
             **{k: jnp.mean(v) for k, v in metrics.items()},
+            **sync_info,
         }
         return out, metrics
 

@@ -11,6 +11,15 @@ replica axis R, which GSPMD lowers to an all-reduce over the ``data`` (and
 ``pod``) mesh axes — the paper's model-sync-group communication.  Each
 group's stats cost one scalar per (replica, layer): the paper's "only one
 scalar communication" property.
+
+The groups here are also the unit of the *group-aligned* train state and
+the streamed layer-wise sync schedule (``core/stream.py``, DESIGN.md §12):
+``split_by_group``/``merge_groups`` must partition every param leaf exactly
+once (property-tested per config family in ``tests/test_group_coverage.py``)
+— a leaf outside every group would silently escape the sync.
+``penalized_pseudo_gradient`` below is the tree-based Algorithm-2 oracle;
+the hot path runs the same math fused per group via
+``kernels.ops.pg_penalty_group_op``.
 """
 from __future__ import annotations
 

@@ -1,0 +1,248 @@
+"""Streamed layer-wise sync pipeline (paper §3.1: Algorithm 2 *inside* the
+forward pass).
+
+The paper's headline mechanism syncs parameters layer-by-layer during the
+forward with prefetch-style overlap.  This module realizes it natively:
+the train state's ``anchor``/``outer_m``/``ema``/``prev_delta`` are stored
+group-aligned (one entry per :func:`repro.core.penalty.module_groups`
+group, aligned with ``transformer.plan_segments``), and
+:class:`SyncSchedule` emits each group's Algorithm-2 sync — weighted
+average over the replica axis R, Nesterov outer update, anomaly rollback,
+broadcast back — as its *own* ``lax.cond`` in forward-consumption order
+(globals, encoder, then block segments).  Because each group's synced
+params are a separate cond result, the forward's segment *g* depends only
+on group *g*'s sync: XLA's latency-hiding scheduler is free to overlap
+group *g+1*'s collectives with group *g*'s compute, exactly the paper's
+prefetch story (DESIGN.md §2, §12).  Every group sync is wrapped in a
+``jax.named_scope('edit_sync/<group>')`` so ``launch/hlo_analysis`` can
+attribute and verify the interleaving post-compile.
+
+All five sync strategies (edit / a_edit / diloco / co2_star /
+post_local_sgd) plus the end-of-warmup re-anchor run through this one
+pipeline; the per-group math is the fused Pallas path
+``kernels.ops.pg_penalty_group_op`` (jnp ref off-TPU).  The monolithic
+whole-model boundary sync survives only as the differential oracle
+(``streamed=False`` / ``core.edit.make_sync_fn``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import penalty as PEN
+from repro.core.penalty import PenaltyConfig
+from repro.kernels.ops import pg_penalty_group_op
+
+INFO_KEYS = ("anomalous_frac", "rollback_frac", "mean_norm", "mean_beta")
+
+# mean over replicas == Algorithm 2 with every EDiT refinement disabled
+_PLAIN_MEAN = PenaltyConfig(enable_anomaly=False, enable_weighting=False,
+                            enable_clip=False)
+
+
+def zero_info() -> Dict[str, jnp.ndarray]:
+    return {k: jnp.zeros(()) for k in INFO_KEYS}
+
+
+def flatten_group(tree, n_rep: int, stacked: bool):
+    """Pack a group's (R, [n_rep,] ...) leaves into one (L, R, N) fp32
+    array for the fused kernels.  Returns (flat, unflatten) where
+    ``unflatten`` maps an (L, N) result back to a tree of (n_rep, ...)
+    (stacked) / (...) (unstacked) fp32 leaves — the replica dim reduced."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    R = leaves[0].shape[0]
+    parts, bodies = [], []
+    for lf in leaves:
+        lf = lf.astype(jnp.float32)
+        if stacked:
+            bodies.append(lf.shape[2:])
+            parts.append(jnp.swapaxes(lf.reshape(R, n_rep, -1), 0, 1))
+        else:
+            bodies.append(lf.shape[1:])
+            parts.append(lf.reshape(1, R, -1))
+    flat = jnp.concatenate(parts, axis=-1) if len(parts) > 1 else parts[0]
+
+    def unflatten(x):
+        out, off = [], 0
+        for body in bodies:
+            n = 1
+            for d in body:
+                n *= d
+            seg = x[:, off:off + n]
+            off += n
+            out.append(seg.reshape((n_rep,) + body) if stacked
+                       else seg.reshape(body))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return flat, unflatten
+
+
+def sync_group(g: PEN.Group, strategy, outer, pg, ag, mg,
+               ema_g: Optional[Dict], count, prev_g=None,
+               impl: str = "auto") -> Tuple:
+    """One module group's Algorithm-2 sync (all layer repeats at once).
+
+    pg: group params with replica prefix (R, [n_rep,] ...); ag/mg: anchor /
+    outer momentum without R; ema_g: {'mu','sigma'} (R, n_rep) stats
+    (penalty strategies only); prev_g: the one-round-stale pseudo gradient
+    (CO2* only).  Returns (new_pg, new_ag, new_mg, new_ema_g, new_prev_g,
+    info) with the same structures.
+    """
+    pcfg = strategy.penalty if strategy.uses_penalty else _PLAIN_MEAN
+    delta = jax.tree.map(
+        lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
+        pg, ag)
+    flat, unflatten = flatten_group(delta, g.n_rep, g.stacked)  # (L, R, N)
+    R = flat.shape[1]
+    if ema_g is not None:
+        mu, sigma = ema_g["mu"].T, ema_g["sigma"].T            # (L, R)
+    else:
+        mu = jnp.zeros((g.n_rep, R), jnp.float32)
+        sigma = jnp.ones((g.n_rep, R), jnp.float32)
+    d_flat, rollback, mu2, s2, info = pg_penalty_group_op(
+        flat, mu, sigma, count,
+        clip_threshold=pcfg.clip_threshold, anomaly_z=pcfg.anomaly_z,
+        ema_alpha=pcfg.ema_alpha, ema_warmup=pcfg.ema_warmup_syncs,
+        eps=pcfg.eps, enable_anomaly=pcfg.enable_anomaly,
+        enable_weighting=pcfg.enable_weighting,
+        enable_clip=pcfg.enable_clip, impl=impl)
+    d_hat = unflatten(d_flat)
+
+    if strategy.delayed and prev_g is not None:
+        # CO2*: apply the one-round-stale pseudo gradient, store the fresh
+        # (plain-mean) one for the next boundary.  Callers without delayed
+        # state (the whole-tree make_sync_fn wrapper) fall through to the
+        # immediate update.
+        a2, m2 = outer.update(ag, mg, prev_g)
+        new_prev = d_hat
+    else:
+        a2, m2 = outer.update(ag, mg, d_hat)
+        new_prev = prev_g
+
+    if pcfg.enable_anomaly:
+        def sel(new, old, stacked=g.stacked):
+            if stacked:
+                rb = rollback.reshape(rollback.shape + (1,) * (new.ndim - 1))
+            else:
+                rb = rollback[0]
+            return jnp.where(rb, old, new)
+
+        a2 = jax.tree.map(
+            lambda n, o: sel(n.astype(jnp.float32),
+                             o.astype(jnp.float32)).astype(o.dtype), a2, ag)
+        m2 = jax.tree.map(sel, m2, mg)
+    new_pg = jax.tree.map(
+        lambda a, p: jnp.broadcast_to(a[None].astype(p.dtype), p.shape),
+        a2, pg)
+    new_ema = ({"mu": mu2.T, "sigma": s2.T} if ema_g is not None else None)
+    if not strategy.uses_penalty:
+        info = zero_info()
+    return new_pg, a2, m2, new_ema, new_prev, info
+
+
+def _scope(key: str) -> str:
+    return "edit_sync/" + key.replace("/", "_")
+
+
+class SyncSchedule:
+    """Orders module groups by forward-consumption and applies their syncs.
+
+    ``apply(state, do_sync, at_warm_end)`` returns (new_state, info).  With
+    ``streamed=True`` each group gets its own cond in schedule order (the
+    overlap-friendly layout); ``streamed=False`` emits the old monolithic
+    whole-model boundary sync (one cond, one barrier) — kept as the
+    numerical-equivalence oracle.
+    """
+
+    def __init__(self, cfg, strategy):
+        self.cfg = cfg
+        self.strategy = strategy
+        self.outer = strategy.outer_optimizer()
+        by_key = {g.key: g for g in PEN.module_groups(cfg)}
+        order: List[str] = ["globals"]
+        if "encoder" in by_key:          # encoded before the decoder stack
+            order.append("encoder")
+        order += [k for k in by_key if k.startswith("blocks/")]
+        self.groups: List[PEN.Group] = [by_key[k] for k in order]
+
+    # -- per-group operand plumbing ---------------------------------------
+    def _operand(self, state, gp, g):
+        ema_g = state["ema"].get(g.key) if self.strategy.uses_penalty else None
+        prev_g = (state["prev_delta"][g.key] if self.strategy.delayed
+                  else None)
+        return (gp[g.key], state["anchor"][g.key], state["outer_m"][g.key],
+                ema_g, prev_g)
+
+    def _fire(self, g, count):
+        def fire(operand):
+            pg, ag, mg, ema_g, prev_g = operand
+            new_pg, a2, m2, ema2, prev2, info = sync_group(
+                g, self.strategy, self.outer, pg, ag, mg, ema_g, count,
+                prev_g)
+            return new_pg, a2, m2, ema2, prev2, info
+        return fire
+
+    @staticmethod
+    def _skip(operand):
+        pg, ag, mg, ema_g, prev_g = operand
+        return pg, ag, mg, ema_g, prev_g, zero_info()
+
+    def apply(self, state, do_sync, at_warm_end, *, streamed: bool = True):
+        """Run the sync pipeline.  Also handles the end-of-warmup re-anchor
+        (replicas are still identical; anchor := replica-0 params) so every
+        strategy's boundary behavior lives on this one path."""
+        strategy = self.strategy
+        gp = PEN.split_by_group(state["params"], self.cfg)
+        count = state["ema"]["count"]
+        results = {}
+        if streamed:
+            for g in self.groups:
+                with jax.named_scope(_scope(g.key)):
+                    results[g.key] = jax.lax.cond(
+                        do_sync, self._fire(g, count), self._skip,
+                        self._operand(state, gp, g))
+        else:
+            operands = tuple(self._operand(state, gp, g)
+                             for g in self.groups)
+
+            def fire_all(ops):
+                return tuple(self._fire(g, count)(o)
+                             for g, o in zip(self.groups, ops))
+
+            def skip_all(ops):
+                return tuple(self._skip(o) for o in ops)
+
+            with jax.named_scope("edit_sync/all"):
+                res = jax.lax.cond(do_sync, fire_all, skip_all, operands)
+            results = {g.key: r for g, r in zip(self.groups, res)}
+
+        new_p, new_a, new_m = {}, {}, {}
+        new_ema: Dict[str, Any] = {
+            "count": jnp.where(do_sync, count + 1, count)}
+        new_prev, infos = {}, []
+        for g in self.groups:
+            pg2, a2, m2, ema2, prev2, info = results[g.key]
+            # end-of-warmup re-anchor (mutually exclusive with do_sync);
+            # cond-gated so off-warm-end steps pass anchors through
+            a2 = jax.lax.cond(
+                at_warm_end,
+                lambda o: jax.tree.map(
+                    lambda p, a: p[0].astype(a.dtype), o[0], o[1]),
+                lambda o: o[1], (pg2, a2))
+            new_p[g.key], new_a[g.key], new_m[g.key] = pg2, a2, m2
+            if ema2 is not None:
+                new_ema[g.key] = ema2
+            if strategy.delayed:
+                new_prev[g.key] = prev2
+            infos.append(info)
+
+        out = dict(state)
+        out["params"] = PEN.merge_groups(new_p, state["params"])
+        out["anchor"], out["outer_m"], out["ema"] = new_a, new_m, new_ema
+        if strategy.delayed:
+            out["prev_delta"] = new_prev
+        info = {k: jnp.mean(jnp.stack([i[k] for i in infos]))
+                for k in INFO_KEYS}
+        return out, info

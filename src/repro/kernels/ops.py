@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.pg_penalty import pg_combine, pg_sumsq
+from repro.kernels.pg_penalty import (pg_combine, pg_combine_stacked,
+                                      pg_sumsq, pg_sumsq_stacked)
 from repro.kernels.selective_scan import selective_scan
 
 
@@ -41,6 +42,99 @@ def selective_scan_op(a, bx, C, *, impl: str = "auto"):
         return ref.selective_scan_ref(a, bx, C, h0)
     interp = impl == "interpret"
     return selective_scan(a, bx, C, interpret=interp)
+
+
+_PG_BLOCK_N = 4096
+
+
+def _pad_flat(delta):
+    """Zero-pad the flat dim of (L, R, N) to a multiple of the kernel block.
+    Zeros are exact no-ops for both sumsq and the weighted combine."""
+    N = delta.shape[-1]
+    bn = min(_PG_BLOCK_N, -(-N // 128) * 128)
+    Np = -(-N // bn) * bn
+    if Np != N:
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, Np - N)))
+    return delta, bn
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "clip_threshold", "anomaly_z", "ema_alpha", "ema_warmup", "eps",
+    "enable_anomaly", "enable_weighting", "enable_clip", "seed_first",
+    "impl"))
+def pg_penalty_group_op(delta, mu, sigma, sync_count, *, clip_threshold=10.0,
+                        anomaly_z=3.0, ema_alpha=0.02, ema_warmup=10,
+                        eps=1e-8, enable_anomaly=True, enable_weighting=True,
+                        enable_clip=True, seed_first=True, impl: str = "auto"):
+    """Full Algorithm-2 penalty for one flattened module group, all layer
+    repeats at once — the hot-path sync primitive behind
+    ``core.stream.sync_group``.
+
+    delta: (L, R, N) pseudo gradients (layer-repeat, replica, flat params);
+    mu/sigma: (L, R) EMA stats.  The heavy passes (per-replica norms, fused
+    weighted-average+clip) go through the Pallas kernels on TPU and the jnp
+    refs elsewhere (``impl='interpret'`` forces the kernel body off-TPU for
+    differential tests).  With anomaly/weighting/clip disabled this reduces
+    to the plain replica mean — the DiLoCo / Post-Local-SGD / CO2* sync —
+    so every strategy shares this one primitive.
+
+    Returns (delta_hat (L, N) fp32, rollback (L,) bool, new_mu, new_sigma
+    (L, R) fp32, info dict of scalars).
+    """
+    L, R, N = delta.shape
+    use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
+    interp = impl == "interpret" or not on_tpu()
+    if use_kernel:
+        dpad, bn = _pad_flat(delta)
+        G = jnp.sqrt(pg_sumsq_stacked(dpad, block_n=bn, interpret=interp))
+    else:
+        G = jnp.sqrt(ref.pg_sumsq_stacked_ref(delta))
+
+    warmed = sync_count >= ema_warmup
+    if enable_anomaly:
+        z = (G - mu) / jnp.maximum(sigma, eps)
+        anomalous = warmed & (z > anomaly_z)
+    else:
+        anomalous = jnp.zeros_like(G, bool)
+    G_eff = jnp.where(anomalous, jnp.inf, G)
+    if enable_weighting:
+        w = jax.nn.softmax(-G_eff, axis=1)                  # (L, R)
+    else:
+        alive = (~anomalous).astype(jnp.float32)
+        w = alive / jnp.maximum(alive.sum(1, keepdims=True), 1e-9)
+    rollback = jnp.all(anomalous, axis=1)                   # (L,)
+    w = jnp.where(rollback[:, None], 0.0, w)
+    w = jnp.nan_to_num(w, nan=0.0)
+
+    ones = jnp.ones((L,), jnp.float32)
+    if use_kernel:
+        avg = pg_combine_stacked(dpad, w, ones, block_n=bn,
+                                 interpret=interp)[:, :N]
+    else:
+        avg = ref.pg_combine_stacked_ref(delta, w, ones)
+    avg = avg.astype(jnp.float32)
+    G_bar = jnp.sqrt(jnp.sum(avg * avg, axis=1))            # (L,)
+    if enable_clip:
+        beta = jnp.minimum(clip_threshold / (G_bar + eps), 1.0)
+    else:
+        beta = jnp.ones_like(G_bar)
+    delta_hat = avg * beta[:, None]
+
+    # EMA update (paper Eq. 1), skipped for anomalous entries.  First-sync
+    # seeding (mu=G, sigma=G/4) calibrates the z-test to the model's scale.
+    if seed_first:
+        first = sync_count == 0
+        mu = jnp.where(first, G, mu)
+        sigma = jnp.where(first, 0.25 * G, sigma)
+    mu_new = ema_alpha * G + (1 - ema_alpha) * mu
+    var = (1 - ema_alpha) * sigma * sigma + ema_alpha * (G - mu_new) ** 2
+    valid = ~anomalous
+    mu_new = jnp.where(valid, mu_new, mu)
+    sigma_new = jnp.where(valid, jnp.sqrt(var), sigma)
+    info = {"anomalous_frac": jnp.mean(anomalous.astype(jnp.float32)),
+            "rollback_frac": jnp.mean(rollback.astype(jnp.float32)),
+            "mean_norm": jnp.mean(G), "mean_beta": jnp.mean(beta)}
+    return delta_hat, rollback, mu_new, sigma_new, info
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

@@ -45,6 +45,60 @@ def pg_sumsq(delta, *, block_n: int = 4096, interpret: bool = False):
     return partial.sum(axis=0)
 
 
+def _sumsq_stacked_kernel(d_ref, o_ref):
+    d = d_ref[0].astype(jnp.float32)            # (R, bn)
+    o_ref[0, 0] = jnp.sum(d * d, axis=1)        # (R,)
+
+
+def pg_sumsq_stacked(delta, *, block_n: int = 4096, interpret: bool = False):
+    """delta: (L, R, N) -> (L, R) fp32 sum of squares.  The layer-stack dim
+    L of a scan segment rides the grid, so one pallas_call covers a whole
+    module group (one HBM read of delta)."""
+    L, R, N = delta.shape
+    bn = min(block_n, N)
+    assert N % bn == 0
+    nb = N // bn
+    partial = pl.pallas_call(
+        _sumsq_stacked_kernel,
+        grid=(L, nb),
+        in_specs=[pl.BlockSpec((1, R, bn), lambda l, i: (l, 0, i))],
+        out_specs=pl.BlockSpec((1, 1, R), lambda l, i: (l, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((L, nb, R), jnp.float32),
+        interpret=interpret,
+    )(delta)
+    return partial.sum(axis=1)
+
+
+def _combine_stacked_kernel(w_ref, beta_ref, d_ref, o_ref):
+    d = d_ref[0].astype(jnp.float32)            # (R, bn)
+    w = w_ref[...].astype(jnp.float32)          # (1, R)
+    beta = beta_ref[0, 0]                       # this layer's clip coeff
+    o_ref[...] = (beta * (w @ d)).astype(o_ref.dtype)   # (1, bn)
+
+
+def pg_combine_stacked(delta, w, beta, *, block_n: int = 4096,
+                       interpret: bool = False):
+    """Fused per-layer weighted average + clip over a whole module group.
+    delta: (L, R, N); w: (L, R); beta: (L,).  Returns (L, N) in delta.dtype
+    — one read of delta, one write of L*N (1/R the bytes)."""
+    L, R, N = delta.shape
+    bn = min(block_n, N)
+    assert N % bn == 0
+    nb = N // bn
+    return pl.pallas_call(
+        _combine_stacked_kernel,
+        grid=(L, nb),
+        in_specs=[
+            pl.BlockSpec((1, R), lambda l, i: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l, i: (l, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, R, bn), lambda l, i: (l, 0, i)),
+        ],
+        out_specs=pl.BlockSpec((1, bn), lambda l, i: (l, i)),
+        out_shape=jax.ShapeDtypeStruct((L, N), delta.dtype),
+        interpret=interpret,
+    )(w, jnp.asarray(beta, jnp.float32).reshape(L, 1), delta)
+
+
 def _combine_kernel(w_ref, beta_ref, d_ref, o_ref):
     d = d_ref[...].astype(jnp.float32)          # (R, bn)
     w = w_ref[...].astype(jnp.float32)          # (1, R)

@@ -51,3 +51,17 @@ def pg_sumsq_ref(delta):
     """delta: (R, N) -> per-replica sum of squares (R,) fp32."""
     d = delta.astype(jnp.float32)
     return jnp.sum(d * d, axis=1)
+
+
+def pg_sumsq_stacked_ref(delta):
+    """delta: (L, R, N) -> per-(layer, replica) sum of squares (L, R) fp32."""
+    d = delta.astype(jnp.float32)
+    return jnp.sum(d * d, axis=2)
+
+
+def pg_combine_stacked_ref(delta, w, beta):
+    """delta: (L, R, N); w: (L, R); beta: (L,).
+    out[l] = beta[l] * sum_r w[l,r] delta[l,r]."""
+    avg = jnp.einsum("lr,lrn->ln", w.astype(jnp.float32),
+                     delta.astype(jnp.float32))
+    return beta.astype(jnp.float32)[:, None] * avg

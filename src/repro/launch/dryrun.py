@@ -26,7 +26,8 @@ from repro.dist.sharding import (SERVE_LONG_POLICY, SERVE_POLICY,
                                  TRAIN_POLICY_HIER, TRAIN_POLICY_MULTIPOD,
                                  use_policy)
 from repro.launch import specs as SP
-from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.launch.hlo_analysis import (collective_bytes, roofline_terms,
+                                       sync_overlap_report)
 from repro.launch.mesh import (make_hierarchical_mesh, make_production_mesh,
                                model_axis_size, replica_axes, replica_count)
 from repro.models import build_model
@@ -65,7 +66,8 @@ def build_train_program(cfg, shape, mesh, opts=()):
     step_fn = make_train_step(
         model, strategy, opt, sched,
         cast_params_dtype=jnp.bfloat16 if "cast_bf16" in opts else None,
-        grad_specs=st_specs["params"] if "grad_rs" in opts else None)
+        grad_specs=st_specs["params"] if "grad_rs" in opts else None,
+        streamed="monolithic_sync" not in opts)
     b_specs = SP.train_batch_specs(batch, cfg, mesh, R)
     jf = jax.jit(step_fn, in_shardings=(st_specs, b_specs))
     return jf, (state, batch)
@@ -150,6 +152,9 @@ def run_one(arch: str, shape_name: str, multi_pod: bool,
         txt = compiled.as_text()
         rec["hlo_bytes"] = len(txt)
         rec["collectives"] = collective_bytes(txt)
+        if shape.kind == "train":
+            # streamed layer-wise sync: per-group collective attribution
+            rec["sync_overlap"] = sync_overlap_report(txt)
         if verbose:
             print(f"[{rec['arch']} x {shape_name} x {rec['mesh']}] "
                   f"compile={rec['compile_s']}s "
@@ -169,7 +174,8 @@ def main():
                     choices=["single", "multi", "both"])
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--opts", default="",
-                    help="comma list: cast_bf16,expert_parallel,seq_parallel")
+                    help="comma list: cast_bf16,expert_parallel,seq_parallel,"
+                         "monolithic_sync")
     args = ap.parse_args()
     opts = tuple(o for o in args.opts.split(",") if o)
 

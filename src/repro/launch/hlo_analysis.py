@@ -140,6 +140,71 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# Streamed-sync attribution (core/stream.py tags every group's sync ops
+# with jax.named_scope('edit_sync/<group>'); XLA propagates the scope into
+# HLO op_name metadata, so post-compile we can attribute collectives to
+# sync groups and verify the layer-wise pipeline stayed per-group instead
+# of collapsing into one pre-forward block).
+# ---------------------------------------------------------------------------
+
+SYNC_SCOPE = "edit_sync"
+
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start)?\(")
+_OPNAME_RE = re.compile(r'op_name="([^"]*)"')
+
+
+def _sync_tag(line: str):
+    """Group tag of a sync-attributed collective HLO line, else None."""
+    if "-done" in line or not _COLL_RE.search(line):
+        return None
+    m = _OPNAME_RE.search(line)
+    if not m or SYNC_SCOPE + "/" not in m.group(1):
+        return None
+    return m.group(1).split(SYNC_SCOPE + "/", 1)[1].split("/", 1)[0]
+
+
+def sync_collective_tags(hlo_text: str) -> Dict[str, int]:
+    """Map edit_sync group tag -> count of collective ops attributed to it.
+    Streamed pipeline: one tag per module group; monolithic boundary sync:
+    the single tag 'all'."""
+    tags: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        tag = _sync_tag(line.strip())
+        if tag is not None:
+            tags[tag] = tags.get(tag, 0) + 1
+    return tags
+
+
+def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
+    """Assess the sync emission structure of a compiled train step.
+
+    ``streamed`` is True when the sync collectives carry >= 2 distinct
+    per-group tags (so each group's sync is an independent dataflow region
+    the latency-hiding scheduler can overlap with the previous group's
+    forward compute) rather than one monolithic pre-forward block.
+    ``n_sync_regions`` counts the distinct HLO computations holding sync
+    collectives — per-group conds lower to separate branch computations.
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        comps = {"entry": hlo_text}
+    tags = sync_collective_tags(hlo_text)
+    regions = set()
+    for name, text in comps.items():
+        if any(_sync_tag(line.strip()) for line in text.splitlines()):
+            regions.add(name)
+    return {
+        "tags": tags,
+        "n_sync_tags": len(tags),
+        "sync_collectives": sum(tags.values()),
+        "n_sync_regions": len(regions),
+        "streamed": len(tags) >= 2,
+    }
+
+
 # --- TPU v5e hardware constants (per chip) ---------------------------------
 PEAK_FLOPS = 197e12          # bf16
 HBM_BW = 819e9               # bytes/s

@@ -150,7 +150,10 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
         return x, loss_mask
 
     # -- train loss ----------------------------------------------------------
-    def loss_fn(params, batch):
+    def loss_fn(params, batch, param_provider=None):
+        """``param_provider``: optional per-segment hook threaded to
+        ``stack_forward`` — each module group's params pass through it at
+        their consumption point (streamed-sync cast; DESIGN.md §12)."""
         x, loss_mask = _decoder_input(params, batch)
         x = hint(x, "act")
         B, S = x.shape[:2]
@@ -158,7 +161,8 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
         enc_out = encode(params, batch["frames"]) if is_encdec else None
         h, aux = T.stack_forward(params["blocks"], x, cfg, pos, window=window,
                                  enc_out=enc_out, train=True, remat=remat,
-                                 remat_policy=remat_policy)
+                                 remat_policy=remat_policy,
+                                 param_provider=param_provider)
         h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
         # next-token labels over the full (possibly prefix-extended) sequence
         tokens = batch["tokens"]

@@ -295,8 +295,16 @@ def init_stack_cache(cfg, batch, cache_len, enc_len=0, dtype=jnp.bfloat16):
 
 
 def stack_forward(stack_params, x, cfg, positions, *, window=0, enc_out=None,
-                  train=True, remat=True, remat_policy=None):
-    """Full-sequence forward through all segments.  Returns (x, aux_total)."""
+                  train=True, remat=True, remat_policy=None,
+                  param_provider=None):
+    """Full-sequence forward through all segments.  Returns (x, aux_total).
+
+    ``param_provider``: optional ``(seg_idx, prog_idx, pos_params) ->
+    pos_params`` hook applied at each module group's consumption point —
+    the streamed-sync / cast layer uses it so per-group transforms (dtype
+    cast before the ZeRO-3 all-gather) are emitted where the group is
+    consumed, letting XLA overlap group g+1's collectives with group g's
+    compute (DESIGN.md §2, §12)."""
     segs = plan_segments(cfg)
     aux_total = jnp.zeros((), jnp.float32)
 
@@ -311,8 +319,11 @@ def stack_forward(stack_params, x, cfg, positions, *, window=0, enc_out=None,
             one = jax.checkpoint(one, prevent_cse=False, **kw)
         return one
 
-    for seg, seg_p in zip(segs, stack_params):
+    for si, (seg, seg_p) in enumerate(zip(segs, stack_params)):
         layer_fns = [make_layer_fn(prog) for prog in seg.programs]
+        if param_provider is not None:
+            seg_p = [param_provider(si, pi, pp)
+                     for pi, pp in enumerate(seg_p)]
         if seg.kind == "unroll":
             for fn, lp in zip(layer_fns, seg_p):
                 x, aux = fn(lp, x, positions, enc_out)

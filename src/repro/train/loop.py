@@ -30,6 +30,13 @@ class TrainerConfig:
     ckpt_dir: Optional[str] = None
     ckpt_every: int = 0
     seed: int = 0
+    # FSDP byte-halving: cast fp32 masters to this dtype before the
+    # per-layer all-gather (None | jnp dtype | dtype name string)
+    cast_params_dtype: Optional[Any] = None
+    # ZeRO-2 gradient sharding: PartitionSpec pytree matching params
+    grad_specs: Optional[Any] = None
+    # streamed layer-wise sync pipeline (False = monolithic boundary sync)
+    streamed: bool = True
 
 
 class Trainer:
@@ -46,8 +53,13 @@ class Trainer:
         self.active_fn = active_fn
         self.state = init_train_state(model, strategy, self.inner_opt,
                                       jax.random.PRNGKey(tcfg.seed))
+        cast = tcfg.cast_params_dtype
+        if isinstance(cast, str):
+            cast = jnp.dtype(cast)
         self._step_fn = jax.jit(make_train_step(
-            model, strategy, self.inner_opt, self.lr_sched))
+            model, strategy, self.inner_opt, self.lr_sched,
+            cast_params_dtype=cast, grad_specs=tcfg.grad_specs,
+            streamed=tcfg.streamed))
         self._eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[0])
         self.history: List[Dict[str, float]] = []
 
@@ -77,6 +89,10 @@ class Trainer:
                 self.state, m = self._step_fn(self.state, batch)
             rec = {"step": step, "loss": float(m["loss"]),
                    "lr": float(m["lr"]), "grad_norm": float(m["grad_norm"])}
+            # Algorithm-2 sync telemetry (zeros off the sync boundary)
+            rec.update({k: float(m[k]) for k in
+                        ("synced", "anomalous_frac", "rollback_frac",
+                         "mean_norm", "mean_beta") if k in m})
             if self.tcfg.eval_every and (step + 1) % self.tcfg.eval_every == 0:
                 rec["ppl"] = self.eval_ppl()
             self.history.append(rec)

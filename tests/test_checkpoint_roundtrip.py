@@ -1,0 +1,111 @@
+"""Checkpoint round-trip of the group-aligned train state (PR-3 layout):
+save mid-round, restore, and the continued trajectory must be bit-identical
+— including migration from the pre-PR-3 whole-tree state layout.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.store import load_metadata, restore, save
+from repro.configs import get_config
+from repro.core import (Strategy, init_train_state, make_train_step,
+                        migrate_train_state)
+from repro.core import penalty as PEN
+from repro.models import build_model
+from repro.optim import AdamW, constant
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(
+        get_config("llama_350m").reduced(), name="tiny-ckpt",
+        d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+        vocab_size=128)
+    return build_model(cfg, compute_dtype=jnp.float32, remat=False)
+
+
+def _batches(model, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    out = []
+    for _ in range(n):
+        key, k = jax.random.split(key)
+        out.append({"tokens": jax.random.randint(
+            k, (4, 16), 0, model.cfg.vocab_size)})
+    return out
+
+
+def _drive(step, state, batches):
+    metrics = []
+    for b in batches:
+        state, m = step(state, b)
+        metrics.append(m)
+    return state, metrics
+
+
+def _assert_states_equal(a, b):
+    fa = jax.tree_util.tree_flatten_with_path(a)[0]
+    fb = jax.tree.leaves(b)
+    assert len(fa) == len(fb)
+    for (path, x), y in zip(fa, fb):
+        np.testing.assert_array_equal(
+            np.asarray(x), np.asarray(y),
+            err_msg=jax.tree_util.keystr(path))
+
+
+@pytest.mark.parametrize("name", ["edit", "co2_star"])
+def test_group_aligned_state_roundtrip_resumes_bit_identical(model, tmp_path,
+                                                             name):
+    """Save mid-round (between sync boundaries), restore, continue: the
+    restored trajectory's metrics and final state match bit-for-bit."""
+    strat = Strategy(name=name, replicas=2, sync_interval=3, warmup_steps=1)
+    opt = AdamW()
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-2)))
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(3))
+    state, _ = _drive(step, state, _batches(model, 5, seed=1))  # mid-round
+
+    save(str(tmp_path / "ck"), state, {"step": 5, "strategy": name})
+    restored = restore(str(tmp_path / "ck"))
+    assert load_metadata(str(tmp_path / "ck"))["strategy"] == name
+    _assert_states_equal(state, restored)
+
+    cont = _batches(model, 4, seed=2)  # crosses the step-7 sync boundary
+    s_a, m_a = _drive(step, state, cont)
+    s_b, m_b = _drive(step, restored, cont)
+    for ma, mb in zip(m_a, m_b):
+        assert float(ma["loss"]) == float(mb["loss"])
+        assert float(ma["synced"]) == float(mb["synced"])
+    _assert_states_equal(s_a, s_b)
+
+
+def test_migration_from_whole_tree_layout(model, tmp_path):
+    """A pre-PR-3 checkpoint stores anchor/outer_m (and prev_delta) as
+    whole-model trees; migrate_train_state converts it and training
+    continues bit-identically with the group-aligned twin."""
+    cfg = model.cfg
+    strat = Strategy(name="edit", replicas=2, sync_interval=3, warmup_steps=1)
+    opt = AdamW()
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-2)))
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(3))
+    state, _ = _drive(step, state, _batches(model, 5, seed=1))
+
+    # materialize the OLD layout: merge the group dicts back to whole trees
+    template = jax.tree.map(lambda a: a[0], state["params"])
+    old = dict(state)
+    old["anchor"] = PEN.merge_groups(state["anchor"], template)
+    old["outer_m"] = PEN.merge_groups(state["outer_m"], template)
+    save(str(tmp_path / "old"), old, {"layout": "whole-tree"})
+
+    migrated = migrate_train_state(restore(str(tmp_path / "old")), cfg)
+    _assert_states_equal(state, migrated)
+    # idempotent on the new layout
+    _assert_states_equal(state, migrate_train_state(migrated, cfg))
+
+    cont = _batches(model, 4, seed=2)
+    s_a, m_a = _drive(step, state, cont)
+    s_b, m_b = _drive(step, migrated, cont)
+    for ma, mb in zip(m_a, m_b):
+        assert float(ma["loss"]) == float(mb["loss"])
+    _assert_states_equal(s_a, s_b)

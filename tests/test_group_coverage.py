@@ -1,0 +1,70 @@
+"""Property: penalty.module_groups + split_by_group/merge_groups form an
+exact partition of the parameter tree for every config family — no leaf may
+silently escape the sync (a leaf outside every group would never be synced
+and silently diverge across replicas).
+
+Uses jax.eval_shape so all seven families (dense / MLA+MoE unroll+scan /
+MoE / mamba / jamba-hybrid / encdec / vlm) are checked structurally without
+allocating parameters.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import penalty as PEN
+from repro.models import build_model
+
+FAMILY_ARCHS = [
+    ("dense", "qwen3_4b"),
+    ("mla_moe_unroll_scan", "deepseek_v3_671b"),
+    ("moe", "olmoe_1b_7b"),
+    ("mamba", "falcon_mamba_7b"),
+    ("jamba_hybrid", "jamba_v0_1_52b"),
+    ("encdec", "seamless_m4t_medium"),
+    ("vlm", "paligemma_3b"),
+]
+
+
+@pytest.mark.parametrize("family,arch", FAMILY_ARCHS,
+                         ids=[f for f, _ in FAMILY_ARCHS])
+def test_groups_partition_every_param_leaf(family, arch):
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    grouped = PEN.split_by_group(params, cfg)
+
+    # group keys == the declared module groups, exactly
+    assert set(grouped) == {g.key for g in PEN.module_groups(cfg)}
+
+    # every leaf lands in exactly one group (identity-level partition)
+    all_ids = [id(l) for l in jax.tree.leaves(params)]
+    group_ids = [id(l) for sub in grouped.values()
+                 for l in jax.tree.leaves(sub)]
+    assert sorted(all_ids) == sorted(group_ids)
+
+    # merge is the exact inverse: same treedef, same leaves in order
+    merged = PEN.merge_groups(grouped, params)
+    assert (jax.tree_util.tree_structure(merged)
+            == jax.tree_util.tree_structure(params))
+    assert [id(l) for l in jax.tree.leaves(merged)] == all_ids
+
+
+@pytest.mark.parametrize("family,arch", FAMILY_ARCHS,
+                         ids=[f for f, _ in FAMILY_ARCHS])
+def test_group_shapes_declare_their_stacking(family, arch):
+    """Each group's declared (n_rep, stacked) matches its leaves: stacked
+    groups carry the layer-repeat dim right after the (absent) replica
+    prefix — the contract the (R, n_rep) EMA stats and the (L, R, N)
+    fused-kernel layout rely on."""
+    cfg = get_config(arch).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+    params = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    grouped = PEN.split_by_group(params, cfg)
+    for g in PEN.module_groups(cfg):
+        leaves = jax.tree.leaves(grouped[g.key])
+        assert leaves, g.key
+        if g.stacked:
+            assert all(l.shape[0] == g.n_rep for l in leaves), g.key
+        else:
+            assert g.n_rep == 1

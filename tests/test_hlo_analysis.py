@@ -1,10 +1,11 @@
 """HLO collective parser: shape-bytes, computation splitting, while-loop
-trip-count multipliers."""
+trip-count multipliers, streamed-sync attribution."""
 import textwrap
 
 from repro.launch.hlo_analysis import (_shape_bytes, _split_computations,
                                        _while_trip_counts, collective_bytes,
-                                       roofline_terms)
+                                       roofline_terms, sync_collective_tags,
+                                       sync_overlap_report)
 
 
 def test_shape_bytes():
@@ -55,6 +56,46 @@ def test_collective_bytes_with_loop_multiplier():
     # all-reduce: 8 f32 x 12 (in body) + 32 f32 (entry) = 384 + 128
     assert cb["all-reduce"] == 8 * 4 * 12 + 16 * 2 * 4
     assert cb["count"] == 25
+
+
+SYNC_HLO = textwrap.dedent("""\
+    HloModule jit_train_step
+
+    %region_1 (a: f32[8]) -> f32[8] {
+      %a = f32[8] parameter(0)
+      ROOT %ar = f32[8] all-reduce(%a), to_apply=%sum, metadata={op_name="jit(train_step)/edit_sync/globals/reduce_sum" source_file="stream.py"}
+    }
+
+    %region_2 (b: f32[2,8]) -> f32[2,8] {
+      %b = f32[2,8] parameter(0)
+      %ar2 = f32[2,8] all-reduce-start(%b), to_apply=%sum, metadata={op_name="jit(train_step)/edit_sync/blocks_0_0/reduce_sum"}
+      ROOT %d = f32[2,8] all-reduce-done(%ar2)
+    }
+
+    ENTRY %main (p0: f32[8]) -> f32[8] {
+      %p0 = f32[8] parameter(0)
+      %fw = f32[8] all-gather(%p0), dimensions={0}, metadata={op_name="jit(train_step)/transformer/fsdp_gather"}
+      ROOT %out = f32[8] add(%p0, %p0)
+    }
+    """)
+
+
+def test_sync_collective_tags_attributes_by_scope():
+    tags = sync_collective_tags(SYNC_HLO)
+    # the fsdp all-gather has no edit_sync scope -> excluded; the -done op
+    # of the async pair is not double-counted
+    assert tags == {"globals": 1, "blocks_0_0": 1}
+
+
+def test_sync_overlap_report_streamed_vs_monolithic():
+    rep = sync_overlap_report(SYNC_HLO)
+    assert rep["streamed"] is True
+    assert rep["n_sync_tags"] == 2 and rep["n_sync_regions"] == 2
+    mono = SYNC_HLO.replace("edit_sync/globals", "edit_sync/all").replace(
+        "edit_sync/blocks_0_0", "edit_sync/all")
+    rep = sync_overlap_report(mono)
+    assert rep["streamed"] is False
+    assert rep["tags"] == {"all": 2}
 
 
 def test_roofline_terms_pick_bottleneck():

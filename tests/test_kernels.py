@@ -7,7 +7,8 @@ import pytest
 
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.pg_penalty import pg_combine, pg_sumsq
+from repro.kernels.pg_penalty import (pg_combine, pg_combine_stacked,
+                                      pg_sumsq, pg_sumsq_stacked)
 from repro.kernels.selective_scan import selective_scan
 
 KEY = jax.random.PRNGKey(42)
@@ -72,6 +73,61 @@ def test_pg_kernels(R, N, bn, dtype):
     exp = ref.pg_combine_ref(d, w, 0.37).astype(dtype)
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("L,R,N,bn", [(3, 4, 4096, 2048), (1, 8, 2048, 2048),
+                                      (5, 2, 8192, 4096)])
+def test_pg_stacked_kernels(L, R, N, bn, dtype):
+    """Layer-batched variants: the scan segment's repeat dim rides the
+    Pallas grid so one call covers a whole module group."""
+    ks = jax.random.split(KEY, 3)
+    d = jax.random.normal(ks[0], (L, R, N), dtype)
+    ss = pg_sumsq_stacked(d, block_n=bn, interpret=True)
+    np.testing.assert_allclose(np.asarray(ss),
+                               np.asarray(ref.pg_sumsq_stacked_ref(d)),
+                               rtol=2e-3)
+    w = jax.nn.softmax(jax.random.normal(ks[1], (L, R)), axis=1)
+    beta = jax.random.uniform(ks[2], (L,), jnp.float32, 0.1, 1.0)
+    out = pg_combine_stacked(d, w, beta, block_n=bn, interpret=True)
+    exp = ref.pg_combine_stacked_ref(d, w, beta).astype(dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_pg_penalty_group_op_kernel_matches_ref():
+    """The fused hot-path op: interpret-mode Pallas kernels == jnp ref path
+    (including the zero-padding of non-block-aligned N)."""
+    from repro.kernels.ops import pg_penalty_group_op
+    L, R, N = 2, 4, 5000   # N not a multiple of the kernel block -> pads
+    ks = jax.random.split(KEY, 3)
+    d = jax.random.normal(ks[0], (L, R, N), jnp.float32)
+    mu = jnp.abs(jax.random.normal(ks[1], (L, R))) + 50.0
+    sigma = jnp.ones((L, R)) * 5.0
+    outs = {}
+    for impl in ("ref", "interpret"):
+        outs[impl] = pg_penalty_group_op(d, mu, sigma, jnp.int32(20),
+                                         impl=impl)
+    for a, b in zip(outs["ref"][:4], outs["interpret"][:4]):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-4, rtol=1e-4)
+
+
+def test_pg_penalty_group_op_plain_mean_mode():
+    """With anomaly/weighting/clip disabled the op reduces to the replica
+    mean — the DiLoCo/Post-Local-SGD/CO2* sync on the same primitive."""
+    from repro.kernels.ops import pg_penalty_group_op
+    L, R, N = 2, 4, 512
+    d = jax.random.normal(KEY, (L, R, N), jnp.float32)
+    dh, rb, *_ = pg_penalty_group_op(
+        d, jnp.zeros((L, R)), jnp.ones((L, R)), jnp.int32(5),
+        enable_anomaly=False, enable_weighting=False, enable_clip=False,
+        impl="ref")
+    np.testing.assert_allclose(np.asarray(dh), np.asarray(d.mean(axis=1)),
+                               atol=1e-6, rtol=1e-6)
+    assert not bool(rb.any())
 
 
 def test_pg_penalty_op_matches_core_penalty():

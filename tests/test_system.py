@@ -68,7 +68,8 @@ def test_elastic_resume_scale_down(trained):
     state2 = init_train_state(model, strat2, opt, jax.random.PRNGKey(0))
     state2["params"] = jax.tree.map(
         lambda a: jnp.broadcast_to(a[None], (2,) + a.shape), p0)
-    state2["anchor"] = p0
+    from repro.core.penalty import split_by_group
+    state2["anchor"] = split_by_group(p0, model.cfg)
     # SAME corpus (seed fixes the Markov permutation); only the worker
     # count / global batch changes across the elastic event
     data2 = SyntheticLM(model.cfg.vocab_size, 64, 8, seed=3, markov_q=0.9,
