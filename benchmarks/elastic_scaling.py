@@ -1,0 +1,98 @@
+"""Elastic scaling benchmark: wall-clock + loss across a 4 -> 8 -> 2
+replica schedule under a straggler WorkerSpeedModel.
+
+The run is a real TrainSession segment schedule (losses are measured, the
+seams use the full consolidate/reshard path); cluster wall-clock is
+SIMULATED with the fig5 protocol — per-worker per-step compute times from
+a WorkerSpeedModel with one consistent straggler, EDiT round semantics
+(workers run freely between boundaries, rounds end at the slowest
+worker's cumulative time, layer-wise-overlapped sync leaves only a small
+residue).  The membership change itself costs one consolidation (a
+boundary sync it replaces) plus a resharding term for moving the joining
+replicas' weights.
+
+CSV rows (harness format ``name,us_per_call,derived``): one row per
+segment with its simulated step time and mean loss, plus an elastic-vs-
+fixed total: the elastic schedule sheds the straggler at the last seam,
+so useful-steps/time beats the fixed 4-replica run that keeps it.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import FAST, bench_model, emit
+from repro.core import Strategy, WorkerSpeedModel
+from repro.data import SyntheticLM
+from repro.elastic import Segment, TrainSession
+from repro.train import TrainerConfig
+
+TAU = 4
+WARM = 4
+EDIT_SYNC_RESIDUE = 0.02     # fig5: overlapped sync leaves ~2% of a step
+RESHARD_COST = 0.25          # one-off: broadcast anchor to joiners (DCN)
+
+
+def _sim_segment_time(n_workers: int, steps: int, lag: float,
+                      seed: int) -> float:
+    """EDiT wall-clock for one segment: per round, the slowest worker's
+    cumulative time + the non-overlapped sync residue."""
+    speeds = WorkerSpeedModel(n_workers=n_workers,
+                              consistent_lag={0: lag} if lag else {},
+                              jitter=0.05, seed=seed)
+    total, cum = 0.0, np.zeros(n_workers)
+    for s in range(steps):
+        cum += speeds.step_times()
+        if (s + 1) % TAU == 0:
+            total += cum.max() + EDIT_SYNC_RESIDUE
+            cum[:] = 0.0
+    total += cum.max() if steps % TAU else 0.0
+    return total
+
+
+def main():
+    rounds = 2 if FAST else 6
+    seg_steps = rounds * TAU
+    model = bench_model(seq_len=32, vocab=128)
+    data = SyntheticLM(model.cfg.vocab_size, 32, 16, seed=5, markov_q=0.9,
+                       replicas=4)
+    strat = Strategy(name="edit", replicas=4, sync_interval=TAU,
+                     warmup_steps=WARM)
+    total_steps = WARM + 3 * seg_steps
+    sess = TrainSession(model, strat, data,
+                        TrainerConfig(total_steps=total_steps,
+                                      inner_lr=3e-3, lr_warmup=WARM,
+                                      log_every=0))
+    schedule = [Segment(steps=WARM + seg_steps),          # R=4, straggler
+                Segment(steps=seg_steps, replicas=8),     # scale out
+                Segment(steps=seg_steps, replicas=2)]     # shed stragglers
+    sess.run(schedule)
+
+    # simulated wall-clock per segment (worker 0 is a consistent straggler
+    # until the final shrink drops it)
+    lags = [0.5, 0.5, 0.0]
+    reps = [4, 8, 2]
+    steps = [WARM + seg_steps, seg_steps, seg_steps]
+    bounds = np.cumsum([0] + steps)
+    total_time = 0.0
+    for i, (r, n, lag) in enumerate(zip(reps, steps, lags)):
+        t = _sim_segment_time(r, n, lag, seed=i)
+        if i:
+            t += RESHARD_COST
+        total_time += t
+        losses = [h["loss"] for h in sess.history[bounds[i]:bounds[i + 1]]]
+        assert all(np.isfinite(losses)), f"segment {i} diverged"
+        emit(f"elastic/seg{i}_R{r}", 1e6 * t / n,
+             f"sim_time={t:.2f};mean_loss={np.mean(losses):.4f}")
+
+    fixed_time = _sim_segment_time(4, sum(steps), lag=0.5, seed=9)
+    final = np.mean([h["loss"] for h in sess.history[-TAU:]])
+    speedup = (sum(steps) / total_time) / (sum(steps) / fixed_time)
+    emit("elastic/total_4_8_2", 1e6 * total_time / sum(steps),
+         f"final_loss={final:.4f};vs_fixed_R4={speedup:.2f}x")
+    assert np.isfinite(final)
+    # shedding the straggler must win wall-clock vs dragging it along
+    assert speedup > 1.0, speedup
+
+
+if __name__ == "__main__":
+    main()

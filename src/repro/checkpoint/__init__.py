@@ -1,1 +1,13 @@
-from repro.checkpoint.store import load_metadata, restore, save
+from repro.checkpoint.store import (AsyncCheckpointer, CheckpointError,
+                                    CheckpointNotFoundError,
+                                    LeafMismatchError, MissingLeafError,
+                                    PartialCheckpointError, leaf_entries,
+                                    load_metadata, register_namedtuple,
+                                    restore, save)
+
+__all__ = [
+    "AsyncCheckpointer", "CheckpointError", "CheckpointNotFoundError",
+    "LeafMismatchError", "MissingLeafError", "PartialCheckpointError",
+    "leaf_entries", "load_metadata", "register_namedtuple", "restore",
+    "save",
+]

@@ -1,15 +1,48 @@
-"""Sharded checkpoint save/restore (no orbax offline).
+"""Topology-independent sharded checkpoint store (format v2, no pickle).
 
-Each leaf is written as a .npy under a directory keyed by its flattened
-tree path; structure + dtypes + a user-metadata dict go into a msgpack
-manifest.  Restore reassembles the pytree and (optionally) device_puts
-leaves with given shardings.  Works for train states of any strategy.
+Each pytree leaf is one ``.npy`` file; structure, dtypes, shapes and
+topology tags all live in a msgpack manifest.  The pytree structure is
+reconstructed purely from *typed keypaths* recorded per leaf — a list of
+``(kind, key)`` steps where kind is ``"d"`` (dict), ``"l"`` (list),
+``"t"`` (tuple) or ``"a:<ClassName>"`` (namedtuple field) — so restore
+needs no pickled treedef and a checkpoint written on one replica/mesh
+topology can be opened on any other (``repro.elastic`` does the actual
+R→R′ transform).
+
+v2 manifest layout::
+
+    {"version": 2,
+     "leaves": [{"name": dotted path (debugging),
+                 "file": "<idx>__<name>.npy",
+                 "path": [[kind, key], ...],
+                 "dtype": "bfloat16", "shape": [4, 8],
+                 "replica_axis": 0 | None,   # leading Local-SGD replica axis
+                 "group": "blocks/0/0" | None},  # penalty.module_groups tag
+                ...,
+                {"path": [...], "none": true},      # None leaf
+                {"path": [...], "empty": "d"}],     # empty container
+     "metadata": {...}}
+
+Leaf files are written first and the manifest last (atomically via a
+temp-file rename), so an interrupted save is detectable as a directory
+with leaf files but no manifest — :func:`restore` raises
+:class:`PartialCheckpointError` for it instead of a cryptic unflatten
+failure.  :class:`AsyncCheckpointer` moves ``device_get`` + file I/O to a
+background thread so checkpointing stops stalling the step loop (jax
+arrays are immutable, so snapshotting a functional train state is free).
+
+v1 directories (pickled-treedef era) are still readable through a
+pickle-free shim that rebuilds the structure heuristically from the v1
+dotted name strings; the shim is kept for one release only.
 """
 from __future__ import annotations
 
 import os
 import re
-from typing import Any, Dict, Optional
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -17,74 +50,422 @@ import ml_dtypes
 import msgpack
 import numpy as np
 
+FORMAT_VERSION = 2
+MANIFEST = "MANIFEST.msgpack"
+
 _NONNATIVE = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
               "float8_e5m2": np.uint8}
 
 
-def _path_str(path) -> str:
-    parts = []
-    for k in path:
-        if hasattr(k, "key"):
-            parts.append(str(k.key))
-        elif hasattr(k, "idx"):
-            parts.append(str(k.idx))
-        else:
-            parts.append(str(k))
-    return ".".join(parts)
+# ---------------------------------------------------------------------------
+# Errors (precise by construction — no cryptic numpy/unflatten failures)
+# ---------------------------------------------------------------------------
+
+class CheckpointError(Exception):
+    """Base class for checkpoint store failures."""
 
 
-def save(directory: str, tree: Any, metadata: Optional[Dict] = None) -> None:
-    os.makedirs(directory, exist_ok=True)
-    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
-    names, dtypes = [], []
-    for path, leaf in flat:
-        name = _path_str(path)
-        names.append(name)
-        arr = np.asarray(jax.device_get(leaf))
-        dtypes.append(str(arr.dtype))
-        view = _NONNATIVE.get(str(arr.dtype))
-        if view is not None:
-            arr = arr.view(view)
-        np.save(os.path.join(directory, _sanitize(name) + ".npy"), arr)
-    manifest = {
-        "treedef": str(treedef),
-        "names": names,
-        "dtypes": dtypes,
-        "metadata": metadata or {},
-    }
-    with open(os.path.join(directory, "MANIFEST.msgpack"), "wb") as f:
-        f.write(msgpack.packb(manifest))
-    # store treedef via a pickled-example trick: an all-None tree example
-    example = jax.tree_util.tree_unflatten(treedef, [None] * len(flat))
-    import pickle
-    with open(os.path.join(directory, "treedef.pkl"), "wb") as f:
-        pickle.dump(example, f)
+class CheckpointNotFoundError(CheckpointError):
+    """The directory does not exist or contains no checkpoint at all."""
+
+
+class PartialCheckpointError(CheckpointError):
+    """Leaf files exist but the manifest is missing — the save that wrote
+    this directory was interrupted before its commit point."""
+
+
+class MissingLeafError(CheckpointError):
+    """The manifest names a leaf whose ``.npy`` file is absent."""
+
+
+class LeafMismatchError(CheckpointError):
+    """A leaf file's dtype/shape disagrees with the manifest."""
+
+
+# ---------------------------------------------------------------------------
+# Structure <-> typed keypaths
+# ---------------------------------------------------------------------------
+
+_NT_REGISTRY: Dict[str, type] = {}
+
+
+def register_namedtuple(cls: type) -> type:
+    """Register a NamedTuple class so v2 restore can rebuild its nodes.
+    (The train-state classes are pre-registered; call this for custom
+    state containers before :func:`restore`.)"""
+    _NT_REGISTRY[cls.__name__] = cls
+    return cls
+
+
+def _is_namedtuple(x) -> bool:
+    return isinstance(x, tuple) and hasattr(x, "_fields")
+
+
+class _Empty:
+    def __init__(self, kind: str):
+        self.kind = kind
+
+
+def _flatten(tree, path=()):
+    """Yield (typed_path, leaf) depth-first; records None leaves and empty
+    containers explicitly so the structure round-trips exactly."""
+    if tree is None:
+        yield path, None
+    elif isinstance(tree, dict):
+        if not tree:
+            yield path, _Empty("d")
+        for k in sorted(tree.keys(), key=str):
+            yield from _flatten(tree[k], path + (("d", k),))
+    elif _is_namedtuple(tree):
+        kind = "a:" + type(tree).__name__
+        for f in tree._fields:
+            yield from _flatten(getattr(tree, f), path + ((kind, f),))
+    elif isinstance(tree, (list, tuple)):
+        kind = "l" if isinstance(tree, list) else "t"
+        if not tree:
+            yield path, _Empty(kind)
+        for i, v in enumerate(tree):
+            yield from _flatten(v, path + ((kind, i),))
+    else:
+        yield path, tree
+
+
+def _name(path: Sequence) -> str:
+    return ".".join(str(k) for _, k in path)
 
 
 def _sanitize(name: str) -> str:
     return re.sub(r"[^A-Za-z0-9_.-]", "_", name)
 
 
-def restore(directory: str, shardings: Any = None) -> Any:
-    import pickle
-    with open(os.path.join(directory, "MANIFEST.msgpack"), "rb") as f:
-        manifest = msgpack.unpackb(f.read())
-    with open(os.path.join(directory, "treedef.pkl"), "rb") as f:
-        example = pickle.load(f)
-    treedef = jax.tree_util.tree_structure(
-        example, is_leaf=lambda x: x is None)
-    leaves = []
-    for name, dt in zip(manifest["names"], manifest["dtypes"]):
-        arr = np.load(os.path.join(directory, _sanitize(name) + ".npy"))
-        if dt in _NONNATIVE:
-            arr = arr.view(getattr(ml_dtypes, dt))
-        leaves.append(jnp.asarray(arr))
-    tree = jax.tree_util.tree_unflatten(treedef, leaves)
+def _build(items: List[Tuple[Sequence, Any]], depth: int, where: str,
+           fill_missing_fields: bool = False):
+    """Rebuild one pytree node from (typed_path, value) pairs.  ``items``
+    all share the same path prefix of length ``depth``.
+    ``fill_missing_fields``: v1-shim mode — the v1 writer dropped None
+    namedtuple fields, so absent fields rebuild as None there; v2 records
+    them explicitly, so a missing field is manifest corruption."""
+    if len(items) == 1 and len(items[0][0]) == depth:
+        v = items[0][1]
+        if isinstance(v, _Empty):
+            return {"d": {}, "l": [], "t": ()}[v.kind]
+        return v
+    kinds = {it[0][depth][0] for it in items}
+    if len(kinds) != 1:
+        raise CheckpointError(
+            f"inconsistent node kinds {sorted(kinds)} at '{where}' — "
+            f"manifest keypaths are corrupt")
+    kind = kinds.pop()
+    children: "OrderedDict[Any, List]" = OrderedDict()
+    for p, v in items:
+        children.setdefault(p[depth][1], []).append((p, v))
+
+    def build_child(k):
+        return _build(children[k], depth + 1,
+                      f"{where}.{k}" if where else str(k),
+                      fill_missing_fields)
+
+    if kind == "d":
+        return {k: build_child(k) for k in children}
+    if kind in ("l", "t"):
+        idx = sorted(children)
+        if idx != list(range(len(idx))):
+            missing = sorted(set(range(max(idx) + 1)) - set(idx))
+            raise CheckpointError(
+                f"sequence node '{where}' is missing indices {missing} — "
+                f"partial or corrupt checkpoint")
+        seq = [build_child(i) for i in idx]
+        return seq if kind == "l" else tuple(seq)
+    if kind.startswith("a:"):
+        cls_name = kind[2:]
+        cls = _NT_REGISTRY.get(cls_name)
+        if cls is None:
+            raise CheckpointError(
+                f"unknown namedtuple class '{cls_name}' at '{where}' — "
+                f"register it with repro.checkpoint.register_namedtuple "
+                f"before restore()")
+        fields = {f: build_child(f) for f in children}
+        missing = [f for f in cls._fields if f not in fields]
+        if missing and not fill_missing_fields:
+            raise CheckpointError(
+                f"namedtuple node '{where}' ({cls_name}) is missing "
+                f"fields {missing} from the manifest — partial or corrupt "
+                f"checkpoint")
+        for f in missing:
+            fields[f] = None
+        return cls(**fields)
+    raise CheckpointError(f"unknown keypath kind '{kind}' at '{where}'")
+
+
+# ---------------------------------------------------------------------------
+# Save
+# ---------------------------------------------------------------------------
+
+def save(directory: str, tree: Any, metadata: Optional[Dict] = None, *,
+         leaf_info: Optional[Callable[[Tuple], Optional[Dict]]] = None) -> None:
+    """Write ``tree`` as a v2 checkpoint.
+
+    ``leaf_info(typed_path) -> {"replica_axis": ..., "group": ...}`` lets
+    topology-aware callers (``repro.elastic``) tag each leaf; the tags ride
+    in the manifest and are what make the checkpoint reshardable without
+    guessing axis semantics from shapes.
+    """
+    os.makedirs(directory, exist_ok=True)
+    # overwrite protection: drop the commit marker FIRST, so a save that
+    # dies mid-overwrite leaves a detectably-partial directory instead of
+    # the old manifest pointing at a mix of old and new leaf files
+    old_manifest = os.path.join(directory, MANIFEST)
+    if os.path.exists(old_manifest):
+        os.remove(old_manifest)
+    entries: List[Dict] = []
+    for i, (path, leaf) in enumerate(_flatten(tree)):
+        plist = [[k, key] for k, key in path]
+        if leaf is None:
+            entries.append({"path": plist, "none": True})
+            continue
+        if isinstance(leaf, _Empty):
+            entries.append({"path": plist, "empty": leaf.kind})
+            continue
+        name = _name(path)
+        arr = np.asarray(jax.device_get(leaf))
+        dtype = str(arr.dtype)
+        view = _NONNATIVE.get(dtype)
+        fname = f"{i:06d}__{_sanitize(name)[:96]}.npy"
+        np.save(os.path.join(directory, fname),
+                arr.view(view) if view is not None else arr)
+        entry = {"name": name, "file": fname, "path": plist,
+                 "dtype": dtype, "shape": list(arr.shape),
+                 "replica_axis": None, "group": None}
+        if leaf_info is not None:
+            entry.update(leaf_info(path) or {})
+        entries.append(entry)
+    manifest = {"version": FORMAT_VERSION, "leaves": entries,
+                "metadata": metadata or {}}
+    tmp = os.path.join(directory, MANIFEST + ".tmp")
+    with open(tmp, "wb") as f:
+        f.write(msgpack.packb(manifest))
+    os.replace(tmp, os.path.join(directory, MANIFEST))  # commit point
+    # drop leaf files a previous save wrote that this tree no longer has
+    live = {e["file"] for e in entries if "file" in e}
+    for fn in os.listdir(directory):
+        if fn.endswith(".npy") and fn not in live:
+            os.remove(os.path.join(directory, fn))
+
+
+# ---------------------------------------------------------------------------
+# Restore
+# ---------------------------------------------------------------------------
+
+def _read_manifest(directory: str) -> Dict:
+    mpath = os.path.join(directory, MANIFEST)
+    if not os.path.isdir(directory):
+        raise CheckpointNotFoundError(f"no checkpoint directory: {directory}")
+    if not os.path.exists(mpath):
+        stray = [f for f in os.listdir(directory) if f.endswith(".npy")]
+        if stray:
+            raise PartialCheckpointError(
+                f"{directory} has {len(stray)} leaf file(s) but no "
+                f"{MANIFEST} — the save was interrupted before its commit "
+                f"point; the checkpoint is unusable")
+        raise CheckpointNotFoundError(
+            f"{directory} contains no {MANIFEST}")
+    with open(mpath, "rb") as f:
+        return msgpack.unpackb(f.read(), strict_map_key=False)
+
+
+def _load_array(directory: str, fname: str, name: str,
+                dtype: Optional[str], shape: Optional[Sequence[int]]):
+    fpath = os.path.join(directory, fname)
+    if not os.path.exists(fpath):
+        raise MissingLeafError(
+            f"leaf '{name}' is listed in the manifest but its file "
+            f"'{fname}' is missing from {directory}")
+    try:
+        arr = np.load(fpath)
+    except Exception as e:  # corrupt npy header / truncated write
+        raise LeafMismatchError(
+            f"leaf '{name}' ({fname}) failed to load: {e}") from e
+    if dtype in _NONNATIVE:
+        arr = arr.view(getattr(ml_dtypes, dtype))
+    if dtype is not None and str(arr.dtype) != dtype:
+        raise LeafMismatchError(
+            f"leaf '{name}' has dtype {arr.dtype} on disk but the manifest "
+            f"records {dtype}")
+    if shape is not None and list(arr.shape) != list(shape):
+        raise LeafMismatchError(
+            f"leaf '{name}' has shape {list(arr.shape)} on disk but the "
+            f"manifest records {list(shape)}")
+    return jnp.asarray(arr)
+
+
+def restore(directory: str, shardings: Any = None, *,
+            manifest: Optional[Dict] = None) -> Any:
+    """Rebuild the pytree from the manifest keypaths (no pickle).  Raises
+    :class:`CheckpointError` subclasses with precise messages on missing
+    leaf files, dtype/shape drift vs the manifest, and interrupted saves.
+    ``shardings``: optional pytree passed to ``jax.device_put``.
+    ``manifest``: a pre-read manifest dict (saves a second decode for
+    callers that already inspected the metadata)."""
+    if manifest is None:
+        manifest = _read_manifest(directory)
+    if manifest.get("version", 1) < 2:
+        tree = _restore_v1(directory, manifest)
+    else:
+        items = []
+        for e in manifest["leaves"]:
+            path = tuple((k, key) for k, key in e["path"])
+            if e.get("none"):
+                items.append((path, None))
+            elif e.get("empty"):
+                items.append((path, _Empty(e["empty"])))
+            else:
+                items.append((path, _load_array(
+                    directory, e["file"], e.get("name", _name(path)),
+                    e.get("dtype"), e.get("shape"))))
+        if not items:
+            raise CheckpointError(f"{directory}: manifest lists no leaves")
+        tree = _build(items, 0, "")
     if shardings is not None:
         tree = jax.device_put(tree, shardings)
     return tree
 
 
 def load_metadata(directory: str) -> Dict:
-    with open(os.path.join(directory, "MANIFEST.msgpack"), "rb") as f:
-        return msgpack.unpackb(f.read())["metadata"]
+    return _read_manifest(directory)["metadata"]
+
+
+def leaf_entries(directory: str) -> List[Dict]:
+    """The manifest's per-leaf entries (name/dtype/shape/replica_axis/
+    group) — the topology record ``repro.elastic`` reads before deciding
+    how to reshard.  v1 directories return name/dtype only."""
+    manifest = _read_manifest(directory)
+    if manifest.get("version", 1) >= 2:
+        return manifest["leaves"]
+    return [{"name": n, "dtype": d, "replica_axis": None, "group": None}
+            for n, d in zip(manifest["names"], manifest["dtypes"])]
+
+
+# ---------------------------------------------------------------------------
+# v1 read shim (one release only; no pickle)
+# ---------------------------------------------------------------------------
+
+def _v1_typed_path(name: str) -> Tuple:
+    """v1 recorded dotted keypath strings where namedtuple fields appear as
+    ``..field`` (str(GetAttrKey)) and sequence indices as bare digits.
+    Rebuild a typed path heuristically: empty component -> namedtuple
+    attr, digits -> list index, else dict key.  (Dict keys that are pure
+    digits or contain '.' are ambiguous in v1 — one of the reasons v2
+    records typed paths.)"""
+    parts = name.split(".")
+    steps: List[Tuple[str, Any]] = []
+    i = 0
+    while i < len(parts):
+        p = parts[i]
+        if p == "" and i + 1 < len(parts):
+            steps.append(("a", parts[i + 1]))
+            i += 2
+        elif p.isdigit():
+            steps.append(("l", int(p)))
+            i += 1
+        else:
+            steps.append(("d", p))
+            i += 1
+    return tuple(steps)
+
+
+def _v1_resolve_namedtuples(items):
+    """v1 typed paths tag namedtuple fields as bare ("a", field) without a
+    class name; resolve each such node against the registry by field-set
+    (fields present must be a subset of the class's — v1 dropped None
+    fields) and rewrite the kind in place."""
+    # collect field sets per attr-node prefix
+    prefixes: Dict[Tuple, set] = {}
+    for path, _ in items:
+        for d in range(len(path)):
+            if path[d][0] == "a":
+                prefixes.setdefault(path[:d], set()).add(path[d][1])
+    renames: Dict[Tuple, str] = {}
+    for prefix, fields in prefixes.items():
+        cls = next((c for c in _NT_REGISTRY.values()
+                    if fields <= set(c._fields)), None)
+        if cls is None:
+            raise CheckpointError(
+                f"v1 checkpoint has a namedtuple node at "
+                f"'{'.'.join(str(k) for _, k in prefix)}' with fields "
+                f"{sorted(fields)} matching no registered class — register "
+                f"it with repro.checkpoint.register_namedtuple")
+        renames[prefix] = "a:" + cls.__name__
+    out = []
+    for path, v in items:
+        new = tuple((renames[path[:d]], key) if kind == "a" else (kind, key)
+                    for d, (kind, key) in enumerate(path))
+        out.append((new, v))
+    return out
+
+
+def _restore_v1(directory: str, manifest: Dict) -> Any:
+    items = []
+    for name, dt in zip(manifest["names"], manifest["dtypes"]):
+        fname = _sanitize(name) + ".npy"
+        items.append((_v1_typed_path(name),
+                      _load_array(directory, fname, name, dt, None)))
+    if not items:
+        raise CheckpointError(f"{directory}: v1 manifest lists no leaves")
+    return _build(_v1_resolve_namedtuples(items), 0, "",
+                  fill_missing_fields=True)   # v1 dropped None fields
+
+
+# ---------------------------------------------------------------------------
+# Async save
+# ---------------------------------------------------------------------------
+
+class AsyncCheckpointer:
+    """Background-thread checkpoint writer.
+
+    ``save()`` returns immediately (jax arrays are immutable, so the in-
+    flight train state needs no copy); ``device_get`` and file writes run
+    on a single worker thread, bounded by ``max_pending`` outstanding
+    checkpoints (the oldest is waited on first, preserving write order).
+    ``wait()`` drains the queue and re-raises the first writer error.
+    """
+
+    def __init__(self, max_pending: int = 2):
+        self._max_pending = max(1, max_pending)
+        self._ex = ThreadPoolExecutor(max_workers=1,
+                                      thread_name_prefix="ckpt")
+        self._pending: List[Future] = []
+        self._lock = threading.Lock()
+
+    def save(self, directory: str, tree: Any,
+             metadata: Optional[Dict] = None, *,
+             leaf_info: Optional[Callable] = None) -> Future:
+        with self._lock:
+            while len(self._pending) >= self._max_pending:
+                self._pending.pop(0).result()
+            fut = self._ex.submit(save, directory, tree, metadata,
+                                  leaf_info=leaf_info)
+            self._pending.append(fut)
+            return fut
+
+    def wait(self) -> None:
+        with self._lock:
+            pending, self._pending = self._pending, []
+        for fut in pending:
+            fut.result()
+
+    def close(self) -> None:
+        self.wait()
+        self._ex.shutdown(wait=True)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False
+
+
+# the train-state containers this repo checkpoints
+from repro.optim.adamw import AdamWState  # noqa: E402  (cycle-free: optim imports no checkpoint code)
+
+register_namedtuple(AdamWState)

@@ -1,5 +1,6 @@
-from repro.core.edit import (Strategy, init_train_state, make_sync_fn,
-                             make_train_step, migrate_train_state)
+from repro.core.edit import (Strategy, bootstrap_replica, init_train_state,
+                             make_sync_fn, make_train_step,
+                             migrate_train_state)
 from repro.core.outer_opt import Nesterov
 from repro.core.penalty import PenaltyConfig
 from repro.core.stream import SyncSchedule, sync_group

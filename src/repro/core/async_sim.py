@@ -58,6 +58,19 @@ class WorkerSpeedModel:
     def reset(self):
         self._clock[:] = 0.0
 
+    def resize(self, n_workers: int) -> None:
+        """Elastic membership change: surviving workers keep their clocks;
+        joiners enter at the current frontier (max clock), matching a
+        worker that attaches exactly at the membership boundary."""
+        assert n_workers > 0
+        old = self.n_workers
+        clock = np.full(n_workers, self._clock.max() if old else 0.0)
+        clock[:min(old, n_workers)] = self._clock[:min(old, n_workers)]
+        self._clock = clock
+        self.n_workers = n_workers
+        self.consistent_lag = {w: lag for w, lag in
+                               self.consistent_lag.items() if w < n_workers}
+
 
 @dataclass
 class AEDiTScheduler:
@@ -75,6 +88,7 @@ class AEDiTScheduler:
         self._round_start = 0.0
         self._tick = 0.0
         self._progress = np.zeros(self.speeds.n_workers)
+        self._pending_membership: Optional[int] = None
 
     def next_step(self) -> Tuple[np.ndarray, bool]:
         n = self.speeds.n_workers
@@ -97,6 +111,33 @@ class AEDiTScheduler:
             active, _ = self.next_step()
             return active
         return fn
+
+    # -- elastic membership (joins/leaves fire only at sync boundaries) ----
+
+    def request_membership(self, n_workers: int) -> None:
+        """Announce a membership change (workers joining or leaving).  The
+        change is DEFERRED: it takes effect only when the training loop
+        polls at a sync boundary — mid-round membership churn would tear a
+        worker out of an unconsolidated round, losing its local progress.
+        A later request overrides an unapplied earlier one."""
+        assert n_workers > 0, n_workers
+        self._pending_membership = n_workers
+
+    def poll_membership(self, at_boundary: bool) -> Optional[int]:
+        """At a sync boundary, return (and apply, by resizing the speed
+        model and per-worker progress) the pending membership change;
+        otherwise None.  Called by ``elastic.TrainSession`` each step."""
+        if not at_boundary or self._pending_membership is None:
+            return None
+        n = self._pending_membership
+        self._pending_membership = None
+        if n != self.speeds.n_workers:
+            self.speeds.resize(n)
+            prog = np.zeros(n)
+            keep = min(len(self._progress), n)
+            prog[:keep] = self._progress[:keep]
+            self._progress = prog
+        return n
 
 
 def effective_steps_per_round(speeds: WorkerSpeedModel, tau_time: float,

@@ -168,15 +168,84 @@ def init_train_state(model, strategy: Strategy, inner_opt, key) -> Dict[str, Any
     return state
 
 
-def migrate_train_state(state: Dict[str, Any], cfg) -> Dict[str, Any]:
+def migrate_train_state(state: Dict[str, Any], cfg,
+                        strategy: Optional[Strategy] = None) -> Dict[str, Any]:
     """Convert a pre-PR-3 train state (whole-model ``anchor``/``outer_m``/
     ``prev_delta`` trees) to the group-aligned layout.  Idempotent — the
-    group-aligned layout is detected by its ``globals`` entry."""
+    group-aligned layout is detected by its ``globals`` entry.
+
+    With ``strategy`` given, additionally materialize any outer-loop state
+    the target strategy needs but the checkpoint lacks (cross-strategy
+    elastic resume): a missing ``anchor`` re-anchors at the consolidated
+    replica-0 params, ``outer_m`` starts at zero momentum, per-group EMA
+    stats get the (R, n_rep) init, and CO2*'s ``prev_delta`` starts at
+    zero — i.e. a baseline/diloco checkpoint can boot an edit run.
+    """
     out = dict(state)
     for k in ("anchor", "outer_m", "prev_delta"):
         tree = out.get(k)
         if isinstance(tree, dict) and "globals" not in tree:
             out[k] = PEN.split_by_group(tree, cfg)
+    if strategy is None or not strategy.uses_outer:
+        return out
+    R = jax.tree.leaves(out["params"])[0].shape[0]
+    p0 = jax.tree.map(lambda a: a[0], out["params"])
+    if "anchor" not in out:
+        out["anchor"] = PEN.split_by_group(p0, cfg)
+    if "outer_m" not in out:
+        out["outer_m"] = PEN.split_by_group(Nesterov().init(p0), cfg)
+    ema = dict(out.get("ema") or {})
+    if "count" not in ema:
+        ema["count"] = jnp.zeros((), jnp.int32)
+    if strategy.uses_penalty:
+        for g in PEN.module_groups(cfg):
+            if g.key not in ema:
+                ema[g.key] = {"mu": jnp.zeros((R, g.n_rep), jnp.float32),
+                              "sigma": jnp.ones((R, g.n_rep), jnp.float32)}
+    out["ema"] = ema
+    if strategy.delayed and "prev_delta" not in out:
+        out["prev_delta"] = PEN.split_by_group(jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), p0), cfg)
+    return out
+
+
+def bootstrap_replica(state: Dict[str, Any], cfg, *,
+                      from_anchor: bool = True) -> Dict[str, Any]:
+    """Build the per-replica rows a JOINING worker boots from (paper's
+    anchor parameters as the principled membership-change point; cf. the
+    async-Local-SGD line of work on dynamic membership).
+
+    Returns rows WITHOUT the leading replica axis:
+
+    - ``params``: the anchor merged back to the whole-model layout (with
+      ``from_anchor=False``, or when the strategy keeps no anchor, the
+      replica-0 params — identical post-consolidation, where every replica
+      sits exactly at the anchor).
+    - ``inner_mu`` / ``inner_nu``: replica-mean AdamW moments — the
+      replica-invariant consolidated statistics, so a joiner's first inner
+      steps are scaled like the incumbents' instead of cold-started.
+    - ``ema``: per-group replica-mean ``{mu, sigma}`` pseudo-gradient-norm
+      stats (penalty strategies), so the z-test is calibrated for the new
+      worker from its first sync.
+    """
+    params = state["params"]
+    if from_anchor and "anchor" in state:
+        template = jax.tree.map(lambda a: a[0], params)
+        row = PEN.merge_groups(state["anchor"], template)
+        p_row = jax.tree.map(lambda a, t: a.astype(t.dtype), row, template)
+    else:
+        p_row = jax.tree.map(lambda a: a[0], params)
+    opt = state["inner_opt"]
+    mean0 = lambda t: (None if t is None
+                       else jax.tree.map(lambda a: jnp.mean(a, axis=0), t))
+    out = {"params": p_row,
+           "inner_mu": mean0(getattr(opt, "mu", None)),
+           "inner_nu": mean0(getattr(opt, "nu", None)),
+           "ema": {}}
+    for k, v in (state.get("ema") or {}).items():
+        if k != "count":
+            out["ema"][k] = {"mu": jnp.mean(v["mu"], axis=0),
+                             "sigma": jnp.mean(v["sigma"], axis=0)}
     return out
 
 

@@ -7,12 +7,12 @@ from repro.dist.sharding import (SERVE_LONG_POLICY, SERVE_POLICY,  # noqa: E402
                                  SERVE_SP_POLICY, TRAIN_POLICY,
                                  TRAIN_POLICY_HIER, TRAIN_POLICY_MULTIPOD,
                                  ShardingPolicy, active_mesh, current_policy,
-                                 fsdp_spec, grad_shard, hint, tp_spec,
-                                 use_policy)
+                                 fsdp_spec, grad_shard, hint,
+                                 named_shardings, tp_spec, use_policy)
 
 __all__ = [
     "SERVE_LONG_POLICY", "SERVE_POLICY", "SERVE_SP_POLICY", "TRAIN_POLICY",
     "TRAIN_POLICY_HIER", "TRAIN_POLICY_MULTIPOD", "ShardingPolicy",
     "active_mesh", "current_policy", "fsdp_spec", "grad_shard", "hint",
-    "tp_spec", "use_policy",
+    "named_shardings", "tp_spec", "use_policy",
 ]

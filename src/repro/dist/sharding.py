@@ -359,3 +359,14 @@ def tp_spec(name: str, shape: Sequence[int], msz: int, *,
             entries[dim] = axes
             return P(*entries)
     return P(*([None] * nd))
+
+
+def named_shardings(specs, mesh):
+    """PartitionSpec pytree -> NamedSharding pytree for ``mesh`` — the
+    bridge between the spec builders above and APIs that take shardings
+    (``checkpoint.restore(shardings=...)``, ``jax.device_put``).  Used by
+    ``repro.elastic`` to lay a resharded train state out on a segment's
+    mesh in one call."""
+    from jax.sharding import NamedSharding
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,16 @@
+"""Elastic training sessions (DESIGN.md §13): topology-independent
+checkpoints, replica resharding with EDiT anchor semantics, and the
+segment-based training engine."""
+from repro.elastic.reshard import (consolidate, leaf_topology_tagger,
+                                   place_state, replica_count,
+                                   rescale_for_replicas, reshard_state,
+                                   restore_train_state, round_open,
+                                   save_train_state)
+from repro.elastic.session import Segment, TrainSession
+
+__all__ = [
+    "Segment", "TrainSession", "consolidate", "leaf_topology_tagger",
+    "place_state", "replica_count", "rescale_for_replicas",
+    "reshard_state", "restore_train_state", "round_open",
+    "save_train_state",
+]

@@ -1,0 +1,272 @@
+"""Replica resharding R -> R' with EDiT semantics (DESIGN.md §13).
+
+The EDiT paper motivates Local SGD with the *elasticity* of loosely
+coupled workers; this module supplies the state transform that makes a
+training run actually elastic.  The key observation is that the anchor
+parameters are a topology-independent description of training progress:
+at every sync boundary all replicas sit exactly at the anchor, so a
+membership change applied at (or consolidated to) a boundary is lossless.
+
+* :func:`consolidate` — run the boundary sync once, outside the step
+  loop: every replica's pseudo-gradient (including the DEPARTING ones)
+  folds into Algorithm 2's weighted average and the outer update, and the
+  replicas collapse onto the new anchor.  This is bit-identical to the
+  in-graph sync a fixed-topology run would execute at the same step,
+  because it IS the same code path (``core.stream.SyncSchedule``).
+* :func:`reshard_state` — consolidate if the round is open, then resize
+  every replica-axis leaf: survivors keep their rows; joiners boot from
+  :func:`repro.core.edit.bootstrap_replica` (params at the anchor, AdamW
+  moments / EMA norm stats at the replica mean).  ``anchor`` /
+  ``outer_m`` / ``prev_delta`` carry no replica axis and carry over
+  untouched.
+* :func:`rescale_for_replicas` — AdLoCo-style schedule adaptation: the
+  effective batch scales with the worker count, so the inner LR scales by
+  sqrt (default) or linearly with it.
+* :func:`save_train_state` / :func:`restore_train_state` — the
+  topology-aware face of ``repro.checkpoint``: per-leaf replica-axis and
+  ``penalty.module_groups`` group tags plus a topology metadata block go
+  into the v2 manifest, and restore reshards to any target replica count.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint.store import AsyncCheckpointer, restore, save
+from repro.core import penalty as PEN
+from repro.core import stream as STR
+from repro.core.edit import Strategy, bootstrap_replica, migrate_train_state
+from repro.launch.mesh import make_hierarchical_mesh, segment_mesh  # noqa: F401  (re-export: segment topology knobs)
+
+
+def replica_count(state: Dict[str, Any]) -> int:
+    return jax.tree.leaves(state["params"])[0].shape[0]
+
+
+def round_open(state: Dict[str, Any], strategy: Strategy) -> bool:
+    """True when local progress has accrued since the last anchor point
+    (i.e. the state is past warmup, where replicas diverge)."""
+    return bool(strategy.uses_outer
+                and int(state["step"]) > strategy.warmup_steps)
+
+
+def consolidate(state: Dict[str, Any], cfg, strategy: Strategy
+                ) -> Dict[str, Any]:
+    """Fold every replica into the boundary sync NOW and return the
+    post-sync state (all replicas at the new anchor).  For non-outer
+    strategies (baseline) the replicas are lock-step already and this is
+    the identity."""
+    if not strategy.uses_outer:
+        return state
+    schedule = STR.SyncSchedule(cfg, strategy)
+    out, _ = schedule.apply(state, jnp.asarray(True), jnp.asarray(False),
+                            streamed=False)
+    return out
+
+
+def reshard_state(state: Dict[str, Any], cfg, strategy: Strategy,
+                  new_replicas: int, *,
+                  consolidated: Optional[bool] = None) -> Dict[str, Any]:
+    """Transform a group-aligned train state from R to ``new_replicas``.
+
+    ``consolidated=None`` (auto) consolidates exactly when the round is
+    open — a state inside warmup (replicas still identical) or already
+    sitting at a just-synced boundary resizes directly.  Pass ``True`` to
+    assert the state is already consolidated, ``False`` to force a fold.
+    """
+    R = replica_count(state)
+    assert new_replicas >= 1, new_replicas
+    was_open = round_open(state, strategy)
+    if consolidated is None:
+        consolidated = not was_open
+    if not consolidated:
+        state = consolidate(state, cfg, strategy)
+    if new_replicas == R:
+        return state
+    # inside warmup the anchor is stale (it re-anchors only at warm end)
+    # while the replicas are still identical — boot joiners from the live
+    # replica-0 params there; past warmup the (just-)consolidated anchor
+    # is the boot point
+    boot = bootstrap_replica(state, cfg,
+                             from_anchor=strategy.uses_outer and was_open)
+
+    def resize(leaf, row):
+        if new_replicas <= R:
+            return leaf[:new_replicas]
+        pad = jnp.broadcast_to(row[None].astype(leaf.dtype),
+                               (new_replicas - R,) + leaf.shape[1:])
+        return jnp.concatenate([leaf, pad], axis=0)
+
+    out = dict(state)
+    out["params"] = jax.tree.map(resize, state["params"], boot["params"])
+    opt = state["inner_opt"]
+    mu = jax.tree.map(resize, opt.mu, boot["inner_mu"])
+    nu = (opt.nu if opt.nu is None
+          else jax.tree.map(resize, opt.nu, boot["inner_nu"]))
+    out["inner_opt"] = opt._replace(mu=mu, nu=nu)
+    if "ema" in state:
+        ema: Dict[str, Any] = {"count": state["ema"]["count"]}
+        for k, v in state["ema"].items():
+            if k == "count":
+                continue
+            ema[k] = {"mu": resize(v["mu"], boot["ema"][k]["mu"]),
+                      "sigma": resize(v["sigma"], boot["ema"][k]["sigma"])}
+        out["ema"] = ema
+    # anchor / outer_m / prev_delta are replica-free and carry over as-is
+    return out
+
+
+def rescale_for_replicas(old_replicas: int, new_replicas: int,
+                         rule: str = "sqrt") -> Tuple[float, float]:
+    """AdLoCo-style schedule adaptation on a membership change.
+
+    Per-replica batch stays constant, so the EFFECTIVE batch scales by
+    ``new/old``; returns ``(lr_scale, batch_scale)`` with the inner LR
+    scaled by sqrt (default), linearly, or not at all (``rule='none'``).
+    """
+    batch_scale = new_replicas / old_replicas
+    if rule == "linear":
+        return batch_scale, batch_scale
+    if rule == "none":
+        return 1.0, batch_scale
+    assert rule == "sqrt", rule
+    return math.sqrt(batch_scale), batch_scale
+
+
+# ---------------------------------------------------------------------------
+# Topology-tagged checkpoint I/O
+# ---------------------------------------------------------------------------
+
+def _group_of(keys) -> Optional[str]:
+    if not keys:
+        return None
+    if keys[0] == "blocks" and len(keys) >= 3:
+        return f"blocks/{keys[1]}/{keys[2]}"
+    if keys[0] == "encoder":
+        return "encoder"
+    return "globals"
+
+
+def leaf_topology_tagger(cfg):
+    """Per-leaf ``{"replica_axis", "group"}`` tagger for
+    ``checkpoint.save(leaf_info=...)`` over an EDiT train state.  Tags are
+    derived from the state layout (DESIGN.md §12): ``params`` and the
+    AdamW moments carry a leading replica axis and map to module groups by
+    their blocks path; the group-aligned outer state maps by its group
+    key; EMA stats are (R, n_rep) per group.  Every emitted group tag is
+    checked against ``penalty.module_groups(cfg)`` — the one source of
+    truth for grouping — so a grouping change that this path heuristic
+    does not know about fails loudly instead of writing stale tags."""
+    valid = {g.key for g in PEN.module_groups(cfg)}
+
+    def group_of(keys) -> Optional[str]:
+        g = _group_of(keys)
+        if g is not None and g not in valid:
+            raise ValueError(
+                f"leaf path {keys} maps to group '{g}' which is not one "
+                f"of penalty.module_groups(cfg) = {sorted(valid)} — "
+                f"update elastic.reshard._group_of to match the grouping")
+        return g
+
+    def tag(path) -> Optional[Dict]:
+        keys = [k for _, k in path]
+        top = keys[0] if keys else None
+        if top == "params":
+            return {"replica_axis": 0, "group": group_of(keys[1:])}
+        if top == "inner_opt" and len(keys) >= 2 and keys[1] in ("mu", "nu"):
+            if len(keys) > 2:
+                return {"replica_axis": 0, "group": group_of(keys[2:])}
+            return None
+        if top in ("anchor", "outer_m", "prev_delta") and len(keys) >= 2:
+            return {"replica_axis": None, "group": keys[1]}
+        if top == "ema" and len(keys) >= 3:
+            return {"replica_axis": 0, "group": keys[1]}
+        return None
+
+    return tag
+
+
+def save_train_state(directory: str, state: Dict[str, Any], cfg,
+                     strategy: Strategy, *, mesh=None,
+                     metadata: Optional[Dict] = None,
+                     checkpointer: Optional[AsyncCheckpointer] = None):
+    """Write a topology-independent train-state checkpoint: v2 format with
+    replica-axis/group leaf tags and a topology metadata block (replica
+    count, sync interval, warmup, module groups, mesh shape).  With
+    ``checkpointer`` the write happens on its background thread."""
+    meta = {
+        "format": "edit-train-state",
+        "step": int(state["step"]),
+        "strategy": strategy.name,
+        "replicas": replica_count(state),
+        "sync_interval": strategy.sync_interval,
+        "warmup_steps": strategy.warmup_steps,
+        "groups": [g.key for g in PEN.module_groups(cfg)],
+        "mesh": ({"axes": list(mesh.axis_names),
+                  "shape": list(mesh.devices.shape)} if mesh is not None
+                 else None),
+    }
+    meta.update(metadata or {})
+    tagger = leaf_topology_tagger(cfg)
+    if checkpointer is not None:
+        return checkpointer.save(directory, state, meta, leaf_info=tagger)
+    return save(directory, state, meta, leaf_info=tagger)
+
+
+def restore_train_state(directory: str, cfg, strategy: Strategy, *,
+                        replicas: Optional[int] = None,
+                        shardings: Any = None
+                        ) -> Tuple[Dict[str, Any], Dict]:
+    """Restore a train state and reshard it to ``replicas`` (default: the
+    saved topology).  Handles v1 checkpoints and pre-group-aligned
+    layouts via ``migrate_train_state``; the pending round (if any) is
+    consolidated under the SOURCE strategy's semantics — finishing the
+    old run's round — before the R -> R' transform, and any outer state
+    the TARGET strategy needs but the checkpoint lacks (cross-strategy
+    resume) is materialized last, at the target replica count.  Returns
+    ``(state, metadata)`` with ``metadata['replicas']`` always set to the
+    resolved source count (leaf shapes when the checkpoint predates the
+    topology metadata block)."""
+    import dataclasses
+
+    from repro.checkpoint.store import _read_manifest
+    manifest = _read_manifest(directory)
+    state = restore(directory, manifest=manifest)
+    meta = dict(manifest["metadata"])
+    src_replicas = int(meta.get("replicas") or
+                       jax.tree.leaves(state["params"])[0].shape[0])
+    meta["replicas"] = src_replicas
+    src_strategy = Strategy(
+        name=meta.get("strategy", strategy.name),
+        replicas=src_replicas,
+        sync_interval=int(meta.get("sync_interval",
+                                   strategy.sync_interval)),
+        warmup_steps=int(meta.get("warmup_steps", strategy.warmup_steps)),
+        outer_lr=strategy.outer_lr,
+        outer_momentum=strategy.outer_momentum,
+        penalty=strategy.penalty,
+        inner_clip=strategy.inner_clip,
+    )
+    state = migrate_train_state(state, cfg, strategy=src_strategy)
+    target = replicas if replicas is not None else src_replicas
+    if target != src_replicas:
+        state = reshard_state(state, cfg, src_strategy, target)
+    state = migrate_train_state(
+        state, cfg, strategy=dataclasses.replace(strategy,
+                                                 replicas=target))
+    if shardings is not None:
+        state = jax.device_put(state, shardings)
+    return state, meta
+
+
+def place_state(state: Dict[str, Any], cfg, mesh):
+    """Lay a (possibly just-resharded) train state out on ``mesh`` using
+    the canonical train-state specs — one call from checkpoint bytes to a
+    sharded, step-ready state."""
+    from repro.dist import named_shardings
+    from repro.launch.specs import train_state_specs
+    specs = train_state_specs(state, cfg, mesh)
+    return jax.device_put(state, named_shardings(specs, mesh))

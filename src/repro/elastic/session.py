@@ -1,0 +1,308 @@
+"""Elastic training sessions: a run is a sequence of SEGMENTS.
+
+:class:`TrainSession` is the training engine (``train.loop.Trainer`` is
+now a thin fixed-topology wrapper over it).  Each segment has its own
+replica count, sync interval and global batch; segment changes happen at
+sync boundaries, where :mod:`repro.elastic.reshard` makes them lossless:
+
+    seg 0 (R=4) ──sync──▶ consolidate ──reshard──▶ seg 1 (R=8) ──▶ ...
+
+On a membership change the session applies AdLoCo-style schedule
+adaptation (per-replica batch constant, inner LR scaled for the new
+effective batch) and re-jits the train step for the new topology; the
+anchor, outer momentum, EMA statistics and CO2* delayed delta carry over
+because they are replica-free (DESIGN.md §13).
+
+A-EDiT wiring: pass ``scheduler=AEDiTScheduler(...)`` and the session
+pulls per-step activity masks from it AND polls
+``scheduler.poll_membership`` each step — join/leave requests made via
+``scheduler.request_membership(n)`` fire only when the session reaches a
+sync boundary, never mid-round.
+
+Checkpoints go through :func:`reshard.save_train_state` (topology-tagged
+v2 format) on an :class:`repro.checkpoint.AsyncCheckpointer` background
+thread, so the step loop never stalls on file I/O;
+:meth:`TrainSession.resume` reopens a checkpoint on ANY replica count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.store import AsyncCheckpointer
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.core.async_sim import AEDiTScheduler
+from repro.data.pipeline import SyntheticLM
+from repro.elastic.reshard import (replica_count, rescale_for_replicas,
+                                   reshard_state, restore_train_state,
+                                   round_open, save_train_state)
+from repro.optim import AdamW, cosine_with_warmup
+
+_HISTORY_KEYS = ("synced", "anomalous_frac", "rollback_frac",
+                 "mean_norm", "mean_beta")
+
+
+@dataclass(frozen=True)
+class Segment:
+    """One elastic segment: ``steps`` inner steps at a (possibly new)
+    topology.  ``None`` fields inherit from the running session;
+    ``global_batch``/``lr_scale`` default to the AdLoCo rescale rule."""
+    steps: int
+    replicas: Optional[int] = None
+    sync_interval: Optional[int] = None
+    global_batch: Optional[int] = None
+    lr_scale: Optional[float] = None
+    rescale_rule: str = "sqrt"
+
+
+class TrainSession:
+    """Segment-aware elastic training engine.
+
+    Owns the train state, the per-topology jitted step functions, the
+    metric history and the (async) checkpointer.  ``run_steps`` drives one
+    segment; ``advance`` opens the next one; ``run`` executes a full
+    segment schedule; ``save``/``resume`` round-trip through the
+    topology-independent checkpoint format.
+    """
+
+    def __init__(self, model, strategy: Strategy, data: SyntheticLM, tcfg,
+                 inner_opt=None, lr_sched=None,
+                 active_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 scheduler: Optional[AEDiTScheduler] = None,
+                 state: Optional[Dict[str, Any]] = None):
+        self.model = model
+        self.strategy = strategy
+        self.data = data
+        self.tcfg = tcfg
+        self.inner_opt = inner_opt or AdamW()
+        self._base_lr_sched = lr_sched or cosine_with_warmup(
+            tcfg.inner_lr, tcfg.lr_warmup, tcfg.total_steps)
+        self.lr_scale = 1.0
+        self.scheduler = scheduler
+        self.active_fn = active_fn
+        if scheduler is not None and active_fn is None:
+            self.active_fn = scheduler.active_fn()
+        self.state = (state if state is not None else init_train_state(
+            model, strategy, self.inner_opt, jax.random.PRNGKey(tcfg.seed)))
+        self.history: List[Dict[str, float]] = []
+        self.segments: List[Dict[str, Any]] = []   # segment-change log
+        self._step_cache: Dict[Any, Callable] = {}
+        self._eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[0])
+        self._val_data = self._make_val_data()
+        self._ckpt: Optional[AsyncCheckpointer] = None
+
+    # -- step function (re-jitted per topology, cached) --------------------
+
+    _STEP_CACHE_SIZE = 4   # LRU: long elastic runs visit many topologies
+
+    @property
+    def _step_fn(self) -> Callable:
+        key = (self.strategy, self.lr_scale)
+        fn = self._step_cache.pop(key, None)
+        if fn is None:
+            cast = self.tcfg.cast_params_dtype
+            if isinstance(cast, str):
+                cast = jnp.dtype(cast)
+            base, scale = self._base_lr_sched, self.lr_scale
+            sched = base if scale == 1.0 else (lambda s: base(s) * scale)
+            fn = jax.jit(make_train_step(
+                self.model, self.strategy, self.inner_opt, sched,
+                cast_params_dtype=cast, grad_specs=self.tcfg.grad_specs,
+                streamed=self.tcfg.streamed))
+        self._step_cache[key] = fn          # (re-)insert most-recent-last
+        while len(self._step_cache) > self._STEP_CACHE_SIZE:
+            self._step_cache.pop(next(iter(self._step_cache)))
+        return fn
+
+    # -- boundary / membership ---------------------------------------------
+
+    def at_boundary(self) -> bool:
+        """True when the NEXT step would fire the in-graph sync — the only
+        point where membership changes are lossless."""
+        s = self.strategy
+        step = int(self.state["step"])
+        return bool(s.uses_outer and step > s.warmup_steps
+                    and (step - s.warmup_steps) % s.sync_interval == 0)
+
+    def advance(self, replicas: Optional[int] = None,
+                sync_interval: Optional[int] = None,
+                global_batch: Optional[int] = None,
+                lr_scale: Optional[float] = None,
+                rescale_rule: str = "sqrt") -> None:
+        """Open a new segment at the current step: consolidate the open
+        round (departing replicas fold into the weighted average), reshard
+        to the new replica count (joiners boot from the anchor), and apply
+        the AdLoCo LR/batch rescale.  Inside warmup the replicas are still
+        identical and the anchor is untouched, so the original warmup
+        schedule is kept; past warmup the segment re-warmups at the seam
+        (first sync tau steps later)."""
+        old = self.strategy
+        new_r = replicas if replicas is not None else old.replicas
+        step = int(self.state["step"])
+        in_warmup = not round_open(self.state, old)
+        self.state = reshard_state(self.state, self.model.cfg, old, new_r)
+        auto_lr, batch_scale = rescale_for_replicas(
+            old.replicas, new_r, rescale_rule)
+        self.lr_scale *= lr_scale if lr_scale is not None else auto_lr
+        if global_batch is None:
+            global_batch = max(1, self.data.global_batch // old.replicas) \
+                * new_r
+        self.data = dataclasses.replace(
+            self.data, global_batch=global_batch, replicas=new_r)
+        self._val_data = self._make_val_data()
+        self.strategy = dataclasses.replace(
+            old, replicas=new_r,
+            sync_interval=sync_interval or old.sync_interval,
+            warmup_steps=old.warmup_steps if in_warmup else step)
+        self.segments.append({
+            "step": step, "replicas": new_r,
+            "sync_interval": self.strategy.sync_interval,
+            "global_batch": global_batch, "lr_scale": self.lr_scale})
+
+    # -- the step loop ------------------------------------------------------
+
+    def run_steps(self, steps: Optional[int] = None
+                  ) -> List[Dict[str, float]]:
+        tcfg = self.tcfg
+        steps = steps or tcfg.total_steps
+        t0 = time.time()
+        for _ in range(steps):
+            if self.scheduler is not None:
+                n = self.scheduler.poll_membership(self.at_boundary())
+                if n is not None and n != self.strategy.replicas:
+                    self.advance(replicas=n)
+            step = int(self.state["step"])
+            batch = {"tokens": jnp.asarray(self.data.batch(step))}
+            if self.active_fn is not None:
+                active = jnp.asarray(self.active_fn(step))
+                self.state, m = self._step_fn(self.state, batch, active)
+            else:
+                self.state, m = self._step_fn(self.state, batch)
+            rec = {"step": step, "loss": float(m["loss"]),
+                   "lr": float(m["lr"]), "grad_norm": float(m["grad_norm"]),
+                   "replicas": self.strategy.replicas}
+            # Algorithm-2 sync telemetry (zeros off the sync boundary)
+            rec.update({k: float(m[k]) for k in _HISTORY_KEYS if k in m})
+            if tcfg.eval_every and (step + 1) % tcfg.eval_every == 0:
+                rec["ppl"] = self.eval_ppl()
+            self.history.append(rec)
+            if tcfg.log_every and step % tcfg.log_every == 0:
+                dt = time.time() - t0
+                extra = f" ppl={rec['ppl']:.2f}" if "ppl" in rec else ""
+                print(f"step {step:5d} loss {rec['loss']:.4f} "
+                      f"lr {rec['lr']:.2e} ({dt:.1f}s){extra}", flush=True)
+            if (tcfg.ckpt_dir and tcfg.ckpt_every
+                    and (step + 1) % tcfg.ckpt_every == 0):
+                self.save(f"{tcfg.ckpt_dir}/step_{step + 1}")
+        if self._ckpt is not None:
+            self._ckpt.wait()          # checkpoints durable before return
+        return self.history
+
+    def run(self, segments: Sequence[Segment]) -> List[Dict[str, float]]:
+        """Execute a segment schedule: reshard (at the current boundary)
+        where a segment changes topology, then run its steps."""
+        for seg in segments:
+            if self._differs(seg):
+                self.advance(seg.replicas, seg.sync_interval,
+                             seg.global_batch, seg.lr_scale,
+                             seg.rescale_rule)
+            self.run_steps(seg.steps)
+        return self.history
+
+    def _differs(self, seg: Segment) -> bool:
+        return ((seg.replicas or self.strategy.replicas)
+                != self.strategy.replicas
+                or (seg.sync_interval or self.strategy.sync_interval)
+                != self.strategy.sync_interval
+                or (seg.global_batch or self.data.global_batch)
+                != self.data.global_batch
+                or seg.lr_scale not in (None, 1.0))
+
+    # -- eval / checkpoint --------------------------------------------------
+
+    def _make_val_data(self) -> SyntheticLM:
+        d = self.data
+        return SyntheticLM(d.vocab_size, d.seq_len,
+                           max(d.global_batch // 4, 1), seed=d.seed,
+                           markov_q=d.markov_q, split="valid")
+
+    def eval_ppl(self) -> float:
+        """Held-out PPL with the replica-0 (post-sync: consolidated)
+        params; the validation stream is built once per segment."""
+        p0 = jax.tree.map(lambda a: a[0], self.state["params"])
+        losses = []
+        for i in range(self.tcfg.eval_batches):
+            b = {"tokens": jnp.asarray(self._val_data.batch(i))}
+            losses.append(float(self._eval_fn(p0, b)))
+        return float(np.exp(np.mean(losses)))
+
+    def save(self, directory: str, *, sync: bool = False) -> None:
+        """Topology-tagged checkpoint of the current state.  Async by
+        default (``tcfg.async_ckpt``): the write happens on a background
+        thread and is awaited at the end of ``run_steps`` / on the next
+        ``save`` backpressure."""
+        use_async = getattr(self.tcfg, "async_ckpt", True) and not sync
+        if use_async and self._ckpt is None:
+            self._ckpt = AsyncCheckpointer()
+        save_train_state(
+            directory, self.state, self.model.cfg, self.strategy,
+            metadata={"lr_scale": self.lr_scale,
+                      "global_batch": self.data.global_batch},
+            checkpointer=self._ckpt if use_async else None)
+
+    def flush(self) -> None:
+        if self._ckpt is not None:
+            self._ckpt.wait()
+
+    @classmethod
+    def resume(cls, directory: str, model, strategy: Strategy,
+               data: SyntheticLM, tcfg, inner_opt=None, lr_sched=None,
+               active_fn=None, scheduler=None,
+               replicas: Optional[int] = None,
+               rescale_rule: str = "sqrt") -> "TrainSession":
+        """Reopen a checkpoint as a new session, on ANY replica count.
+
+        Same-R resume is bit-identical continuation (saved sync phase and
+        warmup are preserved).  A different ``replicas`` reshards —
+        consolidating the open round if the checkpoint is mid-round — and
+        applies the AdLoCo LR/batch rescale on top of the checkpoint's
+        recorded ``lr_scale``; ``data`` is reinterpreted with the same
+        per-replica batch at the new worker count.
+        """
+        target = replicas if replicas is not None else strategy.replicas
+        state, meta = restore_train_state(
+            directory, model.cfg, strategy, replicas=target)
+        src_r = int(meta["replicas"])   # always resolved (leaf shapes as
+        step = int(state["step"])       # fallback for metadata-less dirs)
+        saved_tau = int(meta.get("sync_interval", strategy.sync_interval))
+        saved_warm = int(meta.get("warmup_steps", strategy.warmup_steps))
+        lr_scale = float(meta.get("lr_scale", 1.0))
+        gb = int(meta.get("global_batch", data.global_batch))
+        if target != src_r:
+            ls, _ = rescale_for_replicas(src_r, target, rescale_rule)
+            lr_scale *= ls
+            gb = max(1, gb // src_r) * target
+            warm = step if step > saved_warm else saved_warm
+        else:
+            warm = saved_warm
+        # the saved sync cadence continues across the seam either way; a
+        # new tau is a segment property (advance()/Segment), not a resume
+        # side effect
+        strat = dataclasses.replace(strategy, replicas=target,
+                                    sync_interval=saved_tau,
+                                    warmup_steps=warm)
+        data = dataclasses.replace(data, global_batch=gb, replicas=target)
+        sess = cls(model, strat, data, tcfg, inner_opt, lr_sched,
+                   active_fn, scheduler, state=state)
+        sess.lr_scale = lr_scale
+        sess.segments.append({"step": step, "replicas": target,
+                              "sync_interval": strat.sync_interval,
+                              "global_batch": gb, "lr_scale": lr_scale,
+                              "resumed_from": directory})
+        return sess

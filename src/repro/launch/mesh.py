@@ -23,20 +23,39 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes, axis_types=(AxisType.Auto,) * len(axes))
 
 
-def make_hierarchical_mesh(sync: int = 4, *, multi_pod: bool = False):
+def make_hierarchical_mesh(sync: int = 4, *, data_total: int = 16,
+                           model: int = 16, multi_pod: bool = False):
     """Hierarchical EDiT (beyond-paper, DESIGN.md §9): only ``sync``
     model-sync replicas; the rest of the data axis joins FSDP, dividing
-    per-device master/optimizer bytes by (16/sync).  Trades sync-group
-    count (Local-SGD parallelism) for memory — the knob that makes
-    nemotron-340b/deepseek-671b EDiT-trainable on 16 GB v5e chips."""
-    assert 16 % sync == 0
-    inner = 16 // sync
+    per-device master/optimizer bytes by (data_total/sync).  Trades
+    sync-group count (Local-SGD parallelism) for memory — the knob that
+    makes nemotron-340b/deepseek-671b EDiT-trainable on 16 GB v5e chips.
+
+    ``sync``/``data_total`` are per-segment knobs for elastic sessions
+    (DESIGN.md §13): a new segment may re-slice the same device grid with
+    a different sync factor, moving replicas between the model-sync and
+    FSDP roles without changing the physical topology."""
+    assert data_total % sync == 0, (data_total, sync)
+    inner = data_total // sync
     if multi_pod:
-        return jax.make_mesh((2, sync, inner, 16),
+        return jax.make_mesh((2, sync, inner, model),
                              ("pod", "data", "fsdp", "model"),
                              axis_types=(AxisType.Auto,) * 4)
-    return jax.make_mesh((sync, inner, 16), ("data", "fsdp", "model"),
+    return jax.make_mesh((sync, inner, model), ("data", "fsdp", "model"),
                          axis_types=(AxisType.Auto,) * 3)
+
+
+def segment_mesh(replicas: int, *, model: int = 1):
+    """Best-effort host mesh for one elastic segment: the data axis takes
+    min(replicas, available) devices so a resharded state can be laid out
+    immediately on whatever hardware the segment actually has."""
+    n = len(jax.devices())
+    per = max(1, n // max(model, 1))
+    data = replicas
+    while data > 1 and (per % data or data > per):
+        data -= 1
+    return jax.make_mesh((data, model), ("data", "model"),
+                         axis_types=(AxisType.Auto,) * 2)
 
 
 def fsdp_axes(mesh) -> tuple:

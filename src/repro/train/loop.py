@@ -1,22 +1,25 @@
 """Training loop: wires model + strategy + data + optimizer + checkpointing.
 
-Used by examples/ and benchmarks/; the multi-pod path instead goes through
-launch/dryrun.py (ShapeDtypeStructs, no allocation).
+:class:`Trainer` is a thin fixed-topology wrapper over
+:class:`repro.elastic.session.TrainSession` — the segment-aware elastic
+engine that owns the state, the jitted step functions, checkpointing and
+eval (DESIGN.md §13).  Used by examples/ and benchmarks/; elastic runs
+(replica joins/leaves, per-segment batch/LR) use TrainSession directly;
+the multi-pod path goes through launch/dryrun.py (ShapeDtypeStructs, no
+allocation).
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Callable, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import Strategy, init_train_state, make_train_step
+from repro.core import Strategy
 from repro.data.pipeline import SyntheticLM
-from repro.models import Model, build_model
-from repro.optim import AdamW, cosine_with_warmup
+from repro.elastic.session import TrainSession
+from repro.models import Model
+from repro.optim import AdamW, cosine_with_warmup  # noqa: F401  (re-export)
 
 
 @dataclass
@@ -37,73 +40,58 @@ class TrainerConfig:
     grad_specs: Optional[Any] = None
     # streamed layer-wise sync pipeline (False = monolithic boundary sync)
     streamed: bool = True
+    # write checkpoints on a background thread (never stalls the step loop)
+    async_ckpt: bool = True
 
 
 class Trainer:
+    """Single-segment façade over TrainSession, kept for API stability."""
+
     def __init__(self, model: Model, strategy: Strategy, data: SyntheticLM,
                  tcfg: TrainerConfig, inner_opt=None, lr_sched=None,
                  active_fn: Optional[Callable[[int], np.ndarray]] = None):
+        self.session = TrainSession(model, strategy, data, tcfg,
+                                    inner_opt=inner_opt, lr_sched=lr_sched,
+                                    active_fn=active_fn)
         self.model = model
-        self.strategy = strategy
-        self.data = data
         self.tcfg = tcfg
-        self.inner_opt = inner_opt or AdamW()
-        self.lr_sched = lr_sched or cosine_with_warmup(
-            tcfg.inner_lr, tcfg.lr_warmup, tcfg.total_steps)
-        self.active_fn = active_fn
-        self.state = init_train_state(model, strategy, self.inner_opt,
-                                      jax.random.PRNGKey(tcfg.seed))
-        cast = tcfg.cast_params_dtype
-        if isinstance(cast, str):
-            cast = jnp.dtype(cast)
-        self._step_fn = jax.jit(make_train_step(
-            model, strategy, self.inner_opt, self.lr_sched,
-            cast_params_dtype=cast, grad_specs=tcfg.grad_specs,
-            streamed=tcfg.streamed))
-        self._eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[0])
-        self.history: List[Dict[str, float]] = []
+
+    # state/strategy/data/history live on the session so elastic callers
+    # and this façade always agree
+    @property
+    def state(self) -> Dict[str, Any]:
+        return self.session.state
+
+    @state.setter
+    def state(self, value: Dict[str, Any]) -> None:
+        self.session.state = value
+
+    @property
+    def strategy(self) -> Strategy:
+        return self.session.strategy
+
+    @property
+    def data(self) -> SyntheticLM:
+        return self.session.data
+
+    @property
+    def history(self) -> List[Dict[str, float]]:
+        return self.session.history
+
+    @property
+    def inner_opt(self):
+        return self.session.inner_opt
+
+    @property
+    def lr_sched(self):
+        return self.session._base_lr_sched
+
+    @property
+    def _step_fn(self):
+        return self.session._step_fn
 
     def eval_ppl(self) -> float:
-        """Held-out PPL with the replica-0 (post-sync: consolidated) params."""
-        p0 = jax.tree.map(lambda a: a[0], self.state["params"])
-        val = SyntheticLM(self.data.vocab_size, self.data.seq_len,
-                          max(self.data.global_batch // 4, 1),
-                          seed=self.data.seed, markov_q=self.data.markov_q,
-                          split="valid")
-        losses = []
-        for i in range(self.tcfg.eval_batches):
-            b = {"tokens": jnp.asarray(val.batch(i))}
-            losses.append(float(self._eval_fn(p0, b)))
-        return float(np.exp(np.mean(losses)))
+        return self.session.eval_ppl()
 
     def run(self, steps: Optional[int] = None) -> List[Dict[str, float]]:
-        steps = steps or self.tcfg.total_steps
-        t0 = time.time()
-        for _ in range(steps):
-            step = int(self.state["step"])
-            batch = {"tokens": jnp.asarray(self.data.batch(step))}
-            if self.active_fn is not None:
-                active = jnp.asarray(self.active_fn(step))
-                self.state, m = self._step_fn(self.state, batch, active)
-            else:
-                self.state, m = self._step_fn(self.state, batch)
-            rec = {"step": step, "loss": float(m["loss"]),
-                   "lr": float(m["lr"]), "grad_norm": float(m["grad_norm"])}
-            # Algorithm-2 sync telemetry (zeros off the sync boundary)
-            rec.update({k: float(m[k]) for k in
-                        ("synced", "anomalous_frac", "rollback_frac",
-                         "mean_norm", "mean_beta") if k in m})
-            if self.tcfg.eval_every and (step + 1) % self.tcfg.eval_every == 0:
-                rec["ppl"] = self.eval_ppl()
-            self.history.append(rec)
-            if self.tcfg.log_every and step % self.tcfg.log_every == 0:
-                dt = time.time() - t0
-                extra = f" ppl={rec['ppl']:.2f}" if "ppl" in rec else ""
-                print(f"step {step:5d} loss {rec['loss']:.4f} "
-                      f"lr {rec['lr']:.2e} ({dt:.1f}s){extra}", flush=True)
-            if (self.tcfg.ckpt_dir and self.tcfg.ckpt_every
-                    and (step + 1) % self.tcfg.ckpt_every == 0):
-                from repro.checkpoint.store import save
-                save(f"{self.tcfg.ckpt_dir}/step_{step+1}", self.state,
-                     {"step": step + 1, "strategy": self.strategy.name})
-        return self.history
+        return self.session.run_steps(steps or self.tcfg.total_steps)

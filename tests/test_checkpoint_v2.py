@@ -1,0 +1,214 @@
+"""Checkpoint format v2: pickle-free structure reconstruction from typed
+manifest keypaths, hardened error paths, async save, topology tags, and
+the one-release v1 read shim."""
+import os
+import re
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import pytest
+
+import repro.checkpoint.store as store
+from repro.checkpoint import (AsyncCheckpointer, CheckpointError,
+                              CheckpointNotFoundError, LeafMismatchError,
+                              MissingLeafError, PartialCheckpointError,
+                              leaf_entries, load_metadata, restore, save)
+from repro.optim.adamw import AdamWState
+
+
+def _tree():
+    return {
+        "params": {"blocks": [[{"w": jnp.arange(6.0).reshape(2, 3)}],
+                              [{"m": jnp.ones((4,), jnp.bfloat16)}]],
+                   "embed": jnp.zeros((5, 2))},
+        "inner_opt": AdamWState({"w": jnp.full((2, 3), 2.0)}, None,
+                                jnp.int32(7)),
+        "step": jnp.int32(17),
+        "pair": (jnp.ones(2), jnp.zeros(3)),
+        "empty": {},
+    }
+
+
+def _assert_tree_equal(a, b):
+    assert jax.tree_util.tree_structure(a) == jax.tree_util.tree_structure(b)
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        assert x.dtype == y.dtype
+        np.testing.assert_array_equal(np.asarray(x, np.float32),
+                                      np.asarray(y, np.float32))
+
+
+def test_no_pickle_anywhere_in_checkpoint_package():
+    pkg = os.path.dirname(store.__file__)
+    for fn in os.listdir(pkg):
+        if fn.endswith(".py"):
+            src = open(os.path.join(pkg, fn)).read()
+            assert not re.search(
+                r"\bimport\s+pickle\b|\bpickle\s*\.", src), fn
+
+
+def test_v2_roundtrip_namedtuple_none_tuple_empty(tmp_path):
+    """Structure — dicts, lists, tuples, NamedTuples, None fields, empty
+    containers — round-trips purely from manifest keypaths."""
+    tree = _tree()
+    save(str(tmp_path / "ck"), tree, {"note": "v2"})
+    back = restore(str(tmp_path / "ck"))
+    _assert_tree_equal(tree, back)
+    assert isinstance(back["inner_opt"], AdamWState)
+    assert back["inner_opt"].nu is None
+    assert isinstance(back["pair"], tuple)
+    assert back["empty"] == {}
+    assert load_metadata(str(tmp_path / "ck"))["note"] == "v2"
+    man = msgpack.unpackb(open(tmp_path / "ck" / "MANIFEST.msgpack",
+                               "rb").read())
+    assert man["version"] == 2
+
+
+def test_restore_errors_are_precise(tmp_path):
+    d = str(tmp_path / "ck")
+    save(d, _tree())
+    # missing leaf file
+    victim = [f for f in os.listdir(d) if "params.blocks.0.0.w" in f][0]
+    os.rename(os.path.join(d, victim), os.path.join(d, victim + ".bak"))
+    with pytest.raises(MissingLeafError, match="params.blocks.0.0.w"):
+        restore(d)
+    os.rename(os.path.join(d, victim + ".bak"), os.path.join(d, victim))
+    # shape mismatch vs manifest
+    np.save(os.path.join(d, victim), np.zeros((9, 9), np.float32))
+    with pytest.raises(LeafMismatchError, match="shape"):
+        restore(d)
+    # dtype mismatch vs manifest
+    np.save(os.path.join(d, victim), np.zeros((2, 3), np.int32))
+    with pytest.raises(LeafMismatchError, match="dtype"):
+        restore(d)
+
+
+def test_partial_and_missing_checkpoints(tmp_path):
+    with pytest.raises(CheckpointNotFoundError):
+        restore(str(tmp_path / "nope"))
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(CheckpointNotFoundError):
+        restore(str(empty))
+    # leaf files but no manifest = interrupted save
+    partial = tmp_path / "partial"
+    partial.mkdir()
+    np.save(str(partial / "000000__w.npy"), np.zeros(3))
+    with pytest.raises(PartialCheckpointError, match="interrupted"):
+        restore(str(partial))
+
+
+def test_async_checkpointer_roundtrip_and_error_propagation(tmp_path):
+    tree = _tree()
+    with AsyncCheckpointer() as ck:
+        ck.save(str(tmp_path / "a"), tree, {"i": 1})
+        ck.save(str(tmp_path / "b"), tree, {"i": 2})
+        ck.wait()
+        _assert_tree_equal(tree, restore(str(tmp_path / "a")))
+        assert load_metadata(str(tmp_path / "b"))["i"] == 2
+    # a writer error surfaces on wait(), not silently
+    blocker = tmp_path / "file"
+    blocker.write_text("x")
+    ck2 = AsyncCheckpointer()
+    ck2.save(str(blocker), tree)
+    with pytest.raises(Exception):
+        ck2.wait()
+
+
+def test_overwrite_same_directory_is_clean(tmp_path):
+    """Re-saving into an existing checkpoint dir drops the old commit
+    marker first and prunes stale leaf files, so restore never sees a
+    mixed old/new tree."""
+    d = str(tmp_path / "ck")
+    save(d, _tree(), {"gen": 1})
+    small = {"only": jnp.arange(4.0)}
+    save(d, small, {"gen": 2})
+    back = restore(d)
+    _assert_tree_equal(small, back)
+    assert load_metadata(d)["gen"] == 2
+    stale = [f for f in os.listdir(d)
+             if f.endswith(".npy") and "only" not in f]
+    assert stale == []
+    # an interrupted overwrite (manifest already dropped) is detectable
+    os.remove(os.path.join(d, "MANIFEST.msgpack"))
+    with pytest.raises(PartialCheckpointError):
+        restore(d)
+
+
+def test_v2_missing_namedtuple_field_is_corruption(tmp_path):
+    """v2 records None fields explicitly, so a field absent from the
+    manifest is corruption — not silently rebuilt as None."""
+    d = str(tmp_path / "ck")
+    save(d, {"opt": AdamWState({"w": jnp.ones(2)}, None, jnp.int32(1))})
+    mpath = os.path.join(d, "MANIFEST.msgpack")
+    man = msgpack.unpackb(open(mpath, "rb").read())
+    man["leaves"] = [e for e in man["leaves"]
+                     if e.get("name") != "opt.count"]
+    open(mpath, "wb").write(msgpack.packb(man))
+    with pytest.raises(CheckpointError, match="count"):
+        restore(d)
+
+
+def test_unknown_namedtuple_is_a_precise_error(tmp_path):
+    import collections
+    Odd = collections.namedtuple("OddState", ["x"])
+    save(str(tmp_path / "ck"), {"s": Odd(jnp.ones(2))})
+    store._NT_REGISTRY.pop("OddState", None)
+    with pytest.raises(CheckpointError, match="OddState"):
+        restore(str(tmp_path / "ck"))
+    store.register_namedtuple(Odd)
+    back = restore(str(tmp_path / "ck"))
+    assert type(back["s"]).__name__ == "OddState"
+
+
+# ---------------------------------------------------------------------------
+# v1 read shim (no pickle)
+# ---------------------------------------------------------------------------
+
+def _save_v1(directory, tree, metadata=None):
+    """The pre-PR-4 writer, minus the treedef.pkl (restore never reads
+    it): dotted name strings + dtypes in the manifest."""
+    os.makedirs(directory, exist_ok=True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, dtypes = [], []
+    for path, leaf in flat:
+        parts = []
+        for k in path:
+            if hasattr(k, "key"):
+                parts.append(str(k.key))
+            elif hasattr(k, "idx"):
+                parts.append(str(k.idx))
+            else:
+                parts.append(str(k))
+        name = ".".join(parts)
+        names.append(name)
+        arr = np.asarray(jax.device_get(leaf))
+        dtypes.append(str(arr.dtype))
+        view = store._NONNATIVE.get(str(arr.dtype))
+        if view is not None:
+            arr = arr.view(view)
+        np.save(os.path.join(directory, store._sanitize(name) + ".npy"), arr)
+    manifest = {"treedef": str(treedef), "names": names, "dtypes": dtypes,
+                "metadata": metadata or {}}
+    with open(os.path.join(directory, "MANIFEST.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+
+
+def test_v1_shim_reads_old_dirs_without_pickle(tmp_path):
+    tree = {
+        "params": {"blocks": [[{"w": jnp.arange(6.0).reshape(2, 3)}],
+                              [{"m": jnp.ones((4,), jnp.bfloat16)}]],
+                   "embed": jnp.zeros((5, 2))},
+        "inner_opt": AdamWState({"w": jnp.full((2, 3), 2.0)},
+                                {"w": jnp.full((2, 3), 3.0)},
+                                jnp.int32(7)),
+        "ema": {"count": jnp.int32(3),
+                "blocks/0/0": {"mu": jnp.ones((2, 1))}},
+    }
+    _save_v1(str(tmp_path / "old"), tree, {"era": "v1"})
+    back = restore(str(tmp_path / "old"))
+    _assert_tree_equal(tree, back)
+    assert isinstance(back["inner_opt"], AdamWState)
+    assert load_metadata(str(tmp_path / "old"))["era"] == "v1"
+    assert leaf_entries(str(tmp_path / "old"))[0]["replica_axis"] is None

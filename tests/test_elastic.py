@@ -1,0 +1,323 @@
+"""Elastic round trips (DESIGN.md §13): checkpoint at a sync boundary
+under R=4, reshard to R' in {2, 8}, resume — the consolidated params at
+the seam must equal the fixed-topology control's post-sync params
+EXACTLY, continued training must track the control's loss curve, and the
+scheduler's membership events must fire only at sync boundaries."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import leaf_entries, load_metadata
+from repro.configs import get_config
+from repro.core import (AEDiTScheduler, Strategy, WorkerSpeedModel,
+                        bootstrap_replica, migrate_train_state)
+from repro.core import penalty as PEN
+from repro.data import SyntheticLM
+from repro.elastic import (Segment, TrainSession, consolidate,
+                           rescale_for_replicas, reshard_state,
+                           restore_train_state)
+from repro.models import build_model
+from repro.train import TrainerConfig
+
+STRATEGIES = ["post_local_sgd", "diloco", "co2_star", "edit", "a_edit"]
+
+TAU, WARM, R0, GB = 2, 2, 4, 8
+SEAM = 6  # (SEAM - WARM) % TAU == 0 and SEAM > WARM: boundary pending
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(
+        get_config("llama_350m").reduced(), name="tiny-elastic",
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+        vocab_size=64)
+    return build_model(cfg, compute_dtype=jnp.float32, remat=False)
+
+
+def _strategy(name, replicas=R0):
+    return Strategy(name=name, replicas=replicas, sync_interval=TAU,
+                    warmup_steps=WARM)
+
+
+def _data(replicas=R0, gb=GB):
+    return SyntheticLM(64, 16, gb, seed=3, markov_q=0.9, replicas=replicas)
+
+
+def _tcfg(**kw):
+    kw.setdefault("total_steps", 40)
+    kw.setdefault("inner_lr", 3e-3)
+    kw.setdefault("lr_warmup", 2)
+    kw.setdefault("log_every", 0)
+    return TrainerConfig(**kw)
+
+
+def _params_rows(state):
+    return jax.tree_util.tree_flatten_with_path(
+        jax.tree.map(np.asarray, state["params"]))[0]
+
+
+def _assert_rows_equal_consolidated(state, ctl_p0, n_replicas):
+    ctl = jax.tree.leaves(ctl_p0)
+    rows = _params_rows(state)
+    assert len(rows) == len(ctl)
+    for (path, a), b in zip(rows, ctl):
+        assert a.shape[0] == n_replicas
+        for r in range(n_replicas):
+            np.testing.assert_array_equal(
+                a[r], np.asarray(b),
+                err_msg=f"replica {r} {jax.tree_util.keystr(path)}")
+
+
+@pytest.mark.parametrize("name", STRATEGIES)
+@pytest.mark.parametrize("new_r", [2, 8])
+def test_seam_is_exact_for_every_strategy(model, tmp_path, name, new_r):
+    """R=4 -> boundary -> checkpoint -> reshard to R' -> every replica row
+    equals the control's post-sync consolidated params bit-for-bit."""
+    strat = _strategy(name)
+    sess = TrainSession(model, strat, _data(), _tcfg())
+    sess.run_steps(SEAM)
+    assert sess.at_boundary()
+    d = str(tmp_path / "ck")
+    sess.save(d)
+    sess.flush()
+
+    meta = load_metadata(d)
+    assert meta["replicas"] == R0 and meta["strategy"] == name
+
+    # the fixed-topology control fires this exact sync in-graph at SEAM
+    ctl_state, _ = restore_train_state(d, model.cfg, strat)
+    ctl_p0 = jax.tree.map(lambda a: a[0],
+                          consolidate(ctl_state, model.cfg, strat)["params"])
+
+    resumed = TrainSession.resume(d, model, strat, _data(), _tcfg(),
+                                  replicas=new_r)
+    _assert_rows_equal_consolidated(resumed.state, ctl_p0, new_r)
+    # schedule adaptation: per-replica batch constant, sqrt LR rule
+    lr, bs = rescale_for_replicas(R0, new_r)
+    assert resumed.data.global_batch == (GB // R0) * new_r
+    assert resumed.lr_scale == pytest.approx(lr)
+    # the next sync is one full interval after the seam
+    assert resumed.strategy.warmup_steps == SEAM
+    h = resumed.run_steps(TAU + 1)
+    assert [r["synced"] for r in h[-(TAU + 1):]][-1] == 1.0
+
+
+@pytest.mark.parametrize("name", ["edit", "co2_star"])
+def test_same_topology_resume_is_bit_identical(model, tmp_path, name):
+    strat = _strategy(name)
+    sess = TrainSession(model, strat, _data(), _tcfg())
+    sess.run_steps(SEAM - 1)          # mid-round save
+    d = str(tmp_path / "ck")
+    sess.save(d)
+    sess.flush()
+    resumed = TrainSession.resume(d, model, strat, _data(), _tcfg())
+    ha = sess.run_steps(TAU * 2)
+    hb = resumed.run_steps(TAU * 2)
+    for a, b in zip(ha[-TAU * 2:], hb[-TAU * 2:]):
+        assert a["loss"] == b["loss"] and a["synced"] == b["synced"]
+    for (p, x), y in zip(
+            jax.tree_util.tree_flatten_with_path(sess.state)[0],
+            jax.tree.leaves(resumed.state)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=jax.tree_util.keystr(p))
+
+
+@pytest.mark.parametrize("new_r", [2, 8])
+def test_no_loss_spike_and_tracks_fixed_r_control(model, tmp_path, new_r):
+    """Continued training after the reshard stays on the control's loss
+    curve for >= 2 sync rounds — no seam spike, no divergence."""
+    strat = _strategy("edit")
+    sess = TrainSession(model, strat, _data(), _tcfg())
+    sess.run_steps(SEAM)
+    pre_loss = sess.history[-1]["loss"]
+    d = str(tmp_path / "ck")
+    sess.save(d)
+    sess.flush()
+
+    n = 3 * TAU
+    ctl = sess.run_steps(n)[-n:]                       # fixed R=4 control
+    resumed = TrainSession.resume(d, model, strat, _data(), _tcfg(),
+                                  replicas=new_r)
+    got = resumed.run_steps(n)[-n:]
+    assert got[0]["loss"] < pre_loss + 0.5             # no spike at the seam
+    ctl_tail = float(np.mean([r["loss"] for r in ctl[-TAU * 2:]]))
+    got_tail = float(np.mean([r["loss"] for r in got[-TAU * 2:]]))
+    assert abs(got_tail - ctl_tail) < 0.75, (got_tail, ctl_tail)
+    assert sum(r["synced"] for r in got) >= 2          # >= 2 sync rounds ran
+
+
+def test_mid_round_reshard_folds_departing_replicas(model):
+    """A mid-round shrink consolidates first: the surviving rows sit at
+    the post-fold anchor, so departing replicas' progress is kept."""
+    strat = _strategy("edit")
+    sess = TrainSession(model, strat, _data(), _tcfg())
+    sess.run_steps(SEAM - 1)                           # round open
+    state = sess.state
+    folded = consolidate(state, model.cfg, strat)
+    out = reshard_state(state, model.cfg, strat, 2)
+    exp = jax.tree.map(lambda a: a[:2], folded["params"])
+    for x, y in zip(jax.tree.leaves(out["params"]), jax.tree.leaves(exp)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    # joiners boot from the anchor row
+    grown = reshard_state(state, model.cfg, strat, 8)
+    boot = bootstrap_replica(consolidate(state, model.cfg, strat),
+                             model.cfg)
+    for x, y in zip(jax.tree.leaves(grown["params"]),
+                    jax.tree.leaves(boot["params"])):
+        np.testing.assert_array_equal(np.asarray(x[7]), np.asarray(y))
+
+
+def test_warmup_grow_boots_from_live_params_not_stale_anchor(model):
+    """Growing during warmup must clone the (identical, moved-off-init)
+    replica params, NOT the anchor — which only re-anchors at warm end."""
+    strat = Strategy(name="edit", replicas=2, sync_interval=TAU,
+                     warmup_steps=10)
+    sess = TrainSession(model, strat, _data(replicas=2, gb=4), _tcfg())
+    sess.run_steps(4)                           # inside warmup
+    pre = jax.tree.map(lambda a: np.asarray(a[0]), sess.state["params"])
+    sess.advance(replicas=4)
+    assert sess.strategy.warmup_steps == 10     # warmup schedule kept
+    for (path, a), b in zip(_params_rows(sess.state), jax.tree.leaves(pre)):
+        for r in range(4):
+            np.testing.assert_array_equal(
+                a[r], b, err_msg=f"replica {r} {jax.tree_util.keystr(path)}")
+
+
+def test_membership_events_fire_only_at_sync_boundaries(model):
+    """AEDiTScheduler join/leave requests defer to the next boundary."""
+    speeds = WorkerSpeedModel(n_workers=R0)
+    sched = AEDiTScheduler(speeds, tau_time=1e9)       # never time-syncs
+    strat = _strategy("a_edit")
+    sess = TrainSession(model, strat, _data(), _tcfg(), scheduler=sched)
+    sched.request_membership(2)
+    sess.run_steps(SEAM + 2)
+    # boundary at step 4 ((4 - warm) % tau == 0): steps 0-3 ran at R=4
+    reps = [r["replicas"] for r in sess.history]
+    assert reps[:4] == [R0] * 4
+    assert reps[4:] == [2] * (SEAM + 2 - 4)
+    assert sess.strategy.replicas == 2 and speeds.n_workers == 2
+    # no pending event left, and mid-round polls return None
+    assert sched.poll_membership(False) is None
+
+
+def test_segment_schedule_4_8_2(model):
+    """A full 4 -> 8 -> 2 segment schedule trains through both seams."""
+    sess = TrainSession(model, _strategy("edit"), _data(), _tcfg())
+    sess.run([Segment(steps=SEAM),
+              Segment(steps=2 * TAU, replicas=8),
+              Segment(steps=2 * TAU, replicas=2)])
+    reps = [r["replicas"] for r in sess.history]
+    assert reps.count(4) == SEAM and reps.count(8) == 2 * TAU \
+        and reps.count(2) == 2 * TAU
+    assert np.isfinite([r["loss"] for r in sess.history]).all()
+    assert len(sess.segments) == 2
+    # AdLoCo composition: sqrt(2) up then sqrt(1/4) down
+    assert sess.lr_scale == pytest.approx(np.sqrt(2.0) * np.sqrt(0.25))
+
+
+def test_topology_tags_in_manifest(model, tmp_path):
+    sess = TrainSession(model, _strategy("edit"), _data(), _tcfg())
+    sess.run_steps(2)
+    d = str(tmp_path / "ck")
+    sess.save(d, sync=True)
+    by_name = {e.get("name", ""): e for e in leaf_entries(d)}
+    blocks = [e for n, e in by_name.items()
+              if n.startswith("params.blocks.")]
+    assert blocks and all(e["replica_axis"] == 0 for e in blocks)
+    assert all(e["group"].startswith("blocks/") for e in blocks)
+    anchors = [e for n, e in by_name.items() if n.startswith("anchor.")]
+    assert anchors and all(e["replica_axis"] is None for e in anchors)
+    mu = [e for n, e in by_name.items()
+          if n.startswith("inner_opt.mu.blocks.")]
+    assert mu and all(e["replica_axis"] == 0 for e in mu)
+    meta = load_metadata(d)
+    assert meta["groups"] == [g.key for g in PEN.module_groups(model.cfg)]
+    assert meta["sync_interval"] == TAU
+
+
+def test_v1_whole_tree_checkpoint_migrates_and_reshards(model, tmp_path):
+    """The full legacy gauntlet: v1 format + pre-group-aligned layout ->
+    pickle-free shim -> migrate -> reshard to R'=2."""
+    from repro.checkpoint import restore
+    from tests.test_checkpoint_v2 import _save_v1
+
+    strat = _strategy("edit")
+    sess = TrainSession(model, strat, _data(), _tcfg())
+    sess.run_steps(SEAM)
+    state = sess.state
+    template = jax.tree.map(lambda a: a[0], state["params"])
+    old = dict(state)
+    old["anchor"] = PEN.merge_groups(state["anchor"], template)
+    old["outer_m"] = PEN.merge_groups(state["outer_m"], template)
+    _save_v1(str(tmp_path / "old"), old, {"layout": "whole-tree"})
+
+    migrated = migrate_train_state(restore(str(tmp_path / "old")),
+                                   model.cfg, strategy=strat)
+    for (p, x), y in zip(jax.tree_util.tree_flatten_with_path(state)[0],
+                         jax.tree.leaves(migrated)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=jax.tree_util.keystr(p))
+    out = reshard_state(migrated, model.cfg, strat, 2)
+    ctl = consolidate(state, model.cfg, strat)
+    for x, y in zip(jax.tree.leaves(out["params"]),
+                    jax.tree.leaves(ctl["params"])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y[:2]))
+
+
+def test_cross_strategy_resume_materializes_missing_state(model, tmp_path):
+    """A diloco checkpoint boots an edit run: restore_train_state fills
+    the penalty EMA groups for the TARGET strategy automatically."""
+    src = _strategy("diloco")
+    sess = TrainSession(model, src, _data(), _tcfg())
+    sess.run_steps(SEAM)
+    d = str(tmp_path / "ck")
+    sess.save(d, sync=True)
+    target = _strategy("edit")
+    state, _ = restore_train_state(d, model.cfg, target)
+    for g in PEN.module_groups(model.cfg):
+        assert g.key in state["ema"]
+        assert state["ema"][g.key]["mu"].shape == (R0, g.n_rep)
+    sess2 = TrainSession(model, target, _data(), _tcfg(), state=state)
+    h = sess2.run_steps(TAU + 1)
+    assert np.isfinite([r["loss"] for r in h]).all()
+
+
+def test_baseline_checkpoint_boots_edit_run_via_resume(model, tmp_path):
+    """The full cross-strategy path through TrainSession.resume: a
+    baseline checkpoint (no outer state at all) resumes as edit, anchor
+    re-anchored at the consolidated params."""
+    src = _strategy("baseline")
+    sess = TrainSession(model, src, _data(), _tcfg())
+    sess.run_steps(SEAM)
+    d = str(tmp_path / "ck")
+    sess.save(d, sync=True)
+    resumed = TrainSession.resume(d, model, _strategy("edit"),
+                                  _data(), _tcfg(), replicas=2)
+    assert "anchor" in resumed.state and "ema" in resumed.state
+    h = resumed.run_steps(TAU + 1)
+    assert np.isfinite([r["loss"] for r in h]).all()
+
+
+def test_resume_without_topology_metadata_still_rescales(model, tmp_path):
+    """A checkpoint saved without the topology metadata block (plain
+    checkpoint.save) must still resolve the source replica count from
+    leaf shapes: cross-R resume applies the AdLoCo rescale and moves the
+    warmup to the seam (no double sync at the first step)."""
+    from repro.checkpoint import save as plain_save
+    strat = _strategy("edit")
+    sess = TrainSession(model, strat, _data(), _tcfg())
+    sess.run_steps(SEAM)
+    d = str(tmp_path / "bare")
+    plain_save(d, sess.state, {"step": SEAM})
+    resumed = TrainSession.resume(d, model, strat, _data(), _tcfg(),
+                                  replicas=8)
+    lr, _ = rescale_for_replicas(R0, 8)
+    assert resumed.lr_scale == pytest.approx(lr)
+    assert resumed.data.global_batch == (GB // R0) * 8
+    assert resumed.strategy.warmup_steps == SEAM
+    assert not resumed.at_boundary()     # the seam sync already happened
+    h = resumed.run_steps(1)
+    assert h[-1]["synced"] == 0.0
