@@ -1,0 +1,136 @@
+"""Bytes-on-wire and step-time vs sync compressor (PR-5 tentpole).
+
+Two measurements:
+
+* **step time** — boundary-step wall time per compressor on the host
+  device (the quantize/dequantize overhead the compressor adds locally;
+  the wire win needs real slow links to show up in wall time).
+* **wire bytes** — compile the train step on 4 simulated host devices in
+  a subprocess and read the ``edit_sync``-tagged collective bytes out of
+  the optimized HLO via ``hlo_analysis.collective_bytes``: the int8
+  compressor's shared-scale reduction runs on s8 codes, so the tagged
+  all-reduce payload drops ~4x vs the fp32 exact path.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import FAST, bench_model, emit, time_step
+from repro.core import CommConfig, Strategy, init_train_state, make_train_step
+from repro.optim import AdamW, constant
+
+TAU = 8
+
+COMPRESSORS = {
+    "none": CommConfig(),
+    "int8": CommConfig(compressor="int8"),
+    "fp8": CommConfig(compressor="fp8"),
+    "topk": CommConfig(compressor="topk", topk_frac=0.01),
+}
+
+
+def _setup(comm):
+    model = bench_model(seq_len=64)
+    strat = Strategy(name="edit", replicas=4, sync_interval=TAU,
+                     warmup_steps=0, comm=comm)
+    opt = AdamW()
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(0))
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-3)))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (16, 64), 0,
+                                          model.cfg.vocab_size)}
+    return step, state, batch
+
+
+def bench_step_time() -> None:
+    iters = 3 if FAST else 10
+    times = {}
+    for name, comm in COMPRESSORS.items():
+        step, state, batch = _setup(comm)
+        s = dict(state)
+        s["step"] = jnp.int32(TAU)          # sync fires on this step
+        t = time_step(lambda st, b: step(st, b)[1], (s, batch), iters=iters)
+        times[name] = t
+        _, m = step(s, batch)
+        emit(f"sync_bytes/{name}_boundary_step", t * 1e6,
+             f"wire={int(m['wire_bytes'])}B "
+             f"ratio={float(m['comp_ratio']):.2f}")
+    emit("sync_bytes/int8_vs_none_boundary_step", times["int8"] /
+         max(times["none"], 1e-9),
+         "local quantize overhead (wire win needs real slow links)")
+
+
+_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, dataclasses, json; sys.path.insert(0, "src")
+import repro  # noqa
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.core import CommConfig, Strategy, init_train_state, make_train_step
+from repro.dist.sharding import TRAIN_POLICY, use_policy
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import collective_bytes
+from repro.models import build_model
+from repro.optim import AdamW, constant
+
+mesh = jax.make_mesh((4, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+cfg = dataclasses.replace(
+    get_config("llama_350m").reduced(), name="tiny-bytes",
+    d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+    vocab_size=128)
+model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+opt = AdamW()
+out = {}
+with jax.set_mesh(mesh), use_policy(TRAIN_POLICY):
+    for name in ("none", "int8"):
+        comm = CommConfig(compressor=name) if name != "none" else CommConfig()
+        strat = Strategy(name="edit", replicas=4, sync_interval=2,
+                         warmup_steps=0, comm=comm)
+        state = jax.eval_shape(lambda k: init_train_state(model, strat, opt, k),
+                               jax.random.PRNGKey(0))
+        st_specs = SP.train_state_specs(state, cfg, mesh)
+        batch = jax.ShapeDtypeStruct((8, 32), jnp.int32)
+        b_specs = SP.train_batch_specs({"tokens": batch}, cfg, mesh, 4)
+        step = jax.jit(make_train_step(model, strat, opt, constant(1e-3)),
+                       in_shardings=(st_specs, b_specs))
+        cb = collective_bytes(step.lower(state, {"tokens": batch})
+                              .compile().as_text())
+        tags = cb["by_sync_tag"]
+        out[name] = {"sync_total": sum(d["total"] for d in tags.values()),
+                     "tags": {t: d["total"] for t, d in tags.items()}}
+print("BYTES", json.dumps(out))
+"""
+
+
+def bench_wire_bytes() -> None:
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    try:
+        res = subprocess.run([sys.executable, "-c", _SUBPROC],
+                             capture_output=True, text=True, env=env,
+                             cwd=root, timeout=560)
+        out = json.loads(res.stdout.split("BYTES", 1)[1].strip())
+    except Exception as e:   # pragma: no cover - report, don't crash CI
+        emit("sync_bytes/hlo_bytes_unavailable", 0.0, f"err={e}")
+        return
+    for name, rec in out.items():
+        emit(f"sync_bytes/{name}_hlo_sync_bytes", float(rec["sync_total"]),
+             " ".join(f"{t}={b}" for t, b in sorted(rec["tags"].items())))
+    ratio = out["none"]["sync_total"] / max(out["int8"]["sync_total"], 1)
+    emit("sync_bytes/int8_hlo_byte_reduction", ratio,
+         "none/int8 edit_sync-tagged collective bytes (target >= 3x)")
+
+
+def main() -> None:
+    bench_step_time()
+    bench_wire_bytes()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,14 @@
+"""repro.comm — compressed, hierarchy-aware pseudo-gradient sync.
+
+``CommConfig`` selects the wire compressor for the boundary sync (carried
+on ``core.edit.Strategy``); ``compressed_combine`` is the cross-replica
+reduction it drives (int8/fp8 stochastic-rounding quantizers with shared
+per-chunk scales, topk sparsifier, optional two-level hierarchical
+reduce, per-replica error feedback).  See DESIGN.md §14.
+"""
+from repro.comm.compress import (FP8_DTYPE, FP8_QMAX, CommConfig,
+                                 fp8_quantize, sr_to_fp8)
+from repro.comm.reduce import compressed_combine, int8_qmax
+
+__all__ = ["CommConfig", "compressed_combine", "int8_qmax",
+           "fp8_quantize", "sr_to_fp8", "FP8_DTYPE", "FP8_QMAX"]

@@ -1,0 +1,153 @@
+"""Pseudo-gradient wire compression: configs and quantizer primitives.
+
+EDiT's premise is that communication bounds large-scale training, yet the
+boundary sync ships full-precision fp32 pseudo gradients over the replica
+axis.  The Local-SGD follow-ups (asynchronous Local-SGD training for
+language modeling; AdLoCo) observe that the *outer* step tolerates
+aggressive wire compression when paired with error feedback — the
+quantization residual is carried per worker and re-injected into the next
+round's message, so the compression error telescopes instead of
+accumulating.
+
+This module is the dtype/rounding layer of ``repro.comm``:
+
+* :class:`CommConfig` — the pluggable compressor selection carried on
+  ``core.edit.Strategy`` (hashable; rides jit static args).
+* ``int8`` / ``fp8`` — stochastic-rounding quantizers with **per-chunk
+  scales shared across replicas**.  The shared scale is what lets the
+  cross-replica reduction run *on the codes themselves* (int8 codes sum
+  exactly in int8; fp8 codes accumulate in bf16), so the all-reduce
+  operand — the actual wire payload — shrinks 4x / 2x instead of being
+  dequantized back to fp32 before the collective.
+* ``topk`` — magnitude sparsifier (k values + indices per row is the
+  *logical* wire format; the SPMD lowering stays dense, so its savings
+  show in the ``wire_bytes`` telemetry, not in HLO collective bytes).
+* ``none`` — the exact fp32 path, bit-identical to the pre-compression
+  pipeline by construction (it takes the same code path).
+
+The int8 hot path is backed by the Pallas kernels
+``kernels.pg_quant``/``pg_dequant`` (jnp refs off-TPU); fp8 uses the
+mantissa-dither stochastic cast below (jnp everywhere — the wire win is
+the bf16 accumulate, not the local cast).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import mix32
+
+_COMPRESSORS = ("none", "int8", "fp8", "topk")
+
+# f8e4m3 caps at 448; quantize into +-240 so stochastic rounding up plus
+# the bf16-accumulated cross-replica sum keeps comfortable headroom
+FP8_QMAX = 240.0
+FP8_DTYPE = jnp.float8_e4m3fn
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """Wire-compression config for the boundary sync (one per Strategy).
+
+    ``chunk``: flat elements per quantization scale (the per-chunk scale
+    is the only fp32 cross-replica traffic: N/chunk floats per layer row).
+    ``topk_frac``: fraction of entries the sparsifier keeps per (layer,
+    replica) row.  ``intra``: replicas per intra-node group for the
+    two-level hierarchical reduce — partials are averaged exactly in fp32
+    *within* each group of ``intra`` replicas (the fast links of
+    ``make_hierarchical_mesh`` / the intra-pod ICI), and only the
+    compressed exchange crosses groups (the slow inter-node links).
+    ``stochastic``: stochastic rounding (False: round-to-nearest, biased —
+    debugging only).
+    """
+    compressor: str = "none"
+    chunk: int = 1024
+    topk_frac: float = 0.01
+    intra: int = 1
+    stochastic: bool = True
+
+    def __post_init__(self):
+        if self.compressor not in _COMPRESSORS:
+            raise ValueError(
+                f"unknown compressor '{self.compressor}'; "
+                f"pick one of {_COMPRESSORS}")
+        if self.chunk < 1 or self.intra < 1:
+            raise ValueError(f"chunk/intra must be >= 1: {self}")
+
+    @property
+    def active(self) -> bool:
+        return self.compressor != "none"
+
+    @property
+    def carries_ef(self) -> bool:
+        """True when the compressor is lossy per-round and therefore keeps
+        per-replica error-feedback residuals in the train state."""
+        return self.active
+
+    def wire_bytes(self, L: int, N: int) -> float:
+        """Nominal bytes a replica puts on the *slow* (inter-node) link per
+        sync for one (L, N) group: the reduction payload plus scales.  The
+        exact path moves fp32; the quantizers move their code dtype (int8
+        sums in int8, fp8 accumulates in bf16); topk's logical format is
+        k (value, index) pairs per layer row."""
+        nch = effective_chunking(N, self.chunk)[1]
+        if self.compressor == "int8":
+            return L * N * 1 + L * nch * 4
+        if self.compressor == "fp8":
+            return L * N * 2 + L * nch * 4
+        if self.compressor == "topk":
+            k = max(1, min(N, int(round(self.topk_frac * N))))
+            return L * k * 8
+        return L * N * 4
+
+
+def effective_chunking(N: int, chunk: int, align: int = 64):
+    """Shard-friendly scale chunking for a flat group dim of N elements.
+
+    The per-chunk maxima come from a ``(..., N) -> (..., nch, chunk)``
+    reshape of the packed sync buffer whose N dim carries the ZeRO-style
+    fsdp sharding; GSPMD can only keep that sharding through the reshape
+    when the shard count divides ``nch`` (otherwise it all-gathers the
+    whole fp32 buffer — worse than shipping it uncompressed).  Pick the
+    largest chunk <= the requested one with ``N % chunk == 0`` and ``nch``
+    a multiple of ``align`` (covers fsdp axes up to 64-way), else fall
+    back to one scale per row.  Exact divisibility also means no padding,
+    which would reshard the same way.  Returns ``(chunk, nch)``.
+    """
+    for c in range(min(chunk, N // align), 0, -1):
+        if N % c == 0 and (N // c) % align == 0:
+            return c, N // c
+    return N, 1
+
+
+def sr_to_fp8(v, bits):
+    """Stochastically round fp32 ``v`` (pre-scaled into the f8 range) onto
+    the float8_e4m3fn grid.  Uniform dither of the f32 mantissa bits below
+    the f8 precision, centered, then round-to-nearest cast — within a
+    binade this is exact stochastic rounding (E[sr(v)] = v); across binade
+    boundaries and in the f8-subnormal range it deviates by a fraction of
+    an ulp, which the error-feedback residual absorbs."""
+    mant_drop = 23 - jnp.finfo(FP8_DTYPE).nmant          # 20 for e4m3
+    sign = jnp.sign(v)
+    mag = jnp.abs(v)
+    mbits = jax.lax.bitcast_convert_type(mag, jnp.uint32).astype(jnp.int32)
+    dither = (bits & jnp.uint32((1 << mant_drop) - 1)).astype(jnp.int32) \
+        - (1 << (mant_drop - 1))
+    dithered = jnp.maximum(mbits + dither, 0).astype(jnp.uint32)
+    mag2 = jax.lax.bitcast_convert_type(dithered, jnp.float32)
+    mag2 = jnp.minimum(mag2, float(jnp.finfo(FP8_DTYPE).max))
+    return (sign * mag2).astype(FP8_DTYPE)
+
+
+def fp8_quantize(upad, scale, seed):
+    """upad: (L, P, Np) fp32 messages; scale: (L, nch) shared per-chunk
+    scale (sum over P of per-replica chunk maxabs).  Returns f8 codes of
+    the same shape; decode is ``codes * scale_per_elem / FP8_QMAX``."""
+    L, P, Np = upad.shape
+    chunk = Np // scale.shape[1]
+    s = jnp.repeat(scale, chunk, axis=1)[:, None, :]      # (L, 1, Np)
+    v = upad * (FP8_QMAX / jnp.maximum(s, 1e-30))
+    idx = (jnp.arange(L * P * Np, dtype=jnp.uint32).reshape(L, P, Np))
+    return sr_to_fp8(v, mix32(idx, seed))

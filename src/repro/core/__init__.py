@@ -1,3 +1,4 @@
+from repro.comm import CommConfig
 from repro.core.edit import (Strategy, bootstrap_replica, init_train_state,
                              make_sync_fn, make_train_step,
                              migrate_train_state)

@@ -25,12 +25,14 @@ boundary sync as the numerical-equivalence oracle.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.comm import CommConfig
 from repro.core import penalty as PEN
 from repro.core import stream as STR
 from repro.core.outer_opt import Nesterov
@@ -47,6 +49,9 @@ class Strategy:
     outer_momentum: float = 0.85
     penalty: PenaltyConfig = field(default_factory=PenaltyConfig)
     inner_clip: float = 1.0
+    # boundary-sync wire compression (repro.comm, DESIGN.md §14); "none"
+    # keeps the exact fp32 path bit-identical to the pre-compression code
+    comm: CommConfig = field(default_factory=CommConfig)
 
     @property
     def uses_outer(self) -> bool:
@@ -100,7 +105,12 @@ def make_sync_fn(cfg, strategy: Strategy):
     """Monolithic whole-model sync over plain (un-grouped) trees.  The hot
     path is ``core.stream.SyncSchedule`` on the group-aligned state; this
     wrapper survives for external callers and property tests that reason
-    about one boundary sync in isolation."""
+    about one boundary sync in isolation.  It is stateless across calls,
+    so it always syncs EXACTLY (comm forced to ``none``): applying a lossy
+    compressor here would drop the error-feedback residual on the floor
+    every round instead of deferring it."""
+    if strategy.comm.active:
+        strategy = dataclasses.replace(strategy, comm=CommConfig())
     outer = strategy.outer_optimizer()
     groups = PEN.module_groups(cfg)
 
@@ -119,7 +129,7 @@ def make_sync_fn(cfg, strategy: Strategy):
                     "sigma": jnp.ones((R, g.n_rep), jnp.float32)}
             else:
                 ema_g = None
-            pg2, a2, m2, ema2, _, info = STR.sync_group(
+            pg2, a2, m2, ema2, _, _, info = STR.sync_group(
                 g, strategy, outer, gp[g.key], ga[g.key], gm[g.key],
                 ema_g, ema["count"])
             new_p[g.key], new_a[g.key], new_m[g.key] = pg2, a2, m2
@@ -165,7 +175,22 @@ def init_train_state(model, strategy: Strategy, inner_opt, key) -> Dict[str, Any
         if strategy.delayed:
             state["prev_delta"] = PEN.split_by_group(jax.tree.map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), p0), cfg)
+        if strategy.comm.carries_ef:
+            state["ef"] = _zero_ef_state(p0, cfg, R)
     return state
+
+
+def _zero_ef_state(p0, cfg, R: int) -> Dict[str, Any]:
+    """Per-group error-feedback residuals for the compressed sync
+    (repro.comm): one (R, n_rep, N) fp32 buffer per module group, in the
+    packed layout of ``stream.flatten_group``'s (L, R, N) sync buffer
+    (replica-leading so reshard/checkpoint treat it like every other
+    replica-axis leaf)."""
+    gp0 = PEN.split_by_group(p0, cfg)
+    return {g.key: jnp.zeros(
+                (R, g.n_rep, STR.group_flat_width(gp0[g.key], g.stacked)),
+                jnp.float32)
+            for g in PEN.module_groups(cfg)}
 
 
 def migrate_train_state(state: Dict[str, Any], cfg,
@@ -178,8 +203,10 @@ def migrate_train_state(state: Dict[str, Any], cfg,
     the target strategy needs but the checkpoint lacks (cross-strategy
     elastic resume): a missing ``anchor`` re-anchors at the consolidated
     replica-0 params, ``outer_m`` starts at zero momentum, per-group EMA
-    stats get the (R, n_rep) init, and CO2*'s ``prev_delta`` starts at
-    zero — i.e. a baseline/diloco checkpoint can boot an edit run.
+    stats get the (R, n_rep) init, CO2*'s ``prev_delta`` starts at zero,
+    and a compressed strategy's error-feedback ``ef`` boots at zero (an
+    EF-less / v1 checkpoint simply has no deferred updates yet) — i.e. a
+    baseline/diloco checkpoint can boot an edit or edit+int8 run.
     """
     out = dict(state)
     for k in ("anchor", "outer_m", "prev_delta"):
@@ -187,6 +214,8 @@ def migrate_train_state(state: Dict[str, Any], cfg,
         if isinstance(tree, dict) and "globals" not in tree:
             out[k] = PEN.split_by_group(tree, cfg)
     if strategy is None or not strategy.uses_outer:
+        if strategy is not None:
+            out.pop("ef", None)
         return out
     R = jax.tree.leaves(out["params"])[0].shape[0]
     p0 = jax.tree.map(lambda a: a[0], out["params"])
@@ -206,6 +235,19 @@ def migrate_train_state(state: Dict[str, Any], cfg,
     if strategy.delayed and "prev_delta" not in out:
         out["prev_delta"] = PEN.split_by_group(jax.tree.map(
             lambda p: jnp.zeros(p.shape, jnp.float32), p0), cfg)
+    if strategy.comm.carries_ef:
+        ef = dict(out.get("ef") or {})
+        need = [g for g in PEN.module_groups(cfg) if g.key not in ef]
+        if need:   # EF buffers are params-sized x R: allocate only missing
+            gp0 = PEN.split_by_group(p0, cfg)
+            for g in need:
+                ef[g.key] = jnp.zeros(
+                    (R, g.n_rep,
+                     STR.group_flat_width(gp0[g.key], g.stacked)),
+                    jnp.float32)
+        out["ef"] = ef
+    else:
+        out.pop("ef", None)
     return out
 
 

@@ -26,6 +26,7 @@ whole-model boundary sync survives only as the differential oracle
 """
 from __future__ import annotations
 
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -35,7 +36,9 @@ from repro.core import penalty as PEN
 from repro.core.penalty import PenaltyConfig
 from repro.kernels.ops import pg_penalty_group_op
 
-INFO_KEYS = ("anomalous_frac", "rollback_frac", "mean_norm", "mean_beta")
+# wire_bytes sums over groups in ``SyncSchedule.apply``; the rest average
+INFO_KEYS = ("anomalous_frac", "rollback_frac", "mean_norm", "mean_beta",
+             "wire_bytes", "comp_ratio")
 
 # mean over replicas == Algorithm 2 with every EDiT refinement disabled
 _PLAIN_MEAN = PenaltyConfig(enable_anomaly=False, enable_weighting=False,
@@ -55,7 +58,8 @@ def flatten_group(tree, n_rep: int, stacked: bool):
     R = leaves[0].shape[0]
     parts, bodies = [], []
     for lf in leaves:
-        lf = lf.astype(jnp.float32)
+        if lf.dtype != jnp.float32:   # skip the no-op copy for fp32 leaves
+            lf = lf.astype(jnp.float32)
         if stacked:
             bodies.append(lf.shape[2:])
             parts.append(jnp.swapaxes(lf.reshape(R, n_rep, -1), 0, 1))
@@ -79,18 +83,45 @@ def flatten_group(tree, n_rep: int, stacked: bool):
     return flat, unflatten
 
 
+def group_flat_width(tree, stacked: bool) -> int:
+    """Flat param count N of one module group's replica-free tree (stacked
+    leaves are (n_rep, ...); the layer-repeat dim is NOT part of N) — the
+    last dim of the packed (L, R, N) sync buffer and of the per-group
+    error-feedback state."""
+    n = 0
+    for lf in jax.tree.leaves(tree):
+        body = lf.shape[1:] if stacked else lf.shape
+        w = 1
+        for d in body:
+            w *= d
+        n += w
+    return n
+
+
+def _group_seed(g: PEN.Group, count):
+    """Per-(group, sync-round) uint32 seed for stochastic rounding — a
+    pure function of the sync counter, so the streamed and monolithic
+    pipelines quantize bit-identically."""
+    return (count.astype(jnp.uint32)
+            ^ jnp.uint32(zlib.crc32(g.key.encode()) & 0xFFFFFFFF))
+
+
 def sync_group(g: PEN.Group, strategy, outer, pg, ag, mg,
-               ema_g: Optional[Dict], count, prev_g=None,
-               impl: str = "auto") -> Tuple:
+               ema_g: Optional[Dict], count, prev_g=None, ef_g=None,
+               flush_ef: bool = False, impl: str = "auto") -> Tuple:
     """One module group's Algorithm-2 sync (all layer repeats at once).
 
     pg: group params with replica prefix (R, [n_rep,] ...); ag/mg: anchor /
     outer momentum without R; ema_g: {'mu','sigma'} (R, n_rep) stats
     (penalty strategies only); prev_g: the one-round-stale pseudo gradient
-    (CO2* only).  Returns (new_pg, new_ag, new_mg, new_ema_g, new_prev_g,
-    info) with the same structures.
+    (CO2* only); ef_g: (R, n_rep, N) error-feedback residuals (compressed
+    strategies only); ``flush_ef`` drains the residuals exactly into this
+    sync and zeroes them (elastic consolidation).  Returns (new_pg,
+    new_ag, new_mg, new_ema_g, new_prev_g, new_ef_g, info) with the same
+    structures.
     """
     pcfg = strategy.penalty if strategy.uses_penalty else _PLAIN_MEAN
+    comm = getattr(strategy, "comm", None)
     delta = jax.tree.map(
         lambda p, a: p.astype(jnp.float32) - a.astype(jnp.float32)[None],
         pg, ag)
@@ -101,13 +132,18 @@ def sync_group(g: PEN.Group, strategy, outer, pg, ag, mg,
     else:
         mu = jnp.zeros((g.n_rep, R), jnp.float32)
         sigma = jnp.ones((g.n_rep, R), jnp.float32)
-    d_flat, rollback, mu2, s2, info = pg_penalty_group_op(
-        flat, mu, sigma, count,
+    ef_flat = (None if ef_g is None
+               else jnp.swapaxes(ef_g.astype(jnp.float32), 0, 1))
+    d_flat, rollback, mu2, s2, ef2, info = pg_penalty_group_op(
+        flat, mu, sigma, count, ef_flat, _group_seed(g, count),
         clip_threshold=pcfg.clip_threshold, anomaly_z=pcfg.anomaly_z,
         ema_alpha=pcfg.ema_alpha, ema_warmup=pcfg.ema_warmup_syncs,
         eps=pcfg.eps, enable_anomaly=pcfg.enable_anomaly,
         enable_weighting=pcfg.enable_weighting,
-        enable_clip=pcfg.enable_clip, impl=impl)
+        enable_clip=pcfg.enable_clip, comm=comm, flush_ef=flush_ef,
+        impl=impl)
+    new_ef = (None if ef_g is None or ef2 is None
+              else jnp.swapaxes(ef2, 0, 1).astype(ef_g.dtype))
     d_hat = unflatten(d_flat)
 
     if strategy.delayed and prev_g is not None:
@@ -138,8 +174,9 @@ def sync_group(g: PEN.Group, strategy, outer, pg, ag, mg,
         a2, pg)
     new_ema = ({"mu": mu2.T, "sigma": s2.T} if ema_g is not None else None)
     if not strategy.uses_penalty:
-        info = zero_info()
-    return new_pg, a2, m2, new_ema, new_prev, info
+        wire = {k: info[k] for k in ("wire_bytes", "comp_ratio")}
+        info = dict(zero_info(), **wire)
+    return new_pg, a2, m2, new_ema, new_prev, new_ef, info
 
 
 def _scope(key: str) -> str:
@@ -160,6 +197,8 @@ class SyncSchedule:
         self.cfg = cfg
         self.strategy = strategy
         self.outer = strategy.outer_optimizer()
+        comm = getattr(strategy, "comm", None)
+        self.carries_ef = bool(comm is not None and comm.carries_ef)
         by_key = {g.key: g for g in PEN.module_groups(cfg)}
         order: List[str] = ["globals"]
         if "encoder" in by_key:          # encoded before the decoder stack
@@ -172,27 +211,32 @@ class SyncSchedule:
         ema_g = state["ema"].get(g.key) if self.strategy.uses_penalty else None
         prev_g = (state["prev_delta"][g.key] if self.strategy.delayed
                   else None)
+        ef_g = state["ef"][g.key] if self.carries_ef else None
         return (gp[g.key], state["anchor"][g.key], state["outer_m"][g.key],
-                ema_g, prev_g)
+                ema_g, prev_g, ef_g)
 
-    def _fire(self, g, count):
+    def _fire(self, g, count, flush_ef=False):
         def fire(operand):
-            pg, ag, mg, ema_g, prev_g = operand
-            new_pg, a2, m2, ema2, prev2, info = sync_group(
+            pg, ag, mg, ema_g, prev_g, ef_g = operand
+            new_pg, a2, m2, ema2, prev2, ef2, info = sync_group(
                 g, self.strategy, self.outer, pg, ag, mg, ema_g, count,
-                prev_g)
-            return new_pg, a2, m2, ema2, prev2, info
+                prev_g, ef_g, flush_ef=flush_ef)
+            return new_pg, a2, m2, ema2, prev2, ef2, info
         return fire
 
     @staticmethod
     def _skip(operand):
-        pg, ag, mg, ema_g, prev_g = operand
-        return pg, ag, mg, ema_g, prev_g, zero_info()
+        pg, ag, mg, ema_g, prev_g, ef_g = operand
+        return pg, ag, mg, ema_g, prev_g, ef_g, zero_info()
 
-    def apply(self, state, do_sync, at_warm_end, *, streamed: bool = True):
+    def apply(self, state, do_sync, at_warm_end, *, streamed: bool = True,
+              flush_ef: bool = False):
         """Run the sync pipeline.  Also handles the end-of-warmup re-anchor
         (replicas are still identical; anchor := replica-0 params) so every
-        strategy's boundary behavior lives on this one path."""
+        strategy's boundary behavior lives on this one path.  ``flush_ef``
+        folds the error-feedback residuals exactly into this sync and
+        zeroes them — the elastic consolidation semantics (departing
+        replicas must not leave deferred updates behind)."""
         strategy = self.strategy
         gp = PEN.split_by_group(state["params"], self.cfg)
         count = state["ema"]["count"]
@@ -201,14 +245,14 @@ class SyncSchedule:
             for g in self.groups:
                 with jax.named_scope(_scope(g.key)):
                     results[g.key] = jax.lax.cond(
-                        do_sync, self._fire(g, count), self._skip,
+                        do_sync, self._fire(g, count, flush_ef), self._skip,
                         self._operand(state, gp, g))
         else:
             operands = tuple(self._operand(state, gp, g)
                              for g in self.groups)
 
             def fire_all(ops):
-                return tuple(self._fire(g, count)(o)
+                return tuple(self._fire(g, count, flush_ef)(o)
                              for g, o in zip(self.groups, ops))
 
             def skip_all(ops):
@@ -221,9 +265,9 @@ class SyncSchedule:
         new_p, new_a, new_m = {}, {}, {}
         new_ema: Dict[str, Any] = {
             "count": jnp.where(do_sync, count + 1, count)}
-        new_prev, infos = {}, []
+        new_prev, new_ef, infos = {}, {}, []
         for g in self.groups:
-            pg2, a2, m2, ema2, prev2, info = results[g.key]
+            pg2, a2, m2, ema2, prev2, ef2, info = results[g.key]
             # end-of-warmup re-anchor (mutually exclusive with do_sync);
             # cond-gated so off-warm-end steps pass anchors through
             a2 = jax.lax.cond(
@@ -236,6 +280,8 @@ class SyncSchedule:
                 new_ema[g.key] = ema2
             if strategy.delayed:
                 new_prev[g.key] = prev2
+            if ef2 is not None:
+                new_ef[g.key] = ef2
             infos.append(info)
 
         out = dict(state)
@@ -243,6 +289,10 @@ class SyncSchedule:
         out["anchor"], out["outer_m"], out["ema"] = new_a, new_m, new_ema
         if strategy.delayed:
             out["prev_delta"] = new_prev
-        info = {k: jnp.mean(jnp.stack([i[k] for i in infos]))
+        if self.carries_ef:
+            out["ef"] = new_ef
+        # wire_bytes is additive across groups; the rest are means
+        info = {k: (jnp.sum if k == "wire_bytes" else jnp.mean)(
+                    jnp.stack([i[k] for i in infos]))
                 for k in INFO_KEYS}
         return out, info

@@ -58,12 +58,16 @@ def consolidate(state: Dict[str, Any], cfg, strategy: Strategy
     """Fold every replica into the boundary sync NOW and return the
     post-sync state (all replicas at the new anchor).  For non-outer
     strategies (baseline) the replicas are lock-step already and this is
-    the identity."""
+    the identity.  Compressed strategies consolidate with ``flush_ef``:
+    the exact fp32 sync drains every replica's error-feedback residual
+    (departing replicas must not leave deferred updates behind) and the
+    post-consolidation EF is zero — which is also what joining replicas
+    boot with."""
     if not strategy.uses_outer:
         return state
     schedule = STR.SyncSchedule(cfg, strategy)
     out, _ = schedule.apply(state, jnp.asarray(True), jnp.asarray(False),
-                            streamed=False)
+                            streamed=False, flush_ef=True)
     return out
 
 
@@ -115,6 +119,11 @@ def reshard_state(state: Dict[str, Any], cfg, strategy: Strategy,
             ema[k] = {"mu": resize(v["mu"], boot["ema"][k]["mu"]),
                       "sigma": resize(v["sigma"], boot["ema"][k]["sigma"])}
         out["ema"] = ema
+    if "ef" in state:
+        # consolidation above flushed every residual, so survivors carry
+        # zeros and joiners boot with zeros — the resize is uniform
+        out["ef"] = {k: resize(v, jnp.zeros(v.shape[1:], v.dtype))
+                     for k, v in state["ef"].items()}
     # anchor / outer_m / prev_delta are replica-free and carry over as-is
     return out
 
@@ -184,6 +193,10 @@ def leaf_topology_tagger(cfg):
             return {"replica_axis": None, "group": keys[1]}
         if top == "ema" and len(keys) >= 3:
             return {"replica_axis": 0, "group": keys[1]}
+        if top == "ef" and len(keys) >= 2:
+            # error-feedback residuals (repro.comm): (R, n_rep, N) packed
+            # buffers keyed directly by module group
+            return {"replica_axis": 0, "group": keys[1]}
         return None
 
     return tag
@@ -197,6 +210,7 @@ def save_train_state(directory: str, state: Dict[str, Any], cfg,
     replica-axis/group leaf tags and a topology metadata block (replica
     count, sync interval, warmup, module groups, mesh shape).  With
     ``checkpointer`` the write happens on its background thread."""
+    import dataclasses
     meta = {
         "format": "edit-train-state",
         "step": int(state["step"]),
@@ -205,6 +219,10 @@ def save_train_state(directory: str, state: Dict[str, Any], cfg,
         "sync_interval": strategy.sync_interval,
         "warmup_steps": strategy.warmup_steps,
         "groups": [g.key for g in PEN.module_groups(cfg)],
+        # wire-compression config: restore must know the SOURCE comm
+        # semantics (an EF-carrying checkpoint keeps its residuals on a
+        # same-topology resume; consolidation flushes them on reshard)
+        "comm": dataclasses.asdict(strategy.comm),
         "mesh": ({"axes": list(mesh.axis_names),
                   "shape": list(mesh.devices.shape)} if mesh is not None
                  else None),
@@ -239,6 +257,7 @@ def restore_train_state(directory: str, cfg, strategy: Strategy, *,
     src_replicas = int(meta.get("replicas") or
                        jax.tree.leaves(state["params"])[0].shape[0])
     meta["replicas"] = src_replicas
+    from repro.comm import CommConfig
     src_strategy = Strategy(
         name=meta.get("strategy", strategy.name),
         replicas=src_replicas,
@@ -249,6 +268,8 @@ def restore_train_state(directory: str, cfg, strategy: Strategy, *,
         outer_momentum=strategy.outer_momentum,
         penalty=strategy.penalty,
         inner_clip=strategy.inner_clip,
+        # pre-comm checkpoints (no "comm" block) were uncompressed
+        comm=CommConfig(**meta.get("comm") or {}),
     )
     state = migrate_train_state(state, cfg, strategy=src_strategy)
     target = replicas if replicas is not None else src_replicas

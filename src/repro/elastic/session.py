@@ -45,7 +45,7 @@ from repro.elastic.reshard import (replica_count, rescale_for_replicas,
 from repro.optim import AdamW, cosine_with_warmup
 
 _HISTORY_KEYS = ("synced", "anomalous_frac", "rollback_frac",
-                 "mean_norm", "mean_beta")
+                 "mean_norm", "mean_beta", "wire_bytes", "comp_ratio")
 
 
 @dataclass(frozen=True)

@@ -16,6 +16,7 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.pg_penalty import (pg_combine, pg_combine_stacked,
                                       pg_sumsq, pg_sumsq_stacked)
+from repro.kernels.pg_quant import pg_dequant, pg_quant
 from repro.kernels.selective_scan import selective_scan
 
 
@@ -58,14 +59,42 @@ def _pad_flat(delta):
     return delta, bn
 
 
+@functools.partial(jax.jit, static_argnames=("qmax", "stochastic", "impl"))
+def pg_quant_op(u, scale, seed, *, qmax: float,
+                stochastic: bool = True, impl: str = "auto"):
+    """Stochastic-rounding int8 quantizer against shared per-chunk scales
+    (repro.comm hot path).  u: (L, P, Np) fp32 messages; scale: (L, nch);
+    returns int8 codes.  Kernel and jnp ref share the counter-based
+    splitmix32 stream, so all impls are bit-identical for a seed."""
+    use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
+    interp = impl == "interpret" or not on_tpu()
+    if use_kernel:
+        return pg_quant(u, scale, seed, qmax=qmax,
+                        stochastic=stochastic, interpret=interp)
+    return ref.pg_quant_ref(u, scale, seed, qmax=qmax, stochastic=stochastic)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "impl"))
+def pg_dequant_op(codes, scale, *, qmax: float, impl: str = "auto"):
+    """codes (L, M, Np) -> fp32 ``codes * scale / qmax`` (inverse of
+    ``pg_quant_op`` up to the rounding the EF residual carries)."""
+    use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
+    interp = impl == "interpret" or not on_tpu()
+    if use_kernel:
+        return pg_dequant(codes, scale, qmax=qmax, interpret=interp)
+    return ref.pg_dequant_ref(codes, scale, qmax=qmax)
+
+
 @functools.partial(jax.jit, static_argnames=(
     "clip_threshold", "anomaly_z", "ema_alpha", "ema_warmup", "eps",
     "enable_anomaly", "enable_weighting", "enable_clip", "seed_first",
-    "impl"))
-def pg_penalty_group_op(delta, mu, sigma, sync_count, *, clip_threshold=10.0,
+    "comm", "flush_ef", "impl"))
+def pg_penalty_group_op(delta, mu, sigma, sync_count, ef=None, seed=None, *,
+                        clip_threshold=10.0,
                         anomaly_z=3.0, ema_alpha=0.02, ema_warmup=10,
                         eps=1e-8, enable_anomaly=True, enable_weighting=True,
-                        enable_clip=True, seed_first=True, impl: str = "auto"):
+                        enable_clip=True, seed_first=True, comm=None,
+                        flush_ef: bool = False, impl: str = "auto"):
     """Full Algorithm-2 penalty for one flattened module group, all layer
     repeats at once — the hot-path sync primitive behind
     ``core.stream.sync_group``.
@@ -78,8 +107,16 @@ def pg_penalty_group_op(delta, mu, sigma, sync_count, *, clip_threshold=10.0,
     to the plain replica mean — the DiLoCo / Post-Local-SGD / CO2* sync —
     so every strategy shares this one primitive.
 
+    ``comm`` (a hashable :class:`repro.comm.CommConfig`) routes the
+    weighted average through the compressed reduction with per-replica
+    error feedback ``ef`` (L, R, N) and SR seed ``seed``; the ``none``
+    compressor (or ``comm=None``) takes the exact fp32 path unchanged.
+    ``flush_ef`` forces the exact path but folds the residuals into the
+    average and zeroes them — the elastic consolidation semantics
+    (departing replicas drain their EF into the boundary sync).
+
     Returns (delta_hat (L, N) fp32, rollback (L,) bool, new_mu, new_sigma
-    (L, R) fp32, info dict of scalars).
+    (L, R) fp32, new_ef (or None), info dict of scalars).
     """
     L, R, N = delta.shape
     use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
@@ -106,13 +143,26 @@ def pg_penalty_group_op(delta, mu, sigma, sync_count, *, clip_threshold=10.0,
     w = jnp.where(rollback[:, None], 0.0, w)
     w = jnp.nan_to_num(w, nan=0.0)
 
-    ones = jnp.ones((L,), jnp.float32)
-    if use_kernel:
-        avg = pg_combine_stacked(dpad, w, ones, block_n=bn,
-                                 interpret=interp)[:, :N]
+    use_comm = (comm is not None and getattr(comm, "active", False)
+                and not flush_ef)
+    if use_comm:
+        from repro.comm.reduce import compressed_combine
+        avg, new_ef, wire = compressed_combine(delta, w, ef, comm, seed,
+                                               impl=impl)
     else:
-        avg = ref.pg_combine_stacked_ref(delta, w, ones)
-    avg = avg.astype(jnp.float32)
+        ones = jnp.ones((L,), jnp.float32)
+        if use_kernel:
+            avg = pg_combine_stacked(dpad, w, ones, block_n=bn,
+                                     interpret=interp)[:, :N]
+        else:
+            avg = ref.pg_combine_stacked_ref(delta, w, ones)
+        avg = avg.astype(jnp.float32)
+        if ef is not None:      # flush: drain residuals exactly, reset
+            avg = avg + jnp.sum(ef, axis=1)
+            new_ef = jnp.zeros_like(ef)
+        else:
+            new_ef = None
+        wire = float(L * N * 4)
     G_bar = jnp.sqrt(jnp.sum(avg * avg, axis=1))            # (L,)
     if enable_clip:
         beta = jnp.minimum(clip_threshold / (G_bar + eps), 1.0)
@@ -133,8 +183,10 @@ def pg_penalty_group_op(delta, mu, sigma, sync_count, *, clip_threshold=10.0,
     sigma_new = jnp.where(valid, jnp.sqrt(var), sigma)
     info = {"anomalous_frac": jnp.mean(anomalous.astype(jnp.float32)),
             "rollback_frac": jnp.mean(rollback.astype(jnp.float32)),
-            "mean_norm": jnp.mean(G), "mean_beta": jnp.mean(beta)}
-    return delta_hat, rollback, mu_new, sigma_new, info
+            "mean_norm": jnp.mean(G), "mean_beta": jnp.mean(beta),
+            "wire_bytes": jnp.float32(wire),
+            "comp_ratio": jnp.float32(L * N * 4 / max(wire, 1.0))}
+    return delta_hat, rollback, mu_new, sigma_new, new_ef, info
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))

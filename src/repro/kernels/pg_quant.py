@@ -1,0 +1,107 @@
+"""Pallas TPU kernels for pseudo-gradient wire quantization (repro.comm).
+
+At a compressed sync boundary every replica quantizes its weighted
+pseudo-gradient message to int8 codes against a *shared* per-chunk scale
+(so the cross-replica reduction runs directly on the codes — the actual
+wire shrink).  Done naively that is three HBM passes (scale broadcast,
+divide, round); these kernels fuse each direction into one pass:
+
+* ``pg_quant``   — one read of the fp32 message, one write of int8 codes
+  (1/4 the bytes): scale lookup, stochastic rounding and the int8 cast in
+  VMEM.  Randomness is a counter-based splitmix32 hash of the global
+  element index — pure arithmetic, so interpret mode, Mosaic and the jnp
+  ref (``ref.pg_quant_ref``) produce bit-identical codes for a seed, and
+  the streamed/monolithic sync pipelines stay exact differentials.
+* ``pg_dequant`` — codes -> fp32, one read + one write.
+
+Layout: messages keep the packed sync-buffer shape (L, P, Np) — layer
+repeats, replica rows, flat params padded to a chunk multiple.  The
+replica axis stays a standalone array axis (merging it with L would stop
+GSPMD from sharding it over the replica mesh axes and force an fp32
+all-gather of the whole buffer).  The per-chunk scales are (L, Np/chunk),
+shared across P; the kernel block IS the chunk, so each grid step sees
+exactly one scale scalar in SMEM.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# pure-arithmetic hash/uniform helpers trace fine inside the kernel body;
+# sharing them with the jnp oracle is what guarantees kernel == ref bitwise
+from repro.kernels.ref import mix32, uniform01
+
+
+def _quant_kernel(seed_ref, u_ref, s_ref, o_ref, *, qmax, bn, nb, P,
+                  stochastic):
+    l = pl.program_id(0)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    s = s_ref[0, 0]
+    v = u_ref[0].astype(jnp.float32) * (qmax / jnp.maximum(s, 1e-30))
+    v = jnp.clip(v, -qmax, qmax)                          # (1, bn)
+    if stochastic:
+        base = (((l * P + p) * nb + i) * bn).astype(jnp.uint32)
+        idx = base + jax.lax.broadcasted_iota(jnp.uint32, v.shape, 1)
+        u01 = uniform01(mix32(idx, seed_ref[0, 0]))
+        lo = jnp.floor(v)
+        code = lo + (u01 < (v - lo)).astype(jnp.float32)
+    else:
+        code = jnp.round(v)
+    o_ref[0] = code.astype(jnp.int8)
+
+
+def pg_quant(u, scale, seed, *, qmax: float, stochastic: bool = True,
+             interpret: bool = False):
+    """u: (L, P, Np) fp32; scale: (L, nch) with Np == nch * chunk.
+    Returns int8 codes (L, P, Np); decode is ``codes * scale / qmax``.
+    One HBM read of u, one int8 write."""
+    L, P, Np = u.shape
+    Ls, nch = scale.shape
+    assert L == Ls and Np % nch == 0, (u.shape, scale.shape)
+    bn = Np // nch
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    return pl.pallas_call(
+        lambda sd, ur, sr, orf: _quant_kernel(
+            sd, ur, sr, orf, qmax=qmax, bn=bn, nb=nch, P=P,
+            stochastic=stochastic),
+        grid=(L, P, nch),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda l, p, i: (0, 0),
+                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, bn), lambda l, p, i: (l, p, i)),
+            pl.BlockSpec((1, 1), lambda l, p, i: (l, i),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bn), lambda l, p, i: (l, p, i)),
+        out_shape=jax.ShapeDtypeStruct((L, P, Np), jnp.int8),
+        interpret=interpret,
+    )(seed_arr, u, scale)
+
+
+def _dequant_kernel(c_ref, s_ref, o_ref, *, qmax):
+    s = s_ref[0, 0]
+    o_ref[0] = c_ref[0].astype(jnp.float32) * (s / qmax)
+
+
+def pg_dequant(codes, scale, *, qmax: float, interpret: bool = False):
+    """codes: (L, M, Np) int8/int32 (M: replica rows, or 1 for the reduced
+    sum) -> fp32 ``codes * scale / qmax``."""
+    L, M, Np = codes.shape
+    Ls, nch = scale.shape
+    assert L == Ls and Np % nch == 0, (codes.shape, scale.shape)
+    bn = Np // nch
+    return pl.pallas_call(
+        lambda cr, sr, orf: _dequant_kernel(cr, sr, orf, qmax=qmax),
+        grid=(L, M, nch),
+        in_specs=[
+            pl.BlockSpec((1, 1, bn), lambda l, m, i: (l, m, i)),
+            pl.BlockSpec((1, 1), lambda l, m, i: (l, i),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bn), lambda l, m, i: (l, m, i)),
+        out_shape=jax.ShapeDtypeStruct((L, M, Np), jnp.float32),
+        interpret=interpret,
+    )(codes, scale)

@@ -65,3 +65,56 @@ def pg_combine_stacked_ref(delta, w, beta):
     avg = jnp.einsum("lr,lrn->ln", w.astype(jnp.float32),
                      delta.astype(jnp.float32))
     return beta.astype(jnp.float32)[:, None] * avg
+
+
+# ---------------------------------------------------------------------------
+# Wire quantization (repro.comm): counter-based hash + SR quantizer refs.
+# The Pallas kernels (kernels/pg_quant.py) compute the SAME mix32 stream
+# from element indices, so kernel and ref are bit-identical for a given
+# seed — the streamed and monolithic sync pipelines stay differentials.
+# ---------------------------------------------------------------------------
+
+def mix32(idx, seed):
+    """splitmix32-style hash of uint32 element indices + seed -> uint32.
+    Cheap counter-based randomness: pure arithmetic, so the identical
+    stream is reproducible in jnp, interpret-mode Pallas and Mosaic."""
+    x = idx.astype(jnp.uint32) ^ (seed.astype(jnp.uint32)
+                                  * jnp.uint32(0x9E3779B9))
+    x = (x ^ (x >> 16)) * jnp.uint32(0x85EBCA6B)
+    x = (x ^ (x >> 13)) * jnp.uint32(0xC2B2AE35)
+    return x ^ (x >> 16)
+
+
+def uniform01(bits):
+    """uint32 bits -> fp32 uniforms in [0, 1) (24-bit mantissa path)."""
+    return (bits >> jnp.uint32(8)).astype(jnp.float32) * (1.0 / (1 << 24))
+
+
+def pg_quant_ref(u, scale, seed, *, qmax: float, stochastic: bool = True):
+    """Stochastic-rounding int8 quantizer, jnp oracle of ``pg_quant``.
+
+    u: (L, P, Np) fp32 messages; scale: (L, nch) shared per-chunk scales.
+    codes = sr(u * qmax / scale) as int8; E[codes * scale / qmax] = u.
+    The replica axis P stays standalone (elementwise ops only), so GSPMD
+    keeps it sharded over the replica mesh axes.
+    """
+    L, P, Np = u.shape
+    chunk = Np // scale.shape[1]
+    s = jnp.repeat(scale, chunk, axis=1)[:, None, :]
+    v = u.astype(jnp.float32) * (qmax / jnp.maximum(s, 1e-30))
+    v = jnp.clip(v, -qmax, qmax)
+    if stochastic:
+        idx = jnp.arange(L * P * Np, dtype=jnp.uint32).reshape(L, P, Np)
+        lo = jnp.floor(v)
+        code = lo + (uniform01(mix32(idx, seed)) < (v - lo))
+    else:
+        code = jnp.round(v)
+    return code.astype(jnp.int8)
+
+
+def pg_dequant_ref(codes, scale, *, qmax: float):
+    """codes: (L, M, Np) int (or fp) codes -> fp32
+    ``codes * scale / qmax``."""
+    chunk = codes.shape[2] // scale.shape[1]
+    s = jnp.repeat(scale, chunk, axis=1)[:, None, :]
+    return codes.astype(jnp.float32) * (s / qmax)

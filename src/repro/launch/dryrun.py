@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, INPUT_SHAPES, get_config, get_shape
-from repro.core import Strategy, init_train_state, make_train_step
+from repro.core import CommConfig, Strategy, init_train_state, make_train_step
 from repro.dist.sharding import (SERVE_LONG_POLICY, SERVE_POLICY,
                                  SERVE_SP_POLICY, TRAIN_POLICY,
                                  TRAIN_POLICY_HIER, TRAIN_POLICY_MULTIPOD,
@@ -53,8 +53,17 @@ def build_train_program(cfg, shape, mesh, opts=()):
     model = build_model(cfg, param_dtype=jnp.float32,
                         compute_dtype=jnp.bfloat16, remat=True,
                         remat_policy=policy)
+    # e.g. --opts int8_sync: compressed boundary sync (repro.comm); add
+    # hier<k>_sync for the two-level reduce (intra-node groups of k)
+    comp = next((o[:-5] for o in opts
+                 if o.endswith("_sync") and o != "monolithic_sync"), "none")
+    intra = 1
+    if comp.startswith("hier"):
+        intra_s, comp = comp[4:].split("_", 1)
+        intra = int(intra_s)
     strategy = Strategy(name="edit", replicas=R, sync_interval=128,
-                        warmup_steps=1000)
+                        warmup_steps=1000,
+                        comm=CommConfig(compressor=comp, intra=intra))
     opt = AdamW()
     sched = cosine_with_warmup(1.5e-4, 1000, 100_000)
     state = jax.eval_shape(
@@ -175,7 +184,8 @@ def main():
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--opts", default="",
                     help="comma list: cast_bf16,expert_parallel,seq_parallel,"
-                         "monolithic_sync")
+                         "monolithic_sync,int8_sync,fp8_sync,topk_sync,"
+                         "hier4_int8_sync")
     args = ap.parse_args()
     opts = tuple(o for o in args.opts.split(",") if o)
 

@@ -108,6 +108,11 @@ def _computation_multipliers(comps: Dict[str, str]) -> Dict[str, int]:
     return mult
 
 
+_COLL_DEF_RE = re.compile(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
+                          r"(all-gather|all-reduce|reduce-scatter|"
+                          r"all-to-all|collective-permute)(-start)?\(")
+
+
 def collective_bytes(hlo_text: str) -> Dict[str, int]:
     """Per-class output bytes of collective ops in optimized HLO (per
     device), with while-loop (scan) bodies multiplied by their trip count —
@@ -115,28 +120,31 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
     per-layer FSDP collectives by n_layers.
 
     Matches plain and -start async variants; '-done' ops are skipped.
+
+    The ``by_sync_tag`` entry splits the per-class bytes of the
+    ``edit_sync/<group>``-scoped collectives by group tag (see
+    :func:`sync_collective_bytes`), so the wire-byte effect of the
+    ``repro.comm`` compressors is attributable per module group.
     """
     comps = _split_computations(hlo_text)
     if not comps:  # fallback: treat whole text as one computation
         comps = {"entry": hlo_text}
     mults = _computation_multipliers(comps)
-    out = {c: 0 for c in _COLLECTIVES}
+    out: Dict[str, object] = {c: 0 for c in _COLLECTIVES}
     out["count"] = 0
-    pat = re.compile(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[\w\[\],{}\s]*?)\s*"
-                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
-                     r"collective-permute)(-start)?\(")
     for cname, text in comps.items():
         mul = mults.get(cname, 1)
         for line in text.splitlines():
             ls = line.strip()
             if "-done" in ls:
                 continue
-            m = pat.match(ls)
+            m = _COLL_DEF_RE.match(ls)
             if not m:
                 continue
             shape_str, op = m.group(1), m.group(2)
             out[op] += _shape_bytes(shape_str) * mul
             out["count"] += mul
+    out["by_sync_tag"] = sync_collective_bytes(hlo_text)
     return out
 
 
@@ -178,6 +186,34 @@ def sync_collective_tags(hlo_text: str) -> Dict[str, int]:
     return tags
 
 
+def sync_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, int]]:
+    """Per-class output bytes of the ``edit_sync``-tagged collectives,
+    split by group tag: {tag: {class: bytes, ..., 'total': bytes}}.
+
+    This is the attribution surface for the ``repro.comm`` wire
+    compressors: with the int8 compressor the per-group weighted-average
+    all-reduce moves s8 instead of f32 (the shared-scale reduction runs on
+    the codes), so the tagged byte totals drop ~4x while the untagged
+    FSDP/grad collectives are untouched.  Sync collectives live in cond
+    branches (never while bodies), so no trip-count multipliers apply.
+    """
+    out: Dict[str, Dict[str, int]] = {}
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        tag = _sync_tag(ls)
+        if tag is None:
+            continue
+        m = _COLL_DEF_RE.match(ls)
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        d = out.setdefault(tag, {c: 0 for c in _COLLECTIVES} | {"total": 0})
+        b = _shape_bytes(shape_str)
+        d[op] += b
+        d["total"] += b
+    return out
+
+
 def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
     """Assess the sync emission structure of a compiled train step.
 
@@ -192,6 +228,7 @@ def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
     if not comps:
         comps = {"entry": hlo_text}
     tags = sync_collective_tags(hlo_text)
+    tag_bytes = sync_collective_bytes(hlo_text)
     regions = set()
     for name, text in comps.items():
         if any(_sync_tag(line.strip()) for line in text.splitlines()):
@@ -202,6 +239,9 @@ def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
         "sync_collectives": sum(tags.values()),
         "n_sync_regions": len(regions),
         "streamed": len(tags) >= 2,
+        # per-group per-class wire bytes (repro.comm attribution)
+        "tag_bytes": tag_bytes,
+        "sync_bytes": sum(d["total"] for d in tag_bytes.values()),
     }
 
 

@@ -87,6 +87,14 @@ def train_state_specs(state, cfg, mesh, *, expert_parallel: bool = False):
             if leaf.ndim == 2:   # (R, n_rep)
                 return P(rep if len(rep) > 1 else rep[0], None)
             return P()
+        if top == "ef":
+            # (R, n_rep, N) error-feedback buffers: replica rows over the
+            # replica axes, flat param dim over the fsdp axes (ZeRO-style)
+            # when it divides
+            r_ax = rep if len(rep) > 1 else rep[0]
+            if leaf.ndim == 3 and leaf.shape[-1] % msz == 0:
+                return P(r_ax, None, model_ax)
+            return P(r_ax, *([None] * (leaf.ndim - 1)))
         return P()  # step etc.
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(state)

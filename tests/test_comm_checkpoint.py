@@ -1,0 +1,137 @@
+"""Error-feedback state through checkpoint v2 (repro.comm satellite).
+
+EF buffers are train state like any other: they round-trip through the
+v2 manifest with per-leaf replica-axis + module-group tags, reshard on
+restore (consolidation flushed them, so joiners boot at zero), and
+EF-less sources — a ``none``-compressor v2 checkpoint or a pre-PR-3 v1
+directory — resume under a compressed strategy via
+``migrate_train_state`` materializing zeroed EF.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import leaf_entries
+from repro.comm import CommConfig
+from repro.configs import get_config
+from repro.core import Strategy, migrate_train_state
+from repro.core import penalty as PEN
+from repro.data import SyntheticLM
+from repro.elastic import TrainSession, restore_train_state
+from repro.models import build_model
+from repro.train import TrainerConfig
+
+TAU, WARM, R0 = 2, 2, 4
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = dataclasses.replace(
+        get_config("llama_350m").reduced(), name="tiny-comm-ckpt",
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+        vocab_size=64)
+    return build_model(cfg, compute_dtype=jnp.float32, remat=False)
+
+
+def _strategy(comp="int8", replicas=R0):
+    comm = CommConfig(compressor=comp, chunk=256)
+    return Strategy(name="edit", replicas=replicas, sync_interval=TAU,
+                    warmup_steps=WARM, comm=comm)
+
+
+def _session(model, strat, steps=6):
+    data = SyntheticLM(model.cfg.vocab_size, 16, 2 * strat.replicas,
+                       seed=3, markov_q=0.9, replicas=strat.replicas)
+    sess = TrainSession(model, strat, data,
+                        TrainerConfig(total_steps=20, inner_lr=3e-3,
+                                      lr_warmup=2, log_every=0))
+    sess.run_steps(steps)
+    return sess
+
+
+def test_ef_roundtrips_v2_with_group_tags(model, tmp_path):
+    """Mid-round save: nonzero EF leaves land in the manifest tagged with
+    replica_axis=0 and their module group, and a same-R restore is
+    bit-identical."""
+    sess = _session(model, _strategy())   # step 6: mid-round, EF nonzero
+    assert any(float(jnp.abs(e).max()) > 0
+               for e in jax.tree.leaves(sess.state["ef"]))
+    d = str(tmp_path / "ck")
+    sess.save(d, sync=True)
+    valid = {g.key for g in PEN.module_groups(model.cfg)}
+    ef_entries = [e for e in leaf_entries(d)
+                  if e.get("name", "").startswith("ef.")]
+    assert len(ef_entries) == len(valid)
+    for e in ef_entries:
+        assert e["replica_axis"] == 0, e
+        assert e["group"] in valid, e
+    state, meta = restore_train_state(d, model.cfg, _strategy())
+    assert meta["replicas"] == R0
+    for k in sess.state["ef"]:
+        np.testing.assert_array_equal(np.asarray(sess.state["ef"][k]),
+                                      np.asarray(state["ef"][k]), k)
+
+
+@pytest.mark.parametrize("new_r", [2, 8])
+def test_restore_resharded_flushes_ef(model, tmp_path, new_r):
+    """Restoring onto a different replica count consolidates the open
+    round (flushing EF into it) and reboots EF at zero on R' rows."""
+    sess = _session(model, _strategy())
+    d = str(tmp_path / "ck")
+    sess.save(d, sync=True)
+    state, _ = restore_train_state(d, model.cfg, _strategy(),
+                                   replicas=new_r)
+    for k, v in state["ef"].items():
+        assert v.shape[0] == new_r, (k, v.shape)
+        assert float(jnp.abs(v).max()) == 0.0, k
+
+
+def test_efless_v2_checkpoint_boots_zero_ef(model, tmp_path):
+    """A checkpoint written WITHOUT compression resumes under an int8
+    strategy: migrate_train_state materializes zeroed EF of the right
+    group shapes (and the reverse resume simply drops the EF)."""
+    sess = _session(model, _strategy(comp="none"))
+    assert "ef" not in sess.state
+    d = str(tmp_path / "ck")
+    sess.save(d, sync=True)
+    state, _ = restore_train_state(d, model.cfg, _strategy(comp="int8"))
+    assert set(state["ef"]) == {g.key for g in
+                               PEN.module_groups(model.cfg)}
+    for g in PEN.module_groups(model.cfg):
+        v = state["ef"][g.key]
+        assert v.shape[:2] == (R0, g.n_rep) and v.ndim == 3
+        assert float(jnp.abs(v).max()) == 0.0
+    # reverse direction: compressed checkpoint -> uncompressed strategy
+    sess2 = _session(model, _strategy(comp="int8"))
+    d2 = str(tmp_path / "ck2")
+    sess2.save(d2, sync=True)
+    state2, _ = restore_train_state(d2, model.cfg, _strategy(comp="none"))
+    assert "ef" not in state2
+
+
+def test_migrate_pre_group_aligned_state_boots_zero_ef(model):
+    """The pre-PR-3 whole-tree layout (what the v1 shim hands back)
+    migrates to a compressed strategy with zeroed EF — v1 checkpoints
+    resume without ever having heard of error feedback."""
+    strat = _strategy(comp="int8", replicas=2)
+    p0 = model.init(jax.random.PRNGKey(0))
+    legacy = {
+        "params": jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (2,) + a.shape), p0),
+        "step": jnp.int32(9),
+        "anchor": p0,                       # whole-model trees (pre-PR-3)
+        "outer_m": jax.tree.map(jnp.zeros_like, p0),
+    }
+    out = migrate_train_state(legacy, model.cfg, strategy=strat)
+    assert "globals" in out["anchor"]       # group-aligned now
+    assert set(out["ef"]) == {g.key for g in
+                              PEN.module_groups(model.cfg)}
+    assert all(float(jnp.abs(v).max()) == 0.0 for v in out["ef"].values())
+    # idempotent: migrating again changes nothing
+    again = migrate_train_state(out, model.cfg, strategy=strat)
+    for k in out["ef"]:
+        np.testing.assert_array_equal(np.asarray(out["ef"][k]),
+                                      np.asarray(again["ef"][k]))

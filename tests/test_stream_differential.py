@@ -135,7 +135,7 @@ def test_sync_group_matches_tree_based_algorithm2(models):
     for g in PEN.module_groups(cfg):
         ema_g = {"mu": jnp.full((4, g.n_rep), 0.5, jnp.float32),
                  "sigma": jnp.full((4, g.n_rep), 0.2, jnp.float32)}
-        _, a2, _, ema2, _, info = STR.sync_group(
+        _, a2, _, ema2, _, _, info = STR.sync_group(
             g, strat, outer, gp[g.key], ga[g.key], gm[g.key], ema_g, count)
         # oracle: the original tree math on the same group
         delta = jax.tree.map(
