@@ -1,16 +1,29 @@
-"""Serving throughput: continuous batching vs sequential per-request decode.
+"""Serving throughput: continuous batching vs sequential decode, and the
+paged KV pool vs the slotted pool at EQUAL HBM budget.
 
-The acceptance claim for the continuous engine: at >= 4 concurrent
-requests, one pooled decode step per token beats decoding each request on
-its own (the old per-request path), because the pooled step amortizes the
-python/dispatch overhead and the matmuls over the whole slot batch.
+Part 1 (legacy claim): at >= 4 concurrent requests, one pooled decode
+step per token beats decoding each request on its own.
+
+Part 2 (DESIGN.md §15 claim): give both pools the same token capacity.
+The slotted pool must reserve ``cache_len`` tokens per slot up front, so
+the budget caps concurrency at ``budget / cache_len`` slots.  The paged
+pool allocates fixed-size pages on demand and shares prompt-prefix pages
+between requests (Zipf-popular prefixes), so the same budget sustains
+far more in-flight requests — more tokens per decode step amortizing the
+same per-step cost.  A bursty many-user trace (Zipf prefix popularity,
+burst arrivals) drives both engines through an identical schedule; the
+run writes ``benchmarks/BENCH_serve.json`` with tokens/s, TTFT, decode
+steps and mean slot occupancy for both pools.
 
 Rows:
   serve/sequential_oneshot,<us per generated token>,tok_s=...
   serve/continuous_slots<k>,<us per generated token>,tok_s=...
+  serve/equal_hbm_slotted,<us per generated token>,tok_s=...
+  serve/equal_hbm_paged,<us per generated token>,tok_s=...
 """
 from __future__ import annotations
 
+import json
 import os
 import time
 
@@ -22,12 +35,28 @@ import jax                                   # noqa: E402
 import jax.numpy as jnp                      # noqa: E402
 
 from repro.serve import (ContinuousConfig, ContinuousEngine,  # noqa: E402
-                         OneShotEngine, Request, ServeConfig)
+                         OneShotEngine, PagedConfig, PagedEngine, Request,
+                         ServeConfig)
 
 PROMPT_LEN = 16
 NEW_TOKENS = 24 if FAST else 64
 N_REQUESTS = 8 if FAST else 16
 CACHE_LEN = 128
+
+# -- part 2: equal-HBM paged vs slotted trace --------------------------------
+P2_CACHE_LEN = 128                # worst-case context a request may claim
+P2_SLOTTED_SLOTS = 2              # slotted concurrency the budget affords
+P2_BUDGET = P2_SLOTTED_SLOTS * P2_CACHE_LEN          # tokens of KV HBM
+P2_PAGE = 8
+P2_PAGED_SLOTS = 8                # same budget, page-granular + shared
+P2_USERS = 24 if FAST else 48
+P2_PREFIX_LEN = 32                # shared system-prompt-style prefixes
+P2_TEMPLATES = 4
+P2_ZIPF = 2.5                     # popularity skew: hot template dominates
+P2_NEW_SHORT = (8, 13)            # typical request: ~50 tokens of context
+P2_NEW_LONG = 32                  # every 6th request needs the long tail
+P2_BURST = 4                      # requests per arrival burst
+P2_GAP = 4                        # engine steps between bursts
 
 
 def _prompts(vocab: int):
@@ -61,6 +90,125 @@ def bench_continuous(model, params, prompts, max_slots: int) -> float:
     return time.perf_counter() - t0
 
 
+def _zipf_trace(vocab: int):
+    """Many-user bursty trace: 4 shared prefixes with Zipf popularity,
+    random per-user tails, arrivals in bursts of P2_BURST every P2_GAP
+    engine steps."""
+    rng = np.random.default_rng(1)
+    prefixes = [rng.integers(0, vocab, size=P2_PREFIX_LEN, dtype=np.int32)
+                for _ in range(P2_TEMPLATES)]
+    ranks = np.arange(1, len(prefixes) + 1, dtype=np.float64)
+    pz = ranks ** -P2_ZIPF
+    pz /= pz.sum()
+    trace = []
+    for uid in range(P2_USERS):
+        pre = prefixes[int(rng.choice(len(prefixes), p=pz))]
+        tail = rng.integers(0, vocab, size=int(rng.integers(2, 9)),
+                            dtype=np.int32)
+        arrival = (uid // P2_BURST) * P2_GAP
+        # heavy tail: the odd long generation is WHY cache_len must be
+        # provisioned at 128 — the slotted pool pays that worst case for
+        # every slot, the paged pool only for the request that uses it
+        new = P2_NEW_LONG if uid % 6 == 5 else int(
+            rng.integers(*P2_NEW_SHORT))
+        trace.append((arrival, Request(
+            uid=uid, tokens=np.concatenate([pre, tail]),
+            max_new_tokens=new)))
+    return trace
+
+
+def _drive(eng, trace, ttft, submit_t):
+    """Run one engine through the arrival schedule; returns wall time,
+    emitted-token count and occupancy per step."""
+    pending = sorted(trace, key=lambda a: a[0])
+    step, occ = 0, []
+    t0 = time.perf_counter()
+    while True:
+        while pending and pending[0][0] <= step:
+            _, req = pending.pop(0)
+            submit_t[req.uid] = time.perf_counter()
+            eng.submit(req)
+        busy = eng.step()
+        occ.append(len(eng._active))
+        step += 1
+        if not busy and not pending:
+            break
+    wall = time.perf_counter() - t0
+    total = sum(len(v) for v in eng.finished.values())
+    assert len(eng.finished) == len(trace), "trace did not drain"
+    return wall, total, occ
+
+
+def _summary(wall, total, ttft, occ):
+    ts = np.asarray(sorted(ttft.values()))
+    return {
+        "tokens_per_s": round(total / wall, 2),
+        "us_per_token": round(wall / total * 1e6, 1),
+        "ttft_mean_s": round(float(ts.mean()), 4),
+        "ttft_p90_s": round(float(ts[int(0.9 * (len(ts) - 1))]), 4),
+        "occupancy_mean": round(float(np.mean(occ)), 2),
+        "steps": len(occ),
+    }
+
+
+def bench_paged_vs_slotted(model, params) -> dict:
+    trace = _zipf_trace(model.cfg.vocab_size)
+
+    def slotted(stream):
+        return ContinuousEngine(
+            model, params,
+            ContinuousConfig(max_slots=P2_SLOTTED_SLOTS,
+                             cache_len=P2_CACHE_LEN), stream=stream)
+
+    def paged(stream):
+        return PagedEngine(
+            model, params,
+            PagedConfig(max_slots=P2_PAGED_SLOTS, cache_len=P2_CACHE_LEN,
+                        page_size=P2_PAGE, n_pages=P2_BUDGET // P2_PAGE + 1,
+                        prefill_chunk=16), stream=stream)
+
+    report = {"config": {
+        "hbm_budget_tokens": P2_BUDGET, "cache_len": P2_CACHE_LEN,
+        "page_size": P2_PAGE, "slotted_slots": P2_SLOTTED_SLOTS,
+        "paged_slots": P2_PAGED_SLOTS, "users": P2_USERS,
+        "prefix_len": P2_PREFIX_LEN, "templates": P2_TEMPLATES,
+        "zipf_exponent": P2_ZIPF, "max_new_short": list(P2_NEW_SHORT),
+        "max_new_long": P2_NEW_LONG,
+        "burst": P2_BURST, "gap_steps": P2_GAP, "fast": FAST}}
+    for name, mk in (("slotted", slotted), ("paged", paged)):
+        ttft, submit_t = {}, {}
+
+        def stream(uid, tok, done):
+            if uid not in ttft:
+                ttft[uid] = time.perf_counter() - submit_t[uid]
+
+        # one engine for warm + timed: each engine instance owns fresh
+        # jax.jit wrappers, so warming a throwaway would warm nothing
+        eng = mk(stream)
+        _drive(eng, trace, ttft, submit_t)      # warm every compile shape
+        eng.finished.clear()
+        ttft.clear()
+        pre_stats = dict(eng.stats)
+        pre_pool = dict(getattr(eng.pool, "stats", {}))
+        wall, total, occ = _drive(eng, trace, ttft, submit_t)
+        rep = _summary(wall, total, ttft, occ)
+        rep["decode_steps"] = eng.stats["decode_steps"] - pre_stats[
+            "decode_steps"]
+        if name == "paged":
+            rep.update({k: eng.pool.stats[k] - pre_pool[k] for k in
+                        ("prefix_hits", "shared_tokens", "cow_copies",
+                         "evictions")})
+            rep["prefill_chunks"] = (eng.stats["prefill_chunks"]
+                                     - pre_stats["prefill_chunks"])
+        report[name] = rep
+        emit(f"serve/equal_hbm_{name}", rep["us_per_token"],
+             f"tok_s={rep['tokens_per_s']:.1f}")
+    report["speedup_tokens_per_s"] = round(
+        report["paged"]["tokens_per_s"] / report["slotted"]["tokens_per_s"],
+        2)
+    return report
+
+
 def main() -> None:
     model = bench_model(seq_len=PROMPT_LEN)
     params = model.init(jax.random.PRNGKey(0))
@@ -84,6 +232,20 @@ def main() -> None:
         # hard-fail only when asked (BENCH_STRICT=1): wall-clock assertions
         # on loaded shared CI runners would turn timing jitter into red runs
         msg = "continuous batching did not beat sequential per-request decode"
+        if os.environ.get("BENCH_STRICT", "0") == "1":
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}", flush=True)
+
+    report = bench_paged_vs_slotted(model, params)
+    out = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+        f.write("\n")
+    print(f"# paged vs slotted (equal {P2_BUDGET}-token HBM budget): "
+          f"{report['speedup_tokens_per_s']:.2f}x tokens/s "
+          f"-> {out}", flush=True)
+    if report["speedup_tokens_per_s"] < 1.5:
+        msg = "paged pool did not reach 1.5x tokens/s at equal HBM budget"
         if os.environ.get("BENCH_STRICT", "0") == "1":
             raise AssertionError(msg)
         print(f"# WARNING: {msg}", flush=True)

@@ -1,0 +1,134 @@
+"""Pallas TPU paged-attention decode kernel (DESIGN.md §15).
+
+One query token per sequence attends over a KV cache that lives in a
+global page arena ``(n_pages, page_size, Kv, hd)`` instead of a
+contiguous per-slot ring.  Each sequence owns an ordered list of pages;
+the per-request page table ``(B, max_pages)`` maps logical block ``j`` of
+sequence ``b`` to its physical page id.  The kernel walks the logical
+blocks with the flash-attention online softmax, and the K/V BlockSpec
+index maps read the page id for the current (b, j) grid cell from a
+scalar-prefetched copy of the page table — so each k-block is fetched
+straight from its arena page, no host-side gather and no densified
+``(B, cache_len)`` copy of the cache.
+
+Unused table entries point at the reserved null page 0 (always in
+bounds) and contribute nothing: positions ``>= lengths[b]`` are masked
+to -inf before the online-softmax update, which makes their
+``exp(s - m)`` underflow to exactly 0 once any valid block has set the
+running max (logical block 0 always contains position 0, so the running
+max is real from the first step).
+
+``paged_attention(..., impl=)`` dispatches between the Mosaic kernel
+(``"pallas"``), the same kernel interpreted on CPU (``"interpret"``) and
+the jnp gather mirror in :mod:`repro.kernels.ref` (``"ref"``).  The
+interpret and ref paths execute the same arithmetic in the same block
+order, so they agree bitwise — the property the kernel tests pin, the
+same contract ``pg_quant`` established for the wire quantizer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import ref as R
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(table_ref, lengths_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale: float, page_size: int,
+                  nb: int):
+    b = pl.program_id(0)          # sequence
+    j = pl.program_id(1)          # logical block (page index in the table)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # (Kv, G, hd)
+    k = k_ref[0].astype(jnp.float32)             # (ps, Kv, hd)
+    v = v_ref[0].astype(jnp.float32)             # (ps, Kv, hd)
+    # (Kv, G, hd) x (ps, Kv, hd) -> (Kv, G, ps): batch over the kv head,
+    # contract over hd — the same dot_general the ref's einsum lowers to.
+    s = jax.lax.dot_general(
+        q, k, (((2,), (2,)), ((0,), (1,)))) * scale
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    s = jnp.where(k_pos < lengths_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=2))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=2)
+    m_scr[...] = m_new
+    # (Kv, G, ps) x (ps, Kv, hd) -> (Kv, G, hd)
+    acc_scr[...] = (acc_scr[...] * corr[..., None]
+                    + jax.lax.dot_general(
+                        p, v, (((2,), (0,)), ((0,), (1,)))))
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_arena, v_arena, page_table, lengths, *,
+                           interpret: bool = False):
+    """q: (B, H, hd) one token per sequence; k/v_arena: (P, ps, Kv, hd);
+    page_table: (B, NB) int32 physical page per logical block (0 = null
+    page for unused entries); lengths: (B,) valid tokens per sequence
+    (including the current one).  Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    P, ps, Kv, _ = k_arena.shape
+    NB = page_table.shape[1]
+    G = H // Kv
+    qg = q.reshape(B, Kv, G, hd)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_paged_kernel, scale=scale, page_size=ps,
+                               nb=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,     # page_table, lengths
+        grid=(B, NB),
+        in_specs=[
+            pl.BlockSpec((1, Kv, G, hd), lambda b, j, pt, ln: (b, 0, 0, 0)),
+            pl.BlockSpec((1, ps, Kv, hd),
+                         lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Kv, hd),
+                         lambda b, j, pt, ln: (pt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Kv, G, hd),
+                               lambda b, j, pt, ln: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Kv, G), jnp.float32),       # m (running max)
+            pltpu.VMEM((Kv, G), jnp.float32),       # l (running sum)
+            pltpu.VMEM((Kv, G, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32),
+      qg, k_arena, v_arena)
+    return out.reshape(B, H, hd)
+
+
+def paged_attention(q, k_arena, v_arena, page_table, lengths, *,
+                    impl: str = "ref"):
+    """Dispatcher: ``impl`` in {'ref', 'interpret', 'pallas'}.  'ref' is
+    the jnp gather mirror (bitwise-identical block order, the default off
+    TPU); 'interpret' runs the Pallas body on CPU; 'pallas' lowers to
+    Mosaic."""
+    if impl == "ref":
+        return R.paged_attention_ref(q, k_arena, v_arena, page_table,
+                                     lengths)
+    return paged_attention_kernel(q, k_arena, v_arena, page_table, lengths,
+                                  interpret=(impl == "interpret"))

@@ -26,6 +26,50 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
     return jnp.einsum("bhqk,bhkd->bhqd", w, v.astype(jnp.float32)).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_arena, v_arena, page_table, lengths):
+    """jnp gather oracle for the paged-attention decode kernel.
+
+    q: (B, H, hd) one token per sequence; k/v_arena: (P, ps, Kv, hd) page
+    arenas; page_table: (B, NB) physical page per logical block; lengths:
+    (B,) valid tokens (masking positions >= length).
+
+    Walks the logical blocks with the SAME online-softmax update, block
+    order and fp32 casts as the Pallas kernel body, so interpret-mode
+    kernel output matches this bitwise (the ``pg_quant`` contract).
+    """
+    B, H, hd = q.shape
+    ps, Kv = k_arena.shape[1], k_arena.shape[2]
+    NB = page_table.shape[1]
+    G = H // Kv
+    scale = hd ** -0.5
+    qg = q.reshape(B, Kv, G, hd).astype(jnp.float32)
+
+    def body(carry, j):
+        m, l, acc = carry
+        pages = page_table[:, j]
+        k = k_arena[pages].astype(jnp.float32)        # (B, ps, Kv, hd)
+        v = v_arena[pages].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qg, k, (((3,), (3,)), ((0, 1), (0, 2)))) * scale  # (B,Kv,G,ps)
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        s = jnp.where(k_pos < lengths[:, None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=3))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=3)
+        acc = (acc * corr[..., None]
+               + jax.lax.dot_general(
+                   p, v, (((3,), (1,)), ((0, 1), (0, 2)))))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Kv, G), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G), jnp.float32)
+    a0 = jnp.zeros((B, Kv, G, hd), jnp.float32)
+    (_, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NB))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(B, H, hd).astype(q.dtype)
+
+
 def selective_scan_ref(a, bx, C, h0):
     """Sequential oracle for the SSM recurrence.
     a, bx: (B,S,mi,st); C: (B,S,st); h0: (B,mi,st).

@@ -190,6 +190,33 @@ def cache_specs(cache, cfg, mesh, global_batch: int):
         treedef, [spec_for(p, l) for p, l in flat])
 
 
+def paged_cache_specs(cache, cfg, mesh):
+    """Page arenas (DESIGN.md §15): leaves are (..., P, ps, heads/latent,
+    hd) with the page dim where the slotted pool kept the slot dim (same
+    trailing rank, so ``cache_batch_dim`` locates it).  Pages form ONE
+    global address space — any request's table may point at any page — so
+    the page dim is replicated across data axes and only the head / latent
+    feature dim shards over 'model' (classic tensor-parallel KV: each
+    shard holds every page for a head slice)."""
+    msz = model_axis_size(mesh)
+
+    def spec_for(path, leaf):
+        name = _path_str(path).split("/")[-1]
+        nd = leaf.ndim
+        if name not in T.CACHE_LEAF_RANKS:
+            return P(*([None] * nd))
+        base = T.cache_batch_dim(name, nd)      # page dim of the arena
+        ent = [None] * nd
+        feat = base + 2                         # Kv heads / c_kv latent
+        if feat < nd and leaf.shape[feat] % msz == 0:
+            ent[feat] = "model"
+        return P(*ent)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+    return jax.tree_util.tree_unflatten(
+        treedef, [spec_for(p, l) for p, l in flat])
+
+
 def serve_batch_specs(batch, cfg, mesh, global_batch: int):
     rep = replica_axes(mesh)
     rep_n = 1

@@ -238,6 +238,104 @@ def attn_decode(p, x, cache, pos, cfg):
 
 
 # ---------------------------------------------------------------------------
+# Paged KV cache (page-arena addressing; DESIGN.md §15)
+#
+# The decode cache is a global arena (n_pages, page_size, ...) instead of a
+# per-slot ring (B, T, ...).  Each sequence owns an ordered page list; the
+# page table (B, max_pages) maps logical block j of row b to its physical
+# page.  Page 0 is the reserved null page: unused table entries point at it,
+# its contents are garbage and always masked out by position validity.
+# ---------------------------------------------------------------------------
+
+def init_attn_cache_paged(cfg, n_pages: int, page_size: int,
+                          dtype=jnp.bfloat16):
+    Kv, hd = cfg.n_kv_heads, cfg.head_dim
+    return {
+        "k": jnp.zeros((n_pages, page_size, Kv, hd), dtype),
+        "v": jnp.zeros((n_pages, page_size, Kv, hd), dtype),
+    }
+
+
+def paged_gather(arena, table):
+    """Densify the pages of each sequence.  arena: (P, ps, ...);
+    table: (B, NB) int32 -> (B, NB*ps, ...) in logical token order."""
+    B, NB = table.shape
+    g = arena[table]                              # (B, NB, ps, ...)
+    return g.reshape(B, NB * arena.shape[1], *arena.shape[2:])
+
+
+def paged_scatter(arena, new, table, positions, valid=None):
+    """Write per-token rows into the page arena.  arena: (P, ps, ...);
+    new: (B, C, ...); table: (B, NB); positions: (B, C) absolute token
+    positions.  Token (b, c) lands in page table[b, pos // ps] at line
+    pos % ps.  Rows whose table entry is the null page collide there
+    harmlessly (null content is never read as valid).  ``valid`` (B, C)
+    bool redirects padded lanes to null-page line 0 — fixed-width chunks
+    stay shape-stable without writing garbage into real pages."""
+    P, ps = arena.shape[0], arena.shape[1]
+    flat = arena.reshape(P * ps, *arena.shape[2:])
+    if valid is not None:
+        positions = jnp.where(valid, positions, 0)   # in-table lookup only
+    page = jnp.take_along_axis(table, positions // ps, axis=1)
+    dest = page * ps + positions % ps
+    if valid is not None:
+        dest = jnp.where(valid, dest, 0)
+    vals = new.reshape(-1, *new.shape[2:]).astype(arena.dtype)
+    return flat.at[dest.reshape(-1)].set(vals).reshape(arena.shape)
+
+
+def attn_decode_paged(p, x, cache, pos, table, cfg, *, attn_impl="ref"):
+    """Single-token decode against page-arena caches.  x: (B,1,d); cache
+    k/v: (P, ps, Kv, hd) arenas shared by all sequences; table: (B, NB)
+    page table; pos: (B,) absolute position of each new token.  Inactive
+    rows should carry an all-null table (their writes hit page 0).
+
+    ``attn_impl``: 'ref' | 'interpret' | 'pallas' (the paged-attention
+    dispatcher) or 'exact' — a gather + full-softmax path that is bitwise
+    identical to the ring-buffer ``attn_decode`` at equal cache length.
+    """
+    from repro.kernels.paged_attention import paged_attention
+    B = x.shape[0]
+    pos = decode_positions(pos, B)
+    q, k_new, v_new = _qkv(p, x, cfg, pos[:, None])
+    k = paged_scatter(cache["k"], k_new, table, pos[:, None])
+    v = paged_scatter(cache["v"], v_new, table, pos[:, None])
+    k, v = hint(k, "cache"), hint(v, "cache")
+    if attn_impl == "exact":
+        kg = paged_gather(k, table)                   # (B, L, Kv, hd)
+        vg = paged_gather(v, table)
+        L = kg.shape[1]
+        valid = (jnp.arange(L)[None, :] <= pos[:, None])[:, None, None, None, :]
+        out = _sdpa(q, kg, vg, valid, cfg)
+    else:
+        out = paged_attention(q[:, 0], k, v, table, pos + 1,
+                              impl=attn_impl)
+        out = out.reshape(B, 1, -1)
+    return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
+
+
+def attn_prefill_paged(p, x, cache, table, positions, cfg, valid=None):
+    """Chunked prefill: x (B,C,d) holds C consecutive prompt tokens at
+    absolute ``positions`` (B,C).  Scatters their k/v into the page arenas,
+    then attends causally over the gathered pages (earlier chunks included),
+    so chunk boundaries never change what each token can see.  ``valid``
+    marks real lanes of a padded fixed-width chunk (padded rows write to
+    the null page and their outputs are discarded by the caller)."""
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    k = paged_scatter(cache["k"], k_new, table, positions, valid)
+    v = paged_scatter(cache["v"], v_new, table, positions, valid)
+    k, v = hint(k, "cache"), hint(v, "cache")
+    kg = paged_gather(k, table).astype(x.dtype)       # (B, L, Kv, hd)
+    vg = paged_gather(v, table).astype(x.dtype)
+    L = kg.shape[1]
+    k_pos = jnp.arange(L)[None, None, None, None, :]
+    q_pos = positions[:, None, None, :, None]
+    mask = k_pos <= q_pos
+    out = _sdpa(q, kg, vg, mask, cfg)
+    return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
+
+
+# ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------
 

@@ -14,7 +14,8 @@ import jax.numpy as jnp
 
 from repro.dist.sharding import grad_shard, hint
 from repro.models.layers import (_normal, apply_rope, decode_positions,
-                                 ring_update, rms_norm, rope_tables)
+                                 paged_gather, paged_scatter, ring_update,
+                                 rms_norm, rope_tables)
 
 
 def init_mla(key, cfg, dtype=jnp.float32):
@@ -134,3 +135,73 @@ def mla_decode(p, x, cache, pos, cfg):
     out = jnp.einsum("bqhk,khv->bqhv", lat, wv_b)
     out = out.reshape(B, 1, H * m.v_head_dim)
     return out @ p["wo"].astype(x.dtype), {"c_kv": c_kv, "k_rope": k_rope}
+
+
+def init_mla_cache_paged(cfg, n_pages: int, page_size: int,
+                         dtype=jnp.bfloat16):
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((n_pages, page_size, m.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((n_pages, page_size, m.qk_rope_head_dim), dtype),
+    }
+
+
+def mla_decode_paged(p, x, cache, pos, table, cfg):
+    """Latent-space decode against page-arena caches.  The latent is tiny
+    (kv_rank + rope per token), so the paged path densifies the sequence's
+    pages with a gather and runs the exact ``mla_decode`` arithmetic — at
+    equal cache length the logits are bitwise identical to the ring path
+    (null-page garbage is masked to exact zeros by the softmax)."""
+    m = cfg.mla
+    B = x.shape[0]
+    H = cfg.n_heads
+    pos = decode_positions(pos, B)
+    q_nope, q_rope, c_new, kr_new = _compress(p, x, cfg, pos[:, None])
+    c_arena = paged_scatter(cache["c_kv"], c_new, table, pos[:, None])
+    kr_arena = paged_scatter(cache["k_rope"], kr_new, table, pos[:, None])
+    c_arena, kr_arena = hint(c_arena, "cache"), hint(kr_arena, "cache")
+    c_kv = paged_gather(c_arena, table)               # (B, L, r)
+    k_rope = paged_gather(kr_arena, table)            # (B, L, rr)
+    L = c_kv.shape[1]
+    wk_b = p["wk_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhc,khc->bqhk", q_nope, wk_b)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhk,btk->bhqt", q_lat, c_kv).astype(jnp.float32)
+    s += jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope).astype(jnp.float32)
+    s *= scale
+    valid = (jnp.arange(L)[None, :] <= pos[:, None])[:, None, None, :]
+    s = jnp.where(valid, s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    lat = jnp.einsum("bhqt,btk->bqhk", w, c_kv)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", lat, wv_b)
+    out = out.reshape(B, 1, H * m.v_head_dim)
+    return out @ p["wo"].astype(x.dtype), {"c_kv": c_arena, "k_rope": kr_arena}
+
+
+def mla_prefill_paged(p, x, cache, table, positions, cfg, valid=None):
+    """Chunked prefill for MLA: scatter the chunk's latent into the page
+    arenas, decompress K/V from ALL gathered pages (earlier chunks
+    included) and attend causally at absolute positions.  ``valid`` marks
+    real lanes of a padded fixed-width chunk."""
+    m = cfg.mla
+    B, C, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_new, kr_new = _compress(p, x, cfg, positions)
+    c_arena = paged_scatter(cache["c_kv"], c_new, table, positions, valid)
+    kr_arena = paged_scatter(cache["k_rope"], kr_new, table, positions, valid)
+    c_arena, kr_arena = hint(c_arena, "cache"), hint(kr_arena, "cache")
+    c_kv = paged_gather(c_arena, table).astype(x.dtype)     # (B, L, r)
+    k_rope = paged_gather(kr_arena, table).astype(x.dtype)  # (B, L, rr)
+    L = c_kv.shape[1]
+    k_nope = (c_kv @ p["wk_b"].astype(x.dtype)).reshape(B, L, H, m.qk_nope_head_dim)
+    v = (c_kv @ p["wv_b"].astype(x.dtype)).reshape(B, L, H, m.v_head_dim)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhc,bthc->bhqt", q_nope, k_nope).astype(jnp.float32)
+    s += jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope).astype(jnp.float32)
+    s *= scale
+    msk = jnp.arange(L)[None, :] <= positions[:, :, None]   # (B, C, L)
+    s = jnp.where(msk[:, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhqt,bthv->bqhv", w, v).reshape(B, C, H * m.v_head_dim)
+    return out @ p["wo"].astype(x.dtype), {"c_kv": c_arena, "k_rope": kr_arena}

@@ -75,13 +75,24 @@ class Model:
     decode_step: Callable
     init_cache: Callable
     input_specs: Callable
+    # paged-serving API (DESIGN.md §15); None for families without a
+    # pageable cache (mamba/hybrid recurrent state, encdec cross k/v)
+    init_paged_cache: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
+    decode_paged: Optional[Callable] = None
 
 
 def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
                 cache_dtype=jnp.bfloat16, window: int = 0,
-                remat: bool = True, remat_policy=None) -> Model:
+                remat: bool = True, remat_policy=None,
+                paged_attn_impl: str = "ref") -> Model:
     """``window`` > 0 enables the sliding-window attention variant
-    (used for long_500k decode on full-attention archs)."""
+    (used for long_500k decode on full-attention archs).
+
+    ``paged_attn_impl`` selects the attention backend of the paged decode
+    path: 'ref' (jnp gather mirror of the Pallas kernel), 'interpret',
+    'pallas' (Mosaic), or 'exact' (gather + full softmax, bitwise-equal to
+    the ring-buffer decode at equal cache length)."""
     V, d = cfg.vocab_size, cfg.d_model
     is_encdec = cfg.family == "encdec"
     is_vlm = cfg.family == "vlm"
@@ -232,6 +243,46 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
         logits = hint(_logits_head(params, h), "logits")
         return logits, cache
 
+    # -- paged serving (DESIGN.md §15) -----------------------------------------
+    _progs = [prog for seg in T.plan_segments(cfg) for prog in seg.programs]
+    pageable = (not is_encdec and not is_vlm and window == 0
+                and all(p.mixer in ("attn", "mla") and not p.cross
+                        for p in _progs))
+
+    def init_paged_cache(n_pages: int, page_size: int):
+        """Global page-arena cache shared by every admitted sequence.
+        Page 0 is the reserved null page (never handed out)."""
+        return T.init_stack_cache_paged(cfg, n_pages, page_size, cache_dtype)
+
+    def prefill_chunk(params, cache, tokens, positions, table, last=None):
+        """Prefill one chunk of prompt tokens.  tokens: (B,C) int32 at
+        absolute ``positions`` (B,C); table: (B,NB) page table.  ``last``
+        (scalar int32) marks the final real lane of a fixed-width padded
+        chunk — lanes past it write to the null page and are discarded, so
+        every chunk call shares ONE jit trace regardless of how many
+        prompt tokens remain.  Returns (logits of the chunk's last real
+        position (B,1,V), cache)."""
+        x = hint(_embed(params, tokens, compute_dtype), "act")
+        valid = (None if last is None
+                 else jnp.arange(tokens.shape[1])[None, :] <= last)
+        h, cache = T.stack_prefill_paged(params["blocks"], cache, x, cfg,
+                                         positions, table, valid)
+        h = (h[:, -1:] if last is None
+             else jax.lax.dynamic_slice_in_dim(h, last, 1, axis=1))
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = hint(_logits_head(params, h), "logits")
+        return logits, cache
+
+    def decode_paged(params, cache, tokens, pos, table):
+        """tokens: (B,1) int32; pos: (B,) absolute positions; table:
+        (B,NB) page table (all-null rows for inactive slots)."""
+        x = hint(_embed(params, tokens, compute_dtype), "act")
+        h, cache = T.stack_decode_paged(params["blocks"], cache, x, cfg, pos,
+                                        table, attn_impl=paged_attn_impl)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = hint(_logits_head(params, h), "logits")
+        return logits, cache
+
     # -- dry-run input specs ----------------------------------------------------
     def input_specs(shape_cfg) -> Dict[str, Any]:
         S, GB = shape_cfg.seq_len, shape_cfg.global_batch
@@ -262,4 +313,7 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
 
     return Model(cfg=cfg, init=init, loss=loss_fn, prefill=prefill,
                  decode_step=decode_step, init_cache=init_cache,
-                 input_specs=input_specs)
+                 input_specs=input_specs,
+                 init_paged_cache=init_paged_cache if pageable else None,
+                 prefill_chunk=prefill_chunk if pageable else None,
+                 decode_paged=decode_paged if pageable else None)

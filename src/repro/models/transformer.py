@@ -130,6 +130,20 @@ def init_layer_cache(prog: LayerProgram, cfg, batch, cache_len, enc_len=0,
     return c
 
 
+def init_layer_cache_paged(prog: LayerProgram, cfg, n_pages, page_size,
+                           dtype=jnp.bfloat16):
+    """Page-arena layer cache (DESIGN.md §15).  Only sequence-shaped leaves
+    (attn k/v, MLA latent) page; recurrent mamba state and cross-attention
+    caches have no token axis to page over."""
+    if prog.cross or prog.mixer == "mamba":
+        raise ValueError(
+            f"paged serving supports attn/mla mixers only, got "
+            f"mixer={prog.mixer!r} cross={prog.cross}")
+    if prog.mixer == "attn":
+        return {"self": L.init_attn_cache_paged(cfg, n_pages, page_size, dtype)}
+    return {"self": MLA.init_mla_cache_paged(cfg, n_pages, page_size, dtype)}
+
+
 def _cross_attn(p, x, k, v, cfg):
     B, S, _ = x.shape
     H, hd = cfg.n_heads, cfg.head_dim
@@ -228,6 +242,56 @@ def layer_prefill(p, prog, x, cfg, positions, cache, *, window=0, enc_out=None):
     return hint(x, "act"), new_cache
 
 
+def layer_prefill_paged(p, prog, x, cfg, positions, cache, table,
+                        valid=None):
+    """Chunked prefill of one layer against page arenas.  x: (B,C,d) chunk
+    at absolute ``positions``; earlier chunks are already in the pages, so
+    attention sees the full prefix.  ``valid`` marks real lanes of a
+    padded fixed-width chunk.  Returns (x, new_cache)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if prog.mixer == "attn":
+        mix, new_self = L.attn_prefill_paged(p["mixer"], h, cache["self"],
+                                             table, positions, cfg, valid)
+    elif prog.mixer == "mla":
+        mix, new_self = MLA.mla_prefill_paged(p["mixer"], h, cache["self"],
+                                              table, positions, cfg, valid)
+    else:
+        raise ValueError(prog.mixer)
+    x = x + hint(mix, "act")
+    if prog.ffn != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if prog.ffn == "moe":
+            f, _ = MOE.moe_forward(p["ffn"], h, cfg, train=False)
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + hint(f, "act")
+    return hint(x, "act"), {"self": new_self}
+
+
+def layer_decode_paged(p, prog, x, cfg, cache, pos, table, *,
+                       attn_impl="ref"):
+    """One-token decode against page arenas.  Returns (x, new_cache)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if prog.mixer == "attn":
+        mix, new_self = L.attn_decode_paged(p["mixer"], h, cache["self"],
+                                            pos, table, cfg,
+                                            attn_impl=attn_impl)
+    elif prog.mixer == "mla":
+        mix, new_self = MLA.mla_decode_paged(p["mixer"], h, cache["self"],
+                                             pos, table, cfg)
+    else:
+        raise ValueError(prog.mixer)
+    x = x + mix
+    if prog.ffn != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if prog.ffn == "moe":
+            f, _ = MOE.moe_forward(p["ffn"], h, cfg, train=False)
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + f
+    return x, {"self": new_self}
+
+
 def layer_decode(p, prog, x, cfg, cache, pos):
     """One-token decode.  Returns (x, new_cache)."""
     h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
@@ -292,6 +356,79 @@ def init_stack_cache(cfg, batch, cache_len, enc_len=0, dtype=jnp.bfloat16):
                     lambda a: jnp.broadcast_to(a, (seg.repeat,) + a.shape), one))
             out.append(pos_caches)
     return out
+
+
+def init_stack_cache_paged(cfg, n_pages, page_size, dtype=jnp.bfloat16):
+    segs = plan_segments(cfg)
+    out = []
+    for seg in segs:
+        if seg.kind == "unroll":
+            out.append([init_layer_cache_paged(prog, cfg, n_pages, page_size,
+                                               dtype)
+                        for prog in seg.programs])
+        else:
+            pos_caches = []
+            for prog in seg.programs:
+                one = init_layer_cache_paged(prog, cfg, n_pages, page_size,
+                                             dtype)
+                pos_caches.append(jax.tree.map(
+                    lambda a: jnp.broadcast_to(a, (seg.repeat,) + a.shape), one))
+            out.append(pos_caches)
+    return out
+
+
+def stack_prefill_paged(stack_params, cache, x, cfg, positions, table,
+                        valid=None):
+    segs = plan_segments(cfg)
+    new_cache = []
+    for seg, seg_p, seg_c in zip(segs, stack_params, cache):
+        if seg.kind == "unroll":
+            ncs = []
+            for prog, lp, lc in zip(seg.programs, seg_p, seg_c):
+                x, nc = layer_prefill_paged(lp, prog, x, cfg, positions, lc,
+                                            table, valid)
+                ncs.append(nc)
+            new_cache.append(ncs)
+        else:
+            def body(h, rep, _seg=seg):
+                rep_params, rep_cache = rep
+                ncs = []
+                for prog, lp, lc in zip(_seg.programs, rep_params, rep_cache):
+                    h, nc = layer_prefill_paged(lp, prog, h, cfg, positions,
+                                                lc, table, valid)
+                    ncs.append(nc)
+                return h, ncs
+
+            x, nc_stacked = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_cache.append(nc_stacked)
+    return x, new_cache
+
+
+def stack_decode_paged(stack_params, cache, x, cfg, pos, table, *,
+                       attn_impl="ref"):
+    segs = plan_segments(cfg)
+    new_cache = []
+    for seg, seg_p, seg_c in zip(segs, stack_params, cache):
+        if seg.kind == "unroll":
+            ncs = []
+            for prog, lp, lc in zip(seg.programs, seg_p, seg_c):
+                x, nc = layer_decode_paged(lp, prog, x, cfg, lc, pos, table,
+                                           attn_impl=attn_impl)
+                ncs.append(nc)
+            new_cache.append(ncs)
+        else:
+            def body(h, rep, _seg=seg):
+                rep_params, rep_cache = rep
+                ncs = []
+                for prog, lp, lc in zip(_seg.programs, rep_params, rep_cache):
+                    h, nc = layer_decode_paged(lp, prog, h, cfg, lc, pos,
+                                               table, attn_impl=attn_impl)
+                    ncs.append(nc)
+                return h, ncs
+
+            x, nc_stacked = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_cache.append(nc_stacked)
+    return x, new_cache
 
 
 def stack_forward(stack_params, x, cfg, positions, *, window=0, enc_out=None,

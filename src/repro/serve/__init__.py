@@ -1,5 +1,6 @@
-from repro.serve.cache import SlotKVPool, slot_insert
+from repro.serve.cache import PagedKVPool, SlotKVPool, page_copy, slot_insert
 from repro.serve.engine import (ContinuousConfig, ContinuousEngine, Engine,
-                                OneShotEngine, ServeConfig,
-                                consolidated_params)
-from repro.serve.scheduler import Request, RequestQueue, Scheduler
+                                OneShotEngine, PagedConfig, PagedEngine,
+                                ServeConfig, consolidated_params)
+from repro.serve.scheduler import (PagedScheduler, Request, RequestQueue,
+                                   Scheduler)

@@ -20,7 +20,8 @@ mesh the hint is an exact no-op.
 """
 from __future__ import annotations
 
-from typing import Any, List, Optional
+from collections import OrderedDict
+from typing import Any, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -87,3 +88,297 @@ class SlotKVPool:
                                   np.int32(slot))
         self.tokens[slot] = first_token
         self.positions[slot] = n_tokens
+
+
+# ---------------------------------------------------------------------------
+# Paged pool (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def page_copy(cache, src, dst):
+    """Copy one physical page (all arena leaves) from ``src`` to ``dst``.
+    The page dim of each leaf is located by name exactly like the slotted
+    batch dim (arena leaves have the same trailing rank as slotted ones)."""
+    def upd(path, leaf):
+        d = cache_batch_dim(_leaf_name(path), leaf.ndim)
+        page = jax.lax.dynamic_slice_in_dim(leaf, src, 1, axis=d)
+        return hint(jax.lax.dynamic_update_slice_in_dim(leaf, page, dst,
+                                                        axis=d), "cache")
+    return jax.tree_util.tree_map_with_path(upd, cache)
+
+
+class PagedKVPool:
+    """Page-table KV pool: a global page arena shared by every in-flight
+    request (DESIGN.md §15).
+
+    * pages are ``page_size`` tokens; page 0 is the reserved null page
+      (never handed out, absorbs writes of inactive decode rows);
+    * each slot owns an ordered page list in ``page_table[slot]`` grown on
+      demand as decode crosses page boundaries;
+    * ``refcount`` counts slot references + one reference per prefix-cache
+      entry; a decode write into a page with refcount > 1 copies it first
+      (copy-on-write), preserving the pristine prompt snapshot for sharers;
+    * the prefix cache maps prompt-prefix bytes -> page id (full pages at
+      block granularity plus the partial last prompt page), LRU-evicted
+      when admission needs pages;
+    * admission is by free-page budget: the worst-case decode growth of an
+      admitted request is *reserved* (not allocated), so on-demand growth
+      can never fail mid-flight while admission stays page-accurate.
+
+    ``model=None`` builds a host-only pool (no device arena) for allocator
+    property tests.
+    """
+
+    def __init__(self, model, n_pages: int, page_size: int, max_slots: int,
+                 max_pages: int):
+        assert n_pages >= 2, "need at least the null page + one real page"
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.max_slots = max_slots
+        self.max_pages = max_pages                 # page-table width
+        self.cache = (model.init_paged_cache(n_pages, page_size)
+                      if model is not None else None)
+        self.positions = np.zeros((max_slots,), np.int32)
+        self.tokens = np.zeros((max_slots, 1), np.int32)
+        self.page_table = np.zeros((max_slots, max_pages), np.int32)
+        self.refcount = np.zeros((n_pages,), np.int32)
+        self.refcount[0] = 1                       # null page: pinned forever
+        self._free_pages: List[int] = list(range(n_pages - 1, 0, -1))
+        self._free_slots: List[int] = list(range(max_slots - 1, -1, -1))
+        self._prefix: "OrderedDict[bytes, int]" = OrderedDict()
+        self.reserved = 0                          # pages promised to slots
+        self._slot_reserve = np.zeros((max_slots,), np.int32)
+        self._copy = jax.jit(page_copy, donate_argnums=(0,))
+        self.stats = {"cow_copies": 0, "evictions": 0, "prefix_hits": 0,
+                      "shared_tokens": 0}
+
+    # -- compatibility with the slotted Scheduler arithmetic ---------------
+    @property
+    def cache_len(self) -> int:
+        return self.max_pages * self.page_size
+
+    @property
+    def n_free_pages(self) -> int:
+        return len(self._free_pages)
+
+    @property
+    def n_free_slots(self) -> int:
+        return len(self._free_slots)
+
+    @property
+    def pages_in_use(self) -> int:
+        return self.n_pages - 1 - len(self._free_pages)
+
+    # -- page / slot primitives --------------------------------------------
+
+    def alloc_slot(self) -> Optional[int]:
+        return self._free_slots.pop() if self._free_slots else None
+
+    def _alloc_page(self) -> int:
+        pid = self._free_pages.pop()
+        assert self.refcount[pid] == 0, f"allocated live page {pid}"
+        self.refcount[pid] = 1
+        return pid
+
+    def _ref(self, pid: int) -> None:
+        assert pid != 0
+        self.refcount[pid] += 1
+
+    def _unref(self, pid: int) -> None:
+        assert pid != 0, "unref of the null page"
+        self.refcount[pid] -= 1
+        assert self.refcount[pid] >= 0, f"refcount underflow on page {pid}"
+        if self.refcount[pid] == 0:
+            self._free_pages.append(pid)
+
+    def _copy_page(self, src: int, dst: int) -> None:
+        if self.cache is not None:
+            self.cache = self._copy(self.cache, np.int32(src), np.int32(dst))
+
+    # -- prefix sharing -----------------------------------------------------
+
+    def plan(self, tokens, max_new: int) -> Dict[str, Any]:
+        """Pure lookup (no mutation): how much of ``tokens`` the prefix
+        cache already holds, and the page budget the request needs.
+        Sharing is capped at prompt_len - 1 so the last prompt token's
+        logits are always computed by this request's own prefill."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        Lp = int(toks.shape[-1])
+        ps = self.page_size
+        shareable = Lp - 1
+        shared_full: List[int] = []
+        k = 0
+        while (k + 1) * ps <= shareable:
+            page = self._prefix.get(toks[:(k + 1) * ps].tobytes())
+            if page is None:
+                break
+            shared_full.append(page)
+            k += 1
+        partial: Optional[Tuple[int, int]] = None   # (page, tokens valid)
+        m = k * ps
+        for mm in range(min(shareable, (k + 1) * ps - 1), k * ps, -1):
+            page = self._prefix.get(toks[:mm].tobytes())
+            if page is not None:
+                partial = (page, mm)
+                m = mm
+                break
+        prompt_blocks = -(-Lp // ps)
+        fresh = prompt_blocks - k                   # incl. the partial copy
+        if max_new <= 1:
+            reserve = 0
+        else:
+            last_write = Lp + max_new - 2           # last decode KV write
+            reserve = last_write // ps - (Lp - 1) // ps
+            if Lp % ps:
+                reserve += 1                        # CoW of the partial page
+        return {"m": m, "shared_full": shared_full, "partial": partial,
+                "prompt_blocks": prompt_blocks, "fresh": fresh,
+                "reserve": reserve}
+
+    def _protected(self, plan) -> set:
+        prot = set(plan["shared_full"])
+        if plan["partial"] is not None:
+            prot.add(plan["partial"][0])
+        return prot
+
+    def can_admit(self, tokens, max_new: int) -> bool:
+        plan = self.plan(tokens, max_new)
+        need = plan["fresh"] + plan["reserve"]
+        avail = self.n_free_pages - self.reserved
+        if avail >= need:
+            return True
+        prot = self._protected(plan)
+        evictable = sum(1 for pg in self._prefix.values()
+                        if pg not in prot and self.refcount[pg] == 1)
+        return avail + evictable >= need
+
+    def _evict(self, n: int, protect: set) -> int:
+        """Drop LRU prefix entries until ``n`` pages came free (or nothing
+        evictable remains).  Entries whose page is still referenced by a
+        live slot are kept — dropping them frees nothing and only loses
+        sharing."""
+        freed = 0
+        for key in list(self._prefix):
+            if freed >= n:
+                break
+            pg = self._prefix[key]
+            if pg in protect or self.refcount[pg] != 1:
+                continue
+            del self._prefix[key]
+            self._unref(pg)                        # refcount 1 -> 0: freed
+            freed += 1
+            self.stats["evictions"] += 1
+        return freed
+
+    def admit(self, slot: int, tokens, max_new: int) -> int:
+        """Build the slot's prompt page list: shared full pages by
+        reference, the shared partial page by copy-on-write copy, fresh
+        pages for the rest; reserve worst-case decode growth.  Returns the
+        number of prompt tokens already present in shared pages (prefill
+        resumes at that offset)."""
+        plan = self.plan(tokens, max_new)
+        need = plan["fresh"] + plan["reserve"]
+        avail = self.n_free_pages - self.reserved
+        if avail < need:
+            self._evict(need - avail, self._protected(plan))
+            avail = self.n_free_pages - self.reserved
+        assert avail >= need, "admit() without a passing can_admit()"
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        ps = self.page_size
+        row: List[int] = []
+        for k, pg in enumerate(plan["shared_full"]):
+            self._ref(pg)
+            self._prefix.move_to_end(toks[:(k + 1) * ps].tobytes())
+            row.append(pg)
+        if plan["partial"] is not None:
+            src, mm = plan["partial"]
+            dst = self._alloc_page()
+            self._copy_page(src, dst)
+            self._prefix.move_to_end(toks[:mm].tobytes())
+            row.append(dst)
+            self.stats["cow_copies"] += 1
+        while len(row) < plan["prompt_blocks"]:
+            row.append(self._alloc_page())
+        self.page_table[slot, :] = 0
+        self.page_table[slot, :len(row)] = row
+        self.reserved += plan["reserve"]
+        self._slot_reserve[slot] = plan["reserve"]
+        self.positions[slot] = 0
+        self.tokens[slot] = 0
+        if plan["m"]:
+            self.stats["prefix_hits"] += 1
+            self.stats["shared_tokens"] += plan["m"]
+        return plan["m"]
+
+    def register_prefix(self, slot: int, tokens) -> None:
+        """At prefill completion: publish the slot's prompt pages (full
+        blocks + the partial last page) so later requests with the same
+        prefix can share them.  Each new entry takes a refcount."""
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int32))
+        Lp = int(toks.shape[-1])
+        ps = self.page_size
+        for k in range(Lp // ps):
+            key = toks[:(k + 1) * ps].tobytes()
+            if key in self._prefix:
+                self._prefix.move_to_end(key)
+            else:
+                pg = int(self.page_table[slot, k])
+                self._prefix[key] = pg
+                self._ref(pg)
+        if Lp % ps:
+            key = toks[:Lp].tobytes()
+            if key in self._prefix:
+                self._prefix.move_to_end(key)
+            else:
+                pg = int(self.page_table[slot, Lp // ps])
+                self._prefix[key] = pg
+                self._ref(pg)
+
+    # -- decode-time growth / CoW -------------------------------------------
+
+    def grow_for(self, slot: int, pos: int) -> None:
+        """Make the page holding absolute position ``pos`` writable for
+        ``slot`` before the decode step writes it: allocate the block's
+        page if missing (drawn from this slot's reservation), or copy it
+        if shared (refcount > 1)."""
+        blk = pos // self.page_size
+        pid = int(self.page_table[slot, blk])
+        if pid == 0:
+            self.page_table[slot, blk] = self._draw_reserved(slot)
+        elif self.refcount[pid] > 1:
+            dst = self._draw_reserved(slot)
+            self._copy_page(pid, dst)
+            self.page_table[slot, blk] = dst
+            self._unref(pid)
+            self.stats["cow_copies"] += 1
+
+    def _draw_reserved(self, slot: int) -> int:
+        assert self._slot_reserve[slot] > 0, \
+            f"slot {slot} grew past its reservation"
+        self._slot_reserve[slot] -= 1
+        self.reserved -= 1
+        return self._alloc_page()
+
+    # -- retirement ----------------------------------------------------------
+
+    def release(self, slot: int) -> None:
+        assert slot not in self._free_slots, f"double free of slot {slot}"
+        for pid in self.page_table[slot]:
+            if pid:
+                self._unref(int(pid))
+        self.page_table[slot, :] = 0
+        self.reserved -= int(self._slot_reserve[slot])
+        self._slot_reserve[slot] = 0
+        self.positions[slot] = 0
+        self.tokens[slot] = 0
+        self._free_slots.append(slot)
+
+    # -- decode inputs --------------------------------------------------------
+
+    def device_table(self, active: Iterable[int]):
+        """Page table for the jitted decode: rows of slots NOT actively
+        decoding are nulled so their (position 0) writes land on the null
+        page instead of clobbering a prefilling request's first page."""
+        mask = np.zeros((self.max_slots, 1), np.int32)
+        for s in active:
+            mask[s] = 1
+        return self.page_table * mask

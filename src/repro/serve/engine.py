@@ -28,8 +28,29 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import Model
-from repro.serve.cache import SlotKVPool
-from repro.serve.scheduler import Request, RequestQueue, Scheduler
+from repro.serve.cache import PagedKVPool, SlotKVPool
+from repro.serve.scheduler import (PagedScheduler, Request, RequestQueue,
+                                   Scheduler)
+
+
+@jax.jit
+def _batched_sample(logits, keys, temps):
+    """One jitted sampling step for ALL slots: split every slot's key,
+    sample categorical (or argmax for temp<=0) per row, return (tokens,
+    next keys).  Bit-identical per slot to the per-slot chain
+    ``key, k = split(key); categorical(k, logits/temp)`` — `split` vmaps
+    to the same per-key stream and `categorical` draws the same bits for
+    a (V,) row as for a (1, V) one.
+
+    logits: (S, V); keys: (S, 2) uint32; temps: (S,) fp32.
+    """
+    splits = jax.vmap(jax.random.split)(keys)      # (S, 2, 2)
+    next_keys, use_keys = splits[:, 0], splits[:, 1]
+    safe = jnp.where(temps > 0, temps, 1.0)
+    cat = jax.vmap(jax.random.categorical)(use_keys, logits / safe[:, None])
+    greedy = jnp.argmax(logits, -1)
+    tok = jnp.where(temps > 0, cat, greedy).astype(jnp.int32)
+    return tok, next_keys
 
 
 @dataclass
@@ -104,6 +125,8 @@ class ContinuousConfig:
     cache_len: int = 256
     eos_id: int = -1              # < 0: disabled
     enc_len: int = 0              # encdec: fixed encoder length per request
+    batched_sampling: bool = True  # one jitted categorical over all slots
+    #                                (False: legacy per-slot host-sync path)
 
 
 @dataclass
@@ -144,6 +167,10 @@ class ContinuousEngine:
         # suffices — jax caches one trace per distinct (prompt, extras) shape
         self._prefill = jax.jit(functools.partial(model.prefill,
                                                   cache_len=ccfg.cache_len))
+        # batched sampling state: per-slot PRNG keys live on device so one
+        # jitted call samples every slot (no per-slot host syncs in step)
+        self._keys = jnp.zeros((ccfg.max_slots, 2), jnp.uint32)
+        self._temps = np.zeros((ccfg.max_slots,), np.float32)
 
     # -- admission -----------------------------------------------------------
 
@@ -160,6 +187,8 @@ class ContinuousEngine:
             tok = self._sample_one(logits[:, -1], st.key, req.temperature)
             total0 = req.prompt_len + Scheduler.prefix_len(req)
             self.pool.insert(slot, rcache, tok, total0)
+            self._keys = self._keys.at[slot].set(st.key)
+            self._temps[slot] = req.temperature
             self._active[slot] = st
             self._emit(slot, st, tok)
 
@@ -196,6 +225,17 @@ class ContinuousEngine:
             jnp.asarray(self.pool.tokens), jnp.asarray(self.pool.positions))
         self.stats["decode_steps"] += 1
         lg = logits[:, -1]                      # (max_slots, V)
+        if self.ccfg.batched_sampling:
+            # one jitted call samples every slot, one host transfer total
+            toks_dev, self._keys = _batched_sample(
+                lg, self._keys, jnp.asarray(self._temps))
+            toks = np.asarray(toks_dev)
+            for slot, st in list(self._active.items()):
+                tok = int(toks[slot])
+                self.pool.positions[slot] += 1
+                self.pool.tokens[slot] = tok
+                self._emit(slot, st, tok)
+            return bool(self._active) or len(self.queue) > 0
         greedy = None
         for slot, st in list(self._active.items()):
             if st.req.temperature <= 0.0:
@@ -235,6 +275,189 @@ class ContinuousEngine:
                 f"requests {missing} were rejected by the scheduler "
                 f"(prompt + max_new_tokens exceeds cache_len="
                 f"{self.pool.cache_len}?)")
+        return [out[base + i] for i in range(len(prompts))]
+
+
+# ---------------------------------------------------------------------------
+# Paged continuous batching (DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PagedConfig:
+    max_slots: int = 8
+    cache_len: int = 256          # per-request token budget (table width * ps)
+    page_size: int = 64
+    n_pages: int = 0              # 0 -> max_slots * cache_len/page_size + 1
+    prefill_chunk: int = 32       # max prompt tokens prefilled per step
+    eos_id: int = -1              # < 0: disabled
+
+
+@dataclass
+class _PagedSlotState:
+    req: Request
+    key: Any
+    offset: int                   # next prompt position to prefill
+    emitted: List[int] = field(default_factory=list)
+
+
+class PagedEngine:
+    """Continuous batching over a paged KV pool (DESIGN.md §15).
+
+    Differences from :class:`ContinuousEngine`:
+
+    * HBM is a global page arena; admission is by free-page budget, so many
+      short requests fit where the slotted pool would strand
+      ``cache_len``-sized rows (the ≥1.5x throughput win of ISSUE 6);
+    * prompts prefill in chunks of at most ``prefill_chunk`` tokens per
+      step, interleaved with decode, so a long prompt never stalls active
+      decodes for more than one chunk;
+    * requests sharing a prompt prefix map the same physical pages
+      (refcounted copy-on-write; the prefix cache is LRU-evicted when
+      admission needs pages);
+    * decode is ``model.decode_paged`` — the Pallas paged-attention kernel
+      (or its jnp gather mirror) walking per-slot page tables.
+
+    Sampling is per-request seeded exactly like the other engines, so the
+    differential suite pins token identity against :class:`OneShotEngine`.
+    """
+
+    def __init__(self, model: Model, params,
+                 pcfg: PagedConfig = PagedConfig(), *,
+                 stream: Optional[Callable[[int, int, bool], None]] = None):
+        if model.decode_paged is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no pageable decode cache")
+        assert pcfg.cache_len % pcfg.page_size == 0
+        self.model = model
+        self.params = params
+        self.pcfg = pcfg
+        max_pages = pcfg.cache_len // pcfg.page_size
+        n_pages = pcfg.n_pages or (pcfg.max_slots * max_pages + 1)
+        self.pool = PagedKVPool(model, n_pages, pcfg.page_size,
+                                pcfg.max_slots, max_pages)
+        self.queue = RequestQueue()
+        self.scheduler = PagedScheduler(self.queue, self.pool)
+        self.stream = stream
+        self.finished: Dict[int, np.ndarray] = {}
+        self.stats = {"decode_steps": 0, "prefill_chunks": 0,
+                      "prefill_tokens": 0, "admitted": 0}
+        self._prefilling: Dict[int, _PagedSlotState] = {}   # FIFO by dict order
+        self._active: Dict[int, _PagedSlotState] = {}
+        self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
+        self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
+        self._keys = jnp.zeros((pcfg.max_slots, 2), jnp.uint32)
+        self._temps = np.zeros((pcfg.max_slots,), np.float32)
+
+    # -- admission -----------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.submit(req)
+
+    def _admit(self) -> None:
+        for slot, req, shared in self.scheduler.next_admissions():
+            self._prefilling[slot] = _PagedSlotState(
+                req=req, key=jax.random.PRNGKey(req.seed), offset=shared)
+            self.stats["admitted"] += 1
+
+    # -- chunked prefill -------------------------------------------------------
+
+    def _prefill_step(self) -> None:
+        """Spend at most ``prefill_chunk`` prompt tokens this step, FIFO
+        across prefilling slots.  A request whose prompt completes samples
+        its first token from the final chunk's logits and joins decode."""
+        W = self.pcfg.prefill_chunk
+        budget = W
+        while budget > 0 and self._prefilling:
+            slot, st = next(iter(self._prefilling.items()))
+            Lp = st.req.prompt_len
+            C = min(budget, Lp - st.offset)
+            # fixed-width call: every chunk shares ONE jit trace.  Lanes
+            # past ``last=C-1`` carry pad tokens; the model routes their
+            # cache writes to the null page and slices logits at C-1.
+            toks = np.zeros((1, W), np.int32)
+            toks[0, :C] = np.asarray(
+                st.req.tokens, np.int32)[st.offset:st.offset + C]
+            posn = jnp.arange(W, dtype=jnp.int32)[None] + st.offset
+            table = jnp.asarray(self.pool.page_table[slot:slot + 1])
+            logits, self.pool.cache = self._chunk(
+                self.params, self.pool.cache, jnp.asarray(toks), posn,
+                table, jnp.int32(C - 1))
+            st.offset += C
+            budget -= C
+            self.stats["prefill_chunks"] += 1
+            self.stats["prefill_tokens"] += C
+            if st.offset >= Lp:
+                self.pool.register_prefix(slot, st.req.tokens)
+                tok = ContinuousEngine._sample_one(logits[:, -1], st.key,
+                                                   st.req.temperature)
+                del self._prefilling[slot]
+                self.pool.tokens[slot] = tok
+                self.pool.positions[slot] = Lp
+                self._keys = self._keys.at[slot].set(st.key)
+                self._temps[slot] = st.req.temperature
+                self._active[slot] = st
+                self._emit(slot, st, tok)
+
+    # -- decode ----------------------------------------------------------------
+
+    def _emit(self, slot: int, st: _PagedSlotState, tok: int) -> None:
+        st.emitted.append(tok)
+        done = (len(st.emitted) >= st.req.max_new_tokens
+                or (self.pcfg.eos_id >= 0 and tok == self.pcfg.eos_id))
+        if self.stream is not None:
+            self.stream(st.req.uid, tok, done)
+        if done:
+            self.finished[st.req.uid] = np.asarray(st.emitted, np.int32)
+            del self._active[slot]
+            self.pool.release(slot)
+
+    def _decode_step(self) -> None:
+        if not self._active:
+            return
+        for slot in self._active:
+            self.pool.grow_for(slot, int(self.pool.positions[slot]))
+        table = jnp.asarray(self.pool.device_table(self._active))
+        logits, self.pool.cache = self._decode(
+            self.params, self.pool.cache, jnp.asarray(self.pool.tokens),
+            jnp.asarray(self.pool.positions), table)
+        self.stats["decode_steps"] += 1
+        toks_dev, self._keys = _batched_sample(
+            logits[:, -1], self._keys, jnp.asarray(self._temps))
+        toks = np.asarray(toks_dev)
+        for slot, st in list(self._active.items()):
+            tok = int(toks[slot])
+            self.pool.positions[slot] += 1
+            self.pool.tokens[slot] = tok
+            self._emit(slot, st, tok)
+
+    def step(self) -> bool:
+        """Admit by page budget, spend the prefill-chunk budget, then
+        advance all decoding slots one token.  Returns True while anything
+        is queued, prefilling, or decoding."""
+        self._admit()
+        self._prefill_step()
+        self._decode_step()
+        return bool(self._active or self._prefilling or len(self.queue))
+
+    def run(self) -> Dict[int, np.ndarray]:
+        while self.step():
+            pass
+        return self.finished
+
+    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> List[np.ndarray]:
+        base = len(self.finished)
+        for i, p in enumerate(prompts):
+            self.submit(Request(uid=base + i, tokens=np.asarray(p, np.int32),
+                                max_new_tokens=max_new_tokens,
+                                temperature=temperature, seed=seed + i))
+        out = self.run()
+        missing = [i for i in range(len(prompts)) if base + i not in out]
+        if missing:
+            raise ValueError(
+                f"requests {missing} were rejected by the scheduler "
+                f"(prompt + max_new_tokens exceeds the page budget "
+                f"cache_len={self.pool.cache_len}?)")
         return [out[base + i] for i in range(len(prompts))]
 
 

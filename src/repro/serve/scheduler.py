@@ -93,3 +93,45 @@ class Scheduler:
             slot = self.pool.alloc()
             admissions.append((slot, req))
         return admissions
+
+
+class PagedScheduler:
+    """Admission by free-page budget (DESIGN.md §15).
+
+    ``fits`` is static feasibility: the request's worst-case page count
+    must fit the page-table width.  ``next_admissions`` is transactional —
+    each admitted request's pages are allocated (and its decode growth
+    reserved) before the next candidate is considered, so the free-page
+    budget is never double-spent.  A head-of-line request that fits but
+    cannot be admitted *yet* waits (FIFO order is preserved, no starvation
+    of long prompts behind short ones).
+    """
+
+    def __init__(self, queue: RequestQueue, pool):
+        self.queue = queue
+        self.pool = pool
+        self.rejected: List[Request] = []
+
+    def fits(self, req: Request) -> bool:
+        if req.extras:
+            return False                 # paged serving: token-only families
+        total = req.prompt_len + req.max_new_tokens
+        blocks = -(-total // self.pool.page_size)
+        return req.prompt_len > 0 and blocks <= self.pool.max_pages
+
+    def next_admissions(self) -> List[Tuple[int, Request, int]]:
+        """Returns (slot, request, shared_tokens) triples; ``shared_tokens``
+        is where chunked prefill resumes (prefix-cache hit)."""
+        admissions: List[Tuple[int, Request, int]] = []
+        while self.pool.n_free_slots and len(self.queue):
+            req = self.queue.pop()
+            if not self.fits(req):
+                self.rejected.append(req)
+                continue
+            if not self.pool.can_admit(req.tokens, req.max_new_tokens):
+                self.queue.push_front(req)         # wait for pages to free
+                break
+            slot = self.pool.alloc_slot()
+            shared = self.pool.admit(slot, req.tokens, req.max_new_tokens)
+            admissions.append((slot, req, shared))
+        return admissions

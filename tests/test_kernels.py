@@ -23,6 +23,9 @@ KEY = jax.random.PRNGKey(42)
         (2, 4, 4, 256, 256, 64, False, 0),     # MHA, bidirectional
         (1, 4, 2, 256, 256, 64, True, 100),    # sliding window
         (1, 2, 2, 512, 512, 256, True, 0),     # gemma-style head_dim
+        (2, 4, 2, 200, 136, 64, True, 0),      # non-block-multiple S and T
+        (1, 4, 2, 200, 136, 64, False, 0),     # ... bidirectional
+        (1, 4, 4, 130, 130, 64, True, 48),     # ... with sliding window
     ])
 def test_flash_attention(B, H, Kv, S, T, hd, causal, window, dtype):
     ks = jax.random.split(KEY, 3)
@@ -35,6 +38,64 @@ def test_flash_attention(B, H, Kv, S, T, hd, causal, window, dtype):
     tol = 2e-6 if dtype == jnp.float32 else 2e-2
     np.testing.assert_allclose(np.asarray(out, np.float32),
                                np.asarray(exp, np.float32), atol=tol, rtol=tol)
+
+
+def _paged_case(key, B, H, Kv, hd, ps, nb, dtype):
+    """Random arena + page tables: each sequence owns distinct pages for
+    its valid blocks; trailing entries stay on the null page 0."""
+    ks = jax.random.split(key, 4)
+    n_pages = 1 + B * nb                     # page 0 reserved
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k_arena = jax.random.normal(ks[1], (n_pages, ps, Kv, hd), dtype)
+    v_arena = jax.random.normal(ks[2], (n_pages, ps, Kv, hd), dtype)
+    lengths = jax.random.randint(ks[3], (B,), 1, nb * ps + 1)
+    perm = np.random.default_rng(0).permutation(n_pages - 1) + 1
+    table = np.zeros((B, nb), np.int32)
+    for b in range(B):
+        used = (int(lengths[b]) + ps - 1) // ps
+        table[b, :used] = perm[b * nb:b * nb + used]
+    return q, k_arena, v_arena, jnp.asarray(table), lengths
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Kv,hd,ps,nb", [
+    (3, 4, 2, 64, 8, 4),
+    (2, 8, 1, 128, 16, 3),    # MQA
+    (4, 4, 4, 64, 4, 6),      # MHA, small pages
+])
+def test_paged_attention_interpret_bitwise(B, H, Kv, hd, ps, nb, dtype):
+    """Interpret-mode Pallas body == jnp gather ref BITWISE: same block
+    order, same fp32 casts, same online-softmax update (DESIGN.md §15)."""
+    from repro.kernels.paged_attention import paged_attention
+    q, ka, va, table, lens = _paged_case(KEY, B, H, Kv, hd, ps, nb, dtype)
+    out_i = paged_attention(q, ka, va, table, lens, impl="interpret")
+    out_r = paged_attention(q, ka, va, table, lens, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("B,H,Kv,hd,ps,nb", [(3, 4, 2, 64, 8, 4),
+                                             (2, 8, 1, 64, 4, 5)])
+def test_paged_attention_matches_dense(B, H, Kv, hd, ps, nb):
+    """Gathering the pages into a dense cache and running full-softmax
+    attention over the valid prefix gives the same result — garbage in
+    unused pages (incl. the null page) must contribute nothing."""
+    from repro.kernels.paged_attention import paged_attention
+    q, ka, va, table, lens = _paged_case(
+        jax.random.PRNGKey(7), B, H, Kv, hd, ps, nb, jnp.float32)
+    # poison the null page: masking, not zero content, must protect it
+    ka = ka.at[0].set(1e4)
+    va = va.at[0].set(1e4)
+    out = paged_attention(q, ka, va, table, lens, impl="ref")
+    k_dense = ka[table].reshape(B, nb * ps, Kv, hd)   # (B, L, Kv, hd)
+    v_dense = va[table].reshape(B, nb * ps, Kv, hd)
+    kr = jnp.repeat(jnp.moveaxis(k_dense, 1, 2), H // Kv, axis=1)
+    vr = jnp.repeat(jnp.moveaxis(v_dense, 1, 2), H // Kv, axis=1)
+    s = jnp.einsum("bhd,bhkd->bhk", q, kr) * (hd ** -0.5)
+    s = jnp.where(jnp.arange(nb * ps)[None, None] < lens[:, None, None],
+                  s, -1e30)
+    exp = jnp.einsum("bhk,bhkd->bhd", jax.nn.softmax(s, axis=-1), vr)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-6, rtol=2e-6)
 
 
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])

@@ -1,0 +1,216 @@
+"""Allocator-invariant tests for the KV pools (hypothesis-style property
+loops with seeded rngs — no hypothesis dependency in the image).
+
+``PagedKVPool(model=None, ...)`` is the host-only pool: all page-table /
+refcount / reservation bookkeeping without a device arena, so thousands of
+randomized lifecycles run in milliseconds.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.serve import PagedKVPool
+
+
+def _host_pool(n_pages=16, page_size=4, max_slots=3, max_pages=8):
+    return PagedKVPool(None, n_pages, page_size, max_slots, max_pages)
+
+
+def _check_invariants(pool):
+    """Global accounting: refcounts equal slot references + prefix-cache
+    references (+ the pinned null page), free pages have refcount 0, and
+    reservations never exceed the free list."""
+    assert (pool.refcount >= 0).all()
+    assert 0 <= pool.reserved <= pool.n_free_pages
+    assert pool.reserved == pool._slot_reserve.sum()
+    for pid in pool._free_pages:
+        assert pool.refcount[pid] == 0, f"free page {pid} still referenced"
+    refs = np.zeros(pool.n_pages, np.int64)
+    refs[0] = 1
+    for s in range(pool.max_slots):
+        if s in pool._free_slots:
+            assert not pool.page_table[s].any(), "freed slot kept pages"
+            continue
+        for pid in pool.page_table[s]:
+            if pid:
+                refs[pid] += 1
+    for pg in pool._prefix.values():
+        refs[pg] += 1
+    np.testing.assert_array_equal(refs, pool.refcount)
+
+
+def test_slot_double_free_asserts():
+    pool = _host_pool()
+    s = pool.alloc_slot()
+    pool.admit(s, np.arange(4, dtype=np.int32), 2)
+    pool.release(s)
+    with pytest.raises(AssertionError, match="double free"):
+        pool.release(s)
+
+
+def test_refcount_never_negative():
+    pool = _host_pool()
+    s = pool.alloc_slot()
+    pool.admit(s, np.arange(4, dtype=np.int32), 2)
+    pid = int(pool.page_table[s, 0])
+    pool.release(s)                       # page freed (no prefix entry yet)
+    with pytest.raises(AssertionError, match="underflow"):
+        pool._unref(pid)
+
+
+def test_alloc_exhaustion():
+    # 3 real pages; a 8-token prompt needs 2 + reserve
+    pool = _host_pool(n_pages=4, page_size=4, max_slots=3, max_pages=4)
+    s0 = pool.alloc_slot()
+    assert pool.can_admit(np.arange(8, dtype=np.int32), 5)
+    pool.admit(s0, np.arange(8, dtype=np.int32), 5)     # 2 alloc + 1 reserve
+    assert not pool.can_admit(np.arange(8, dtype=np.int32), 5)
+    # slots exhaust independently of pages
+    pool.alloc_slot(), pool.alloc_slot()
+    assert pool.alloc_slot() is None
+    _check_invariants(pool)
+
+
+def test_freed_pages_are_reusable():
+    pool = _host_pool(n_pages=6, page_size=4, max_slots=2, max_pages=4)
+    toks = np.arange(8, dtype=np.int32)
+    used = set()
+    for _ in range(5):                    # cycle through the same arena
+        s = pool.alloc_slot()
+        pool.admit(s, toks, 1)            # no reserve at max_new=1
+        used.update(int(p) for p in pool.page_table[s] if p)
+        pool.release(s)
+        assert pool.n_free_pages == 5
+    assert used <= set(range(1, 6))
+    _check_invariants(pool)
+
+
+def test_null_page_never_allocated():
+    pool = _host_pool(n_pages=4, page_size=4, max_slots=4, max_pages=4)
+    got = set()
+    for s in range(3):
+        slot = pool.alloc_slot()
+        pool.admit(slot, np.arange(4, dtype=np.int32), 1)
+        got.add(int(pool.page_table[slot, 0]))
+    assert 0 not in got and len(got) == 3
+
+
+def test_property_random_lifecycles():
+    """Seeded fuzz: random admits (with prefix sharing), decode growth,
+    early retirement and prefix registration; invariants hold after every
+    mutation and the pool drains clean modulo the prefix cache."""
+    rng = np.random.default_rng(42)
+    pool = _host_pool(n_pages=24, page_size=4, max_slots=3, max_pages=8)
+    prompts = [rng.integers(0, 97, size=n, dtype=np.int32)
+               for n in (4, 6, 9, 11)]
+    live = {}                             # slot -> [tokens, pos, budget]
+    for step in range(600):
+        op = rng.random()
+        if op < 0.35 and pool.n_free_slots:
+            toks = prompts[int(rng.integers(len(prompts)))]
+            if rng.random() < 0.5:        # extend: exercises partial CoW
+                tail = rng.integers(0, 97, size=int(rng.integers(1, 4)),
+                                    dtype=np.int32)
+                toks = np.concatenate([toks, tail])
+            max_new = int(rng.integers(1, 9))
+            if pool.can_admit(toks, max_new):
+                slot = pool.alloc_slot()
+                pool.admit(slot, toks, max_new)
+                pool.register_prefix(slot, toks)
+                live[slot] = [toks, len(toks), max_new - 1]
+        elif op < 0.8 and live:
+            slot = int(rng.choice(list(live)))
+            toks, pos, budget = live[slot]
+            if budget > 0:
+                pool.grow_for(slot, pos)
+                live[slot][1] += 1
+                live[slot][2] -= 1
+        elif live:
+            slot = int(rng.choice(list(live)))
+            del live[slot]
+            pool.release(slot)            # early EOS: reservation refunded
+        _check_invariants(pool)
+    for slot in list(live):
+        pool.release(slot)
+    _check_invariants(pool)
+    assert pool.reserved == 0
+    assert pool.pages_in_use == len(pool._prefix)
+
+
+def test_prefix_sharing_and_eviction_bookkeeping():
+    pool = _host_pool(n_pages=7, page_size=4, max_slots=3, max_pages=4)
+    toks = np.arange(8, dtype=np.int32)   # exactly 2 full pages
+    s0 = pool.alloc_slot()
+    assert pool.admit(s0, toks, 1) == 0
+    pool.register_prefix(s0, toks)
+    pool.release(s0)
+    # both full pages shareable (Lp-1 = 8 covers them; the extender's own
+    # last token still gets a fresh page for its logits)
+    ext = np.concatenate([toks, np.array([5], np.int32)])
+    s1 = pool.alloc_slot()
+    assert pool.admit(s1, ext, 1) == 8    # two shared full pages
+    assert pool.stats["prefix_hits"] == 1
+    _check_invariants(pool)
+    pool.register_prefix(s1, ext)         # caches the partial third page
+    pool.release(s1)
+    # exhaust the arena so admission must evict the LRU prefix entries
+    big = np.arange(100, 100 + 16, dtype=np.int32)
+    s2 = pool.alloc_slot()
+    assert pool.can_admit(big, 1)         # only via eviction
+    pool.admit(s2, big, 1)
+    assert pool.stats["evictions"] > 0
+    _check_invariants(pool)
+
+
+def test_slot_pool_invariants_unchanged():
+    """The slotted pool keeps its allocator contract (regression guard —
+    the paged pool rides alongside, it does not replace the slotted one)."""
+    import jax.numpy as jnp
+    from repro.configs import get_config
+    from repro.models import build_model
+    from repro.serve import SlotKVPool
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    pool = SlotKVPool(model, max_slots=2, cache_len=16)
+    a, b = pool.alloc(), pool.alloc()
+    assert {a, b} == {0, 1} and pool.alloc() is None
+    pool.release(a)
+    assert pool.n_free == 1
+    with pytest.raises(AssertionError):
+        pool.release(a)
+    assert pool.alloc() == a              # freed slot reusable
+
+
+def test_paged_cache_specs_layout():
+    """Arena sharding (DESIGN.md §15): the page dim is a global address
+    space (never sharded over data axes); only the head/latent feature
+    dim goes tensor-parallel, and only when divisible."""
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.configs import get_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch.specs import paged_cache_specs
+    from repro.models import build_model
+    from repro.models import transformer as T
+
+    mesh = make_host_mesh(data=1, model=1)
+    for arch in ("qwen3_4b", "deepseek_v3_671b"):
+        cfg = get_config(arch).reduced()
+        model = build_model(cfg, compute_dtype=jnp.float32,
+                            cache_dtype=jnp.float32)
+        cache = model.init_paged_cache(8, 4)
+        specs = paged_cache_specs(cache, cfg, mesh)
+        flat_c = jax.tree_util.tree_flatten_with_path(cache)[0]
+        flat_s = jax.tree_util.tree_leaves(
+            specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_c) == len(flat_s)
+        for (path, leaf), spec in zip(flat_c, flat_s):
+            name = "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                            for k in path).split("/")[-1]
+            base = T.cache_batch_dim(name, leaf.ndim)
+            assert spec[base] is None          # page dim never sharded
+            assert spec[base + 1] is None      # in-page line dim either
+            for d, s in enumerate(spec):
+                if s is not None:
+                    assert d == base + 2 and s == "model"
