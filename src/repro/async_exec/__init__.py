@@ -1,0 +1,13 @@
+"""Asynchronous A-EDiT execution: time-based rounds, Delayed-Nesterov
+anchor, no SPMD barrier (paper §3.3 made real; DESIGN.md §16)."""
+from repro.async_exec.adaptive import AdaptiveSyncController
+from repro.async_exec.anchor import DelayedNesterovAnchor, UploadGate
+from repro.async_exec.executor import AsyncExecutor, AsyncResult
+from repro.async_exec.worker import (AsyncWorker, Upload, flat_unflattener,
+                                     make_inner_step, tree_to_flat)
+
+__all__ = [
+    "AdaptiveSyncController", "AsyncExecutor", "AsyncResult", "AsyncWorker",
+    "DelayedNesterovAnchor", "Upload", "UploadGate", "flat_unflattener",
+    "make_inner_step", "tree_to_flat",
+]

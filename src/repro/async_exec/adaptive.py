@@ -1,0 +1,63 @@
+"""AdLoCo-style adaptive sync-interval and batch control.
+
+After each closed round the executor feeds the controller the measured
+per-worker inner-step counts.  The controller retunes two knobs:
+
+* ``tau_time`` — multiplicatively nudged so the *median* worker fits
+  ``h_target`` inner steps per round (the paper's H, now a target rather
+  than a constant), smoothed by ``gain`` and clamped to
+  ``[min_tau, max_tau]``.
+* per-worker microbatch fractions — a straggler is handed a smaller
+  per-step batch (quantized to ``batch_fracs`` of the nominal shard) so
+  it completes more, cheaper steps per round instead of contributing a
+  stale two-step pseudo gradient.  Fractions are chosen from the
+  worker's measured step share relative to the fastest worker.
+
+Contribution weights stay uniform (1/R): pseudo-gradient *means* are
+what both the synchronous path and the Delayed-Nesterov telescoping
+assume, and re-weighting by tokens would silently change the outer
+objective between the sync and async paths.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+
+@dataclass
+class AdaptiveSyncController:
+    h_target: int = 8
+    gain: float = 0.5                     # exponent on the correction ratio
+    min_tau: float = 0.5
+    max_tau: float = 256.0
+    batch_fracs: Tuple[float, ...] = (1.0, 0.5, 0.25)
+    history: List[dict] = field(default_factory=list)
+
+    def update(self, tau_time: float,
+               steps_per_worker: Dict[int, int]) -> Tuple[float, Dict[int, float]]:
+        """Returns ``(new_tau_time, {wid: batch_frac})``."""
+        counts = np.array([max(0, int(s)) for s in steps_per_worker.values()],
+                          dtype=np.float64)
+        med = float(np.median(counts)) if counts.size else 0.0
+        tau_new = tau_time
+        if med > 0:
+            tau_new = float(np.clip(
+                tau_time * (self.h_target / med) ** self.gain,
+                self.min_tau, self.max_tau))
+        fastest = float(counts.max()) if counts.size else 0.0
+        fracs: Dict[int, float] = {}
+        for wid, s in steps_per_worker.items():
+            share = (s / fastest) if fastest > 0 else 1.0
+            # smallest allowed fraction still >= the worker's speed share,
+            # i.e. shrink the batch just enough to level step counts
+            frac = self.batch_fracs[0]
+            for f in sorted(self.batch_fracs):
+                if f >= share:
+                    frac = f
+                    break
+            fracs[wid] = frac
+        self.history.append({"tau_time": tau_new, "median_steps": med,
+                             "fracs": dict(fracs)})
+        return tau_new, fracs

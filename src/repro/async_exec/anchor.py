@@ -1,0 +1,145 @@
+"""Delayed-Nesterov parameter-server anchor for the async executor.
+
+The anchor owns the flat fp32 master parameters and a
+:class:`~repro.core.outer_opt.DNState` (momentum + in-flight round
+buffer).  Uploads are applied the moment they arrive — no barrier — and
+the delayed momentum flush fires when every expected worker has
+contributed to the oldest open round.  Out-of-order arrivals (a fast
+worker uploading for round ``k+1`` while a straggler still owes round
+``k``) are legal: the gradient part is applied immediately, bookkeeping
+is kept per round index, and flushes happen strictly in round order.
+
+An optional per-upload gate transplants the spirit of EDiT's penalty
+refinements to the point-to-point setting: cross-replica softmax
+weighting needs a barrier, but an EMA z-test on upload norms (anomaly
+drop) and norm clipping are per-arrival decisions and live here.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Set
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.outer_opt import DelayedNesterov
+from repro.async_exec.worker import Upload, flat_unflattener, tree_to_flat
+
+
+@dataclass
+class UploadGate:
+    """EMA-normalized per-upload anomaly/clip gate (A-EDiT §3.2 spirit,
+    reduced to the decisions that do not need cross-replica state)."""
+    anomaly_z: float = 4.0        # drop uploads with |z| above this
+    clip_factor: float = 2.0      # clip norms above clip_factor * EMA mean
+    ema_alpha: float = 0.1
+    warmup: int = 3               # uploads per worker before gating starts
+    _mu: Dict[int, float] = field(default_factory=dict)
+    _var: Dict[int, float] = field(default_factory=dict)
+    _n: Dict[int, int] = field(default_factory=dict)
+
+    def __call__(self, wid: int, delta: jnp.ndarray):
+        """Return (possibly clipped) delta, or None when dropped."""
+        norm = float(jnp.linalg.norm(delta))
+        n = self._n.get(wid, 0)
+        mu = self._mu.get(wid, norm)
+        var = self._var.get(wid, 0.0)
+        out = delta
+        if n >= self.warmup:
+            sig = max(np.sqrt(var), 1e-12)
+            if abs(norm - mu) / sig > self.anomaly_z and norm > mu:
+                return None                      # anomalous: drop, no EMA
+            cap = self.clip_factor * mu
+            if norm > cap > 0.0:
+                out = delta * (cap / norm)
+                norm = cap
+        a = self.ema_alpha
+        self._mu[wid] = (1 - a) * mu + a * norm
+        self._var[wid] = (1 - a) * var + a * (norm - self._mu[wid]) ** 2
+        self._n[wid] = n + 1
+        return out
+
+
+class DelayedNesterovAnchor:
+    """Anchor process state: flat master params + DN outer optimizer."""
+
+    def __init__(self, params0, outer: Optional[DelayedNesterov] = None,
+                 n_expected: int = 1, gate: Optional[UploadGate] = None,
+                 m: Optional[Any] = None, round_idx: int = 0):
+        self.template = params0
+        self.unflatten = flat_unflattener(params0)
+        self.theta = tree_to_flat(params0)
+        self.outer = outer or DelayedNesterov()
+        self.m = m if m is not None else self.outer.init(self.theta)
+        self.n_expected = n_expected
+        self.gate = gate
+        self.round = round_idx
+        self._arrived: Dict[int, Set[int]] = {}
+        self._bufs: Dict[int, Any] = {}     # per OPEN round: DN buffer —
+        #   a fast worker's round-(k+1) gradient must not leak into round
+        #   k's momentum fold (bounded staleness, max_lead rounds ahead)
+        self.history: List[dict] = []       # one record per closed round
+        self._open: Dict[int, dict] = {}    # per-round telemetry in flight
+
+    # -- protocol ----------------------------------------------------------
+
+    def contribute(self, upload: Upload, weight: Optional[float] = None,
+                   at_time: float = 0.0) -> bool:
+        """Apply one arrival; returns True iff this closed a round (the
+        momentum flush ran and ``self.round`` advanced)."""
+        w = (1.0 / self.n_expected) if weight is None else float(weight)
+        delta = upload.delta
+        dropped = False
+        if self.gate is not None:
+            gated = self.gate(upload.wid, delta)
+            if gated is None:
+                dropped = True
+            else:
+                delta = gated
+        if not dropped:
+            buf = self._bufs.get(upload.round)
+            if buf is None:
+                buf = self.outer.init(self.theta)
+            self.theta, self._bufs[upload.round] = self.outer.contribute(
+                self.theta, buf, delta, w)
+        rec = self._open.setdefault(upload.round, {
+            "round": upload.round, "steps": {}, "losses": {},
+            "wire_bytes": 0.0, "dropped": 0, "t_close": 0.0})
+        rec["steps"][upload.wid] = upload.steps
+        rec["losses"][upload.wid] = upload.loss
+        rec["wire_bytes"] += upload.wire_bytes
+        rec["dropped"] += int(dropped)
+        self._arrived.setdefault(upload.round, set()).add(upload.wid)
+
+        return self._drain(at_time)
+
+    def _drain(self, at_time: float = 0.0) -> bool:
+        """Flush every round whose quorum is met, in round order."""
+        closed = False
+        while len(self._arrived.get(self.round, ())) >= self.n_expected:
+            buf = self._bufs.pop(self.round, None)
+            if buf is None:
+                buf = self.outer.init(self.theta)
+            self.theta, self.m = self.outer.flush(self.theta, self.m, buf)
+            done = self._open.pop(self.round, None)
+            if done is not None:
+                done["t_close"] = at_time
+                self.history.append(done)
+            del self._arrived[self.round]
+            self.round += 1
+            closed = True
+        return closed
+
+    def snapshot_flat(self) -> jnp.ndarray:
+        return self.theta
+
+    def snapshot(self):
+        """Master params as a tree shaped like the original template."""
+        return self.unflatten(self.theta)
+
+    def set_membership(self, n_expected: int) -> None:
+        """Elastic seam: open and future rounds expect ``n_expected``
+        uploads.  A shrink lowers the open round's quorum (the departed
+        worker will never upload, so waiting on it would deadlock)."""
+        self.n_expected = int(n_expected)
+        self._drain()

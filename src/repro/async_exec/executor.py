@@ -1,0 +1,499 @@
+"""Asynchronous A-EDiT executor: time-based rounds, no SPMD barrier.
+
+Workers run inner steps independently and upload a pseudo gradient when
+their *wall-clock* round budget (``tau_time``) is spent — a worker keeps
+starting steps while ``elapsed < tau_time`` and the last step may
+overrun, so a straggler overshoots its round by at most one of its own
+steps (paper Fig. 3(b): round time is bounded by the straggler's
+single-step lag, not its full-round lag).  The anchor applies Delayed
+Nesterov per arrival (see ``anchor.py``); a worker may run at most
+``max_lead`` rounds ahead of the slowest open round before it parks.
+
+Three interchangeable backends execute the same worker/anchor protocol:
+
+* ``events``  — single-threaded, virtual clock, event heap.  At equal
+  timestamps step completions order before uploads before pulls, so
+  with uniform speeds every round's uploads land, the momentum flushes,
+  and only then do workers pull: the trajectory reproduces synchronous
+  EDiT exactly (the deterministic-replay twin used by the tests, and
+  the executor-side mirror of ``core.async_sim.AEDiTScheduler``).
+* ``threads`` — real wall clock; one thread per worker, anchor under a
+  lock; worker speeds emulated by sleeping to ``time_scale`` seconds
+  per virtual time unit.
+* ``process`` — multiprocessing (spawn); each worker is a separate
+  process owning its params, talking to the anchor over pipes (the
+  shape the subprocess multi-device harnesses in the test-suite use).
+
+Durations come from ``WorkerSpeedModel.step_time_at`` — counter-based
+in (worker, lifetime step index), so checkpoint/resume and the replay
+twin see identical streams regardless of interleaving.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.async_sim import WorkerSpeedModel
+from repro.core.outer_opt import DelayedNesterov
+from repro.async_exec.anchor import DelayedNesterovAnchor, UploadGate
+from repro.async_exec.adaptive import AdaptiveSyncController
+from repro.async_exec.worker import AsyncWorker, make_inner_step
+
+_EPS = 1e-9
+
+
+@dataclass
+class AsyncResult:
+    """Telemetry for one ``run`` call."""
+    rounds: List[dict]                  # per closed round: steps/losses/...
+    steps_per_worker: Dict[int, int]    # lifetime totals at exit
+    wall_time: float                    # virtual units (events) / seconds
+    final_round: int
+    tau_times: List[float] = field(default_factory=list)
+
+    @property
+    def round_times(self) -> List[float]:
+        ts = [r["t_close"] for r in self.rounds]
+        return [b - a for a, b in zip([0.0] + ts[:-1], ts)] if ts else []
+
+
+class AsyncExecutor:
+    """Drives ``n = strategy.replicas`` async workers against a Delayed-
+    Nesterov anchor.  Constructed from the same (model, strategy, data,
+    inner_opt, lr_sched) tuple as the synchronous path so the two are
+    differential-testable against each other."""
+
+    def __init__(self, model, strategy, data, *, tau_time: float = 8.0,
+                 speeds: Optional[WorkerSpeedModel] = None,
+                 inner_opt=None, lr_sched=None, lr: Optional[float] = None,
+                 backend: str = "events", time_scale: float = 0.02,
+                 max_lead: int = 1, gate: Optional[UploadGate] = None,
+                 controller: Optional[AdaptiveSyncController] = None,
+                 init_params=None, init_key=None,
+                 outer: Optional[DelayedNesterov] = None,
+                 inner_opt_states: Optional[list] = None,
+                 dn_m: Optional[jnp.ndarray] = None,
+                 start_step: int = 0):
+        from repro.optim import AdamW, constant
+
+        if backend not in ("events", "threads", "process"):
+            raise ValueError(f"unknown backend {backend!r}")
+        self.model = model
+        self.strategy = strategy
+        self.data = data
+        self.backend = backend
+        self.tau_time = float(tau_time)
+        self.time_scale = float(time_scale)
+        self.max_lead = int(max_lead)
+        self.controller = controller
+        n = strategy.replicas
+        self.speeds = speeds or WorkerSpeedModel(n_workers=n)
+        assert self.speeds.n_workers == n, "speed model vs replicas mismatch"
+        self.inner_opt = inner_opt or AdamW()
+        self.lr = lr
+        self.lr_sched = lr_sched or constant(
+            lr if lr is not None else 1.5e-4)
+        self.step_fn = make_inner_step(model, self.inner_opt, self.lr_sched,
+                                       strategy.inner_clip)
+        p0 = init_params if init_params is not None else model.init(
+            init_key if init_key is not None else jax.random.PRNGKey(0))
+        self.anchor = DelayedNesterovAnchor(
+            p0,
+            outer or DelayedNesterov(strategy.outer_lr,
+                                     strategy.outer_momentum),
+            n_expected=n, gate=gate)
+        if dn_m is not None:                 # continue an outer trajectory
+            self.anchor.m = jnp.asarray(dn_m, jnp.float32)
+        comm = strategy.comm if strategy.comm.active else None
+        self.workers = [
+            AsyncWorker(w, n, self.inner_opt, data, self.step_fn, comm=comm)
+            for w in range(n)]
+        for w, wk in enumerate(self.workers):
+            wk.pull(self.anchor.snapshot_flat(), self.anchor.round,
+                    template=p0)
+            wk.local_step = int(start_step)
+            wk.round_start = 0.0
+            wk._uploaded = False
+            if inner_opt_states is not None:
+                wk.opt_state = inner_opt_states[w]
+        self._clock = 0.0                    # last event time (events)
+
+    # -- shared pieces -----------------------------------------------------
+
+    def _dur(self, w: int, idx: int) -> float:
+        return self.speeds.step_time_at(w, idx)
+
+    def _warm_step_fn(self, wk) -> None:
+        """Prime the jit cache before any wall clock starts ticking — the
+        first real step must not spend its round budget compiling.  The
+        step fn is pure, so calling and discarding has no side effects."""
+        batch = {"tokens": wk.batch_rows()}
+        jax.block_until_ready(self.step_fn(
+            wk.params, wk.opt_state, batch, jnp.int32(wk.local_step)))
+
+    def _on_close(self, rec: dict) -> None:
+        """Round closed: apply AdLoCo adaptation if configured."""
+        if self.controller is not None:
+            tau_new, fracs = self.controller.update(self.tau_time,
+                                                    rec["steps"])
+            self.tau_time = tau_new
+            for wid, f in fracs.items():
+                self.workers[wid].batch_frac = f
+
+    def run(self, rounds: int) -> AsyncResult:
+        h0 = len(self.anchor.history)
+        target = self.anchor.round + rounds
+        taus = []
+        if self.backend == "events":
+            self._run_events(target, taus)
+        elif self.backend == "threads":
+            self._run_threads(target, taus)
+        else:
+            self._run_process(target, taus)
+        recs = self.anchor.history[h0:]
+        totals = {w.wid: w.local_step for w in self.workers}
+        wall = recs[-1]["t_close"] if recs else 0.0
+        return AsyncResult(rounds=recs, steps_per_worker=totals,
+                           wall_time=wall, final_round=self.anchor.round,
+                           tau_times=taus)
+
+    # -- events backend (deterministic virtual clock) ----------------------
+
+    def _schedule_initial(self, push) -> None:
+        """(Re)enter the event loop from current worker state — used both
+        at run start and after a checkpoint resume mid-round."""
+        for w, wk in enumerate(self.workers):
+            if wk._uploaded:
+                self._maybe_pull(w, wk.clock, push)
+            elif (wk.steps_this_round > 0 and
+                  wk.clock >= wk.round_start + self.tau_time - _EPS):
+                push(wk.clock, 1, w, "upload")
+            else:
+                push(wk.clock + self._dur(w, wk.local_step), 0, w, "step")
+
+    def _maybe_pull(self, w: int, t: float, push) -> None:
+        wk = self.workers[w]
+        if wk.round + 1 > self.anchor.round + self.max_lead:
+            self._parked.add(w)              # too far ahead: wait for close
+        else:
+            push(t, 2, w, "pull")
+
+    def _run_events(self, target: int, taus: List[float]) -> None:
+        heap: list = []
+        seq = itertools.count()
+
+        def push(t, prio, w, kind):
+            heapq.heappush(heap, (t, prio, next(seq), w, kind))
+
+        self._parked: set = getattr(self, "_parked", set())
+        self._schedule_initial(push)
+        guard = 0
+        while heap and self.anchor.round < target:
+            guard += 1
+            if guard > 2_000_000:
+                raise RuntimeError("async event loop did not converge")
+            t, prio, _, w, kind = heapq.heappop(heap)
+            wk = self.workers[w]
+            self._clock = t
+            if kind == "step":
+                wk.inner_step()
+                wk.clock = t
+                if t >= wk.round_start + self.tau_time - _EPS:
+                    push(t, 1, w, "upload")
+                else:
+                    push(t + self._dur(w, wk.local_step), 0, w, "step")
+            elif kind == "upload":
+                up = wk.make_upload()
+                wk._uploaded = True
+                closed = self.anchor.contribute(up, at_time=t)
+                if closed:
+                    rec = self.anchor.history[-1]
+                    taus.append(self.tau_time)
+                    self._on_close(rec)
+                    for pw in sorted(self._parked):
+                        pwk = self.workers[pw]
+                        if pwk.round + 1 <= self.anchor.round + self.max_lead:
+                            push(t, 2, pw, "pull")
+                            self._parked.discard(pw)
+                self._maybe_pull(w, t, push)
+            else:  # pull
+                wk.pull(self.anchor.snapshot_flat(), wk.round + 1)
+                wk._uploaded = False
+                wk.round_start = t
+                wk.clock = t
+                push(t + self._dur(w, wk.local_step), 0, w, "step")
+        if self.anchor.round < target:
+            raise RuntimeError("event heap drained before target round")
+        # the loop stops at the closing upload; perform the pulls that the
+        # continuous timeline would run at the same instant (prio 2 at the
+        # close time — they only touch worker-local state, so this is
+        # exactly what an uninterrupted run executes next)
+        for w, wk in enumerate(self.workers):
+            ok = wk.round + 1 <= self.anchor.round + self.max_lead
+            if wk._uploaded and ok:
+                wk.pull(self.anchor.snapshot_flat(), wk.round + 1)
+                wk._uploaded = False
+                wk.round_start = self._clock
+                wk.clock = self._clock
+                self._parked.discard(w)
+
+    # -- threads backend (real wall clock) ---------------------------------
+
+    def _run_threads(self, target: int, taus: List[float]) -> None:
+        lock = threading.Lock()
+        ts = self.time_scale
+        self._warm_step_fn(self.workers[0])
+        t0 = time.monotonic()
+        errs: list = []
+
+        def vnow() -> float:
+            return (time.monotonic() - t0) / ts
+
+        def work(w: int) -> None:
+            wk = self.workers[w]
+            try:
+                while wk.round < target:
+                    round_t0 = time.monotonic()
+                    while True:
+                        s0 = time.monotonic()
+                        wk.inner_step()
+                        want = self._dur(w, wk.local_step - 1) * ts
+                        el = time.monotonic() - s0
+                        if want > el:
+                            time.sleep(want - el)
+                        if time.monotonic() - round_t0 >= self.tau_time * ts:
+                            break
+                    up = wk.make_upload()
+                    with lock:
+                        wk._uploaded = True
+                        closed = self.anchor.contribute(up, at_time=vnow())
+                        if closed:
+                            taus.append(self.tau_time)
+                            self._on_close(self.anchor.history[-1])
+                    while True:                 # bounded-staleness gate
+                        with lock:
+                            if wk.round + 1 <= (self.anchor.round
+                                                + self.max_lead):
+                                wk.pull(self.anchor.snapshot_flat(),
+                                        wk.round + 1)
+                                wk._uploaded = False
+                                wk.round_start = vnow()
+                                break
+                        time.sleep(0.001)
+            except Exception as e:              # surface in the main thread
+                errs.append((w, e))
+
+        threads = [threading.Thread(target=work, args=(w,), daemon=True)
+                   for w in range(len(self.workers))]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=600)
+        if errs:
+            raise RuntimeError(f"async worker(s) failed: {errs}") from errs[0][1]
+        if self.anchor.round < target:
+            raise RuntimeError("threads backend stopped early "
+                               f"({self.anchor.round}/{target} rounds)")
+
+    # -- process backend (multiprocessing spawn) ---------------------------
+
+    def _run_process(self, target: int, taus: List[float]) -> None:
+        import multiprocessing as mp
+        from multiprocessing.connection import wait as conn_wait
+
+        rounds = target - self.anchor.round
+        ctx = mp.get_context("spawn")
+        spec = {
+            "cfg": self.model.cfg,
+            "strategy": self.strategy,
+            "data": self.data,
+            "inner_opt": self.inner_opt,
+            "lr": self.lr if self.lr is not None else 1.5e-4,
+            "tau_time": self.tau_time,
+            "time_scale": self.time_scale,
+            "rounds": rounds,
+            "n_workers": len(self.workers),
+            "speeds": self.speeds.spec(),
+        }
+        conns, procs = [], []
+        for w, wk in enumerate(self.workers):
+            parent, child = ctx.Pipe()
+            p = ctx.Process(target=_worker_process_main,
+                            args=(dict(spec, wid=w,
+                                       local_step=wk.local_step), child))
+            p.start()
+            child.close()
+            parent.send((np.asarray(self.anchor.snapshot_flat()),
+                         self.anchor.round))
+            conns.append(parent)
+            procs.append(p)
+        t0 = time.monotonic()
+        parked: list = []
+        done = 0
+        try:
+            while done < len(procs):
+                for conn in conn_wait(conns, timeout=600.0):
+                    msg = conn.recv()
+                    if msg.get("type") == "done":
+                        wk = self.workers[msg["wid"]]
+                        wk.local_step = msg["local_step"]
+                        wk.round = msg["round"]
+                        done += 1
+                        continue
+                    from repro.async_exec.worker import Upload
+                    up = Upload(msg["wid"], msg["round"],
+                                jnp.asarray(msg["delta"]), msg["steps"],
+                                msg["tokens"], msg["wire_bytes"],
+                                msg["loss"])
+                    vt = (time.monotonic() - t0) / self.time_scale
+                    closed = self.anchor.contribute(up, at_time=vt)
+                    if closed:
+                        taus.append(self.tau_time)
+                        self._on_close(self.anchor.history[-1])
+                    entry = (msg["round"] + 1, conns[msg["wid"]])
+                    if entry[0] > self.anchor.round + self.max_lead:
+                        parked.append(entry)
+                    else:
+                        entry[1].send((np.asarray(self.anchor.theta),
+                                       self.anchor.round))
+                    if closed and parked:
+                        still = []
+                        for rnd, c in parked:
+                            if rnd <= self.anchor.round + self.max_lead:
+                                c.send((np.asarray(self.anchor.theta),
+                                        self.anchor.round))
+                            else:
+                                still.append((rnd, c))
+                        parked = still
+        finally:
+            for p in procs:
+                p.join(timeout=60)
+                if p.is_alive():
+                    p.terminate()
+
+    # -- checkpoint --------------------------------------------------------
+
+    def save(self, directory) -> None:
+        """Persist anchor + in-flight round state + every worker."""
+        from repro.checkpoint import store
+        tree = {
+            "anchor_theta": self.anchor.theta,
+            "dn_m": self.anchor.m,
+            "dn_bufs": {str(r): b for r, b in self.anchor._bufs.items()},
+            "workers": [{
+                "params": wk.params,
+                "opt": wk.opt_state,
+                "anchor_flat": wk._anchor_flat,
+                "ef": (wk.ef if wk.ef is not None
+                       else jnp.zeros((1, 1, 0), jnp.float32)),
+            } for wk in self.workers],
+        }
+        meta = {
+            "format": "async_v1",
+            "tau_time": self.tau_time,
+            "round": self.anchor.round,
+            "arrived": {str(r): sorted(v)
+                        for r, v in self.anchor._arrived.items()},
+            "workers": [{
+                "local_step": wk.local_step, "round": wk.round,
+                "steps_this_round": wk.steps_this_round,
+                "tokens_this_round": wk.tokens_this_round,
+                "loss_sum": wk._loss_sum, "clock": wk.clock,
+                "round_start": getattr(wk, "round_start", 0.0),
+                "uploaded": bool(getattr(wk, "_uploaded", False)),
+                "batch_frac": wk.batch_frac,
+            } for wk in self.workers],
+        }
+        store.save(directory, tree, metadata=meta)
+
+    def load(self, directory) -> None:
+        """Restore state saved by :meth:`save` (telemetry of the partially
+        open round is not carried — quorum bookkeeping is)."""
+        from repro.checkpoint import store
+        tree = store.restore(directory)
+        meta = store.load_metadata(directory)
+        assert meta.get("format") == "async_v1", "not an async checkpoint"
+        self.tau_time = float(meta["tau_time"])
+        self.anchor.theta = jnp.asarray(tree["anchor_theta"])
+        self.anchor.m = jnp.asarray(tree["dn_m"])
+        self.anchor._bufs = {int(r): jnp.asarray(b)
+                             for r, b in tree["dn_bufs"].items()}
+        self.anchor.round = int(meta["round"])
+        self.anchor._arrived = {int(r): set(v)
+                                for r, v in meta["arrived"].items()}
+        self.anchor._open = {}
+        for wk, wt, wm in zip(self.workers, tree["workers"],
+                              meta["workers"]):
+            wk.params = wt["params"]
+            wk.opt_state = wt["opt"]
+            wk._anchor_flat = jnp.asarray(wt["anchor_flat"])
+            ef = wt["ef"]
+            wk.ef = ef if (hasattr(ef, "size") and ef.size) else None
+            wk.local_step = int(wm["local_step"])
+            wk.round = int(wm["round"])
+            wk.steps_this_round = int(wm["steps_this_round"])
+            wk.tokens_this_round = int(wm["tokens_this_round"])
+            wk._loss_sum = float(wm["loss_sum"])
+            wk.clock = float(wm["clock"])
+            wk.round_start = float(wm["round_start"])
+            wk._uploaded = bool(wm["uploaded"])
+            wk.batch_frac = float(wm["batch_frac"])
+        self._parked = set()
+
+
+def _worker_process_main(spec: dict, conn) -> None:
+    """Entry point for one worker process (``process`` backend)."""
+    import os
+    os.environ.setdefault("JAX_PLATFORMS", "cpu")
+    import jax  # noqa: F811 — re-import inside the spawned interpreter
+    import jax.numpy as jnp  # noqa: F811
+    from repro.models import build_model
+    from repro.optim import constant
+    from repro.async_exec.worker import AsyncWorker, make_inner_step
+
+    wid = spec["wid"]
+    strategy = spec["strategy"]
+    model = build_model(spec["cfg"], compute_dtype=jnp.float32, remat=False)
+    step_fn = make_inner_step(model, spec["inner_opt"],
+                              constant(spec["lr"]), strategy.inner_clip)
+    speeds = WorkerSpeedModel(**spec["speeds"])
+    comm = strategy.comm if strategy.comm.active else None
+    wk = AsyncWorker(wid, spec["n_workers"], spec["inner_opt"],
+                     spec["data"], step_fn, comm=comm)
+    ts = spec["time_scale"]
+    anchor0, rnd = conn.recv()
+    wk.pull(jnp.asarray(anchor0), rnd,
+            template=model.init(jax.random.PRNGKey(0)))
+    wk.local_step = int(spec["local_step"])
+    # prime the jit cache before the round clock starts
+    jax.block_until_ready(step_fn(wk.params, wk.opt_state,
+                                  {"tokens": wk.batch_rows()},
+                                  jnp.int32(wk.local_step)))
+    for _ in range(spec["rounds"]):
+        round_t0 = time.monotonic()
+        while True:
+            s0 = time.monotonic()
+            wk.inner_step()
+            want = speeds.step_time_at(wid, wk.local_step - 1) * ts
+            el = time.monotonic() - s0
+            if want > el:
+                time.sleep(want - el)
+            if time.monotonic() - round_t0 >= spec["tau_time"] * ts:
+                break
+        up = wk.make_upload()
+        conn.send({"type": "upload", "wid": wid, "round": wk.round,
+                   "delta": np.asarray(up.delta), "steps": up.steps,
+                   "tokens": up.tokens, "wire_bytes": up.wire_bytes,
+                   "loss": up.loss})
+        new_anchor, new_round = conn.recv()   # parent gates staleness
+        wk.pull(jnp.asarray(new_anchor), wk.round + 1)
+    conn.send({"type": "done", "wid": wid, "local_step": wk.local_step,
+               "round": wk.round})

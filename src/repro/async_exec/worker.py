@@ -1,0 +1,168 @@
+"""Async A-EDiT worker: one replica stepping against its own param copy.
+
+Each worker owns a full (replica-free) parameter tree, its AdamW moments
+and — when wire compression is on — its point-to-point error-feedback
+residual.  It consumes its own shard of the global batch at its own
+local step index (identical to the row the SPMD path would vmap for it),
+and at a round boundary produces an :class:`Upload`: the pseudo gradient
+Δ = θ_local − θ_anchor flattened to one fp32 vector, optionally pushed
+through ``repro.comm``'s quantizer as a single-replica (P=1) point-to-
+point message — the residual stays local, exactly the error-feedback
+contract of the collective path (DESIGN.md §14).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.comm import CommConfig
+from repro.comm.reduce import compressed_combine
+
+
+def tree_to_flat(tree) -> jnp.ndarray:
+    """Concatenate every leaf (as fp32) into one (N,) vector."""
+    return jnp.concatenate(
+        [l.astype(jnp.float32).ravel() for l in jax.tree.leaves(tree)])
+
+
+def flat_unflattener(template) -> Callable[[jnp.ndarray], Any]:
+    """Inverse of :func:`tree_to_flat` for trees shaped like ``template``
+    (leaf dtypes are restored, so bf16 masters round-trip as bf16)."""
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    specs = [(l.shape, l.dtype, int(np.prod(l.shape, dtype=np.int64)))
+             for l in leaves]
+
+    def unflatten(flat):
+        out, off = [], 0
+        for shape, dt, n in specs:
+            out.append(flat[off:off + n].reshape(shape).astype(dt))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return unflatten
+
+
+def make_inner_step(model, inner_opt, lr_sched, inner_clip: float = 1.0):
+    """Jitted single-replica inner step matching the SPMD per-replica math
+    of ``core.edit.make_train_step`` (global-norm clip, then the inner
+    optimizer) — the executor shares one compiled instance across workers.
+    """
+    grad_fn = jax.value_and_grad(model.loss, has_aux=True)
+
+    def step(params, opt_state, batch, step_idx):
+        (loss, _), grads = grad_fn(params, batch)
+        if inner_clip:
+            ss = sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                     for l in jax.tree.leaves(grads))
+            scale = jnp.minimum(inner_clip / (jnp.sqrt(ss) + 1e-8), 1.0)
+            grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        lr = lr_sched(step_idx)
+        new_p, new_opt = inner_opt.update(grads, opt_state, params, lr)
+        return new_p, new_opt, loss
+
+    return jax.jit(step)
+
+
+@dataclass
+class Upload:
+    """One worker→anchor message: the (decoded) wire pseudo gradient plus
+    the round accounting the anchor's telemetry records."""
+    wid: int
+    round: int
+    delta: jnp.ndarray        # (N,) fp32 — post-compression wire content
+    steps: int
+    tokens: int
+    wire_bytes: float
+    loss: float               # mean inner loss over the round
+
+
+class AsyncWorker:
+    """State + round protocol for one asynchronous replica."""
+
+    def __init__(self, wid: int, n_workers: int, inner_opt, data,
+                 step_fn, comm: Optional[CommConfig] = None,
+                 batch_frac: float = 1.0):
+        self.wid = wid
+        self.n_workers = n_workers
+        self.data = data
+        self.step_fn = step_fn
+        self.comm = comm if (comm is not None and comm.active) else None
+        self.batch_frac = batch_frac
+        self.params = None
+        self.opt_state = None            # built lazily at the first pull
+        self._inner_opt = inner_opt
+        self._unflatten = None
+        self._anchor_flat = None
+        self.ef: Optional[jnp.ndarray] = None
+        self.local_step = 0           # lifetime inner-step index (data/LR)
+        self.round = 0
+        self.steps_this_round = 0
+        self.tokens_this_round = 0
+        self._loss_sum = 0.0
+        self.clock = 0.0              # virtual wall time (events backend)
+        self.round_start = 0.0        # wall time of the last pull
+        self._uploaded = False        # between make_upload and next pull
+
+    # -- round protocol ----------------------------------------------------
+
+    def pull(self, anchor_flat: jnp.ndarray, round_idx: int,
+             template=None) -> None:
+        """Adopt the anchor as this round's starting params.  ``template``
+        is required on the first pull to define the tree layout."""
+        if self._unflatten is None:
+            assert template is not None, "first pull needs a param template"
+            self._unflatten = flat_unflattener(template)
+        self._anchor_flat = jnp.asarray(anchor_flat, jnp.float32)
+        self.params = self._unflatten(self._anchor_flat)
+        if self.opt_state is None:
+            self.opt_state = self._inner_opt.init(self.params)
+        if self.ef is None and self.comm is not None:
+            self.ef = jnp.zeros_like(self._anchor_flat)[None, None, :]
+        self.round = round_idx
+        self.steps_this_round = 0
+        self.tokens_this_round = 0
+        self._loss_sum = 0.0
+
+    def batch_rows(self) -> jnp.ndarray:
+        """This worker's shard of the global batch at its local step index
+        — the same rows the SPMD reshape hands replica ``wid``."""
+        full = self.data.batch(self.local_step)
+        b = full.shape[0] // self.n_workers
+        rows = full[self.wid * b:(self.wid + 1) * b]
+        k = max(1, int(round(b * self.batch_frac)))
+        return jnp.asarray(rows[:k])
+
+    def inner_step(self) -> float:
+        rows = self.batch_rows()
+        self.params, self.opt_state, loss = self.step_fn(
+            self.params, self.opt_state, {"tokens": rows},
+            jnp.int32(self.local_step))
+        self.local_step += 1
+        self.steps_this_round += 1
+        self.tokens_this_round += int(rows.shape[0]) * int(rows.shape[1])
+        self._loss_sum += float(loss)
+        return float(loss)
+
+    def make_upload(self) -> Upload:
+        """Close the round locally: pseudo gradient vs the pulled anchor,
+        compressed point-to-point when ``comm`` is active (the residual
+        stays in ``self.ef``)."""
+        delta = tree_to_flat(self.params) - self._anchor_flat
+        n = delta.shape[0]
+        wire = float(n * 4)
+        if self.comm is not None:
+            seed = jnp.uint32(
+                (self.round * 0x9E3779B1 + self.wid * 0x85EBCA77 + 1)
+                & 0xFFFFFFFF)
+            dec, self.ef, wire = compressed_combine(
+                delta[None, None, :], jnp.ones((1, 1), jnp.float32),
+                self.ef, self.comm, seed, impl="ref")
+            delta = dec[0]
+        steps = self.steps_this_round
+        loss = self._loss_sum / max(1, steps)
+        return Upload(self.wid, self.round, delta, steps,
+                      self.tokens_this_round, wire, loss)

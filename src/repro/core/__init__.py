@@ -2,7 +2,7 @@ from repro.comm import CommConfig
 from repro.core.edit import (Strategy, bootstrap_replica, init_train_state,
                              make_sync_fn, make_train_step,
                              migrate_train_state)
-from repro.core.outer_opt import Nesterov
+from repro.core.outer_opt import DelayedNesterov, Nesterov
 from repro.core.penalty import PenaltyConfig
 from repro.core.stream import SyncSchedule, sync_group
 from repro.core.async_sim import AEDiTScheduler, WorkerSpeedModel

@@ -50,6 +50,30 @@ class WorkerSpeedModel:
             t *= self._rng.lognormal(0.0, self.jitter, self.n_workers)
         return t
 
+    def step_time_at(self, w: int, idx: int) -> float:
+        """Counter-based duration of worker ``w``'s lifetime step ``idx`` —
+        the async executor's sampler.  Deterministic in (seed, w, idx), so
+        checkpoint/resume and the deterministic-replay twin reproduce the
+        same stream regardless of event interleaving.  ``random_lag`` is
+        modeled per-worker with hit probability 1/n (the sequential
+        :meth:`step_times` draw picks one worker per *global* step, which
+        has the same per-worker marginal)."""
+        t = self.base_time + self.consistent_lag.get(w, 0.0)
+        if self.random_lag or self.jitter:
+            rng = np.random.default_rng((self.seed, 7919, w, idx))
+            if self.random_lag and rng.random() < 1.0 / self.n_workers:
+                t += self.random_lag
+            if self.jitter:
+                t *= rng.lognormal(0.0, self.jitter)
+        return float(t)
+
+    def spec(self) -> dict:
+        """Constructor kwargs — rebuilds this model in a worker process."""
+        return dict(n_workers=self.n_workers, base_time=self.base_time,
+                    consistent_lag=dict(self.consistent_lag),
+                    random_lag=self.random_lag, jitter=self.jitter,
+                    seed=self.seed)
+
     def advance(self) -> np.ndarray:
         """One global step: returns the per-worker completion clock."""
         self._clock += self.step_times()
@@ -89,6 +113,7 @@ class AEDiTScheduler:
         self._tick = 0.0
         self._progress = np.zeros(self.speeds.n_workers)
         self._pending_membership: Optional[int] = None
+        self.last_do_sync = False    # most recent hint (see active_fn)
 
     def next_step(self) -> Tuple[np.ndarray, bool]:
         n = self.speeds.n_workers
@@ -106,9 +131,20 @@ class AEDiTScheduler:
         return active, do_sync
 
     def active_fn(self):
-        """Adapter for Trainer(active_fn=...)."""
+        """Adapter for Trainer(active_fn=...).
+
+        The ``do_sync`` hint from :meth:`next_step` is recorded on
+        ``self.last_do_sync`` and — when the caller passes the hint
+        through (``TrainSession`` does, via ``make_train_step``'s
+        ``sync_hint``) — drives the sync instead of the step counter.
+        Without that plumbing the Trainer would sync on
+        ``step % sync_interval`` while this scheduler believes sync
+        fires at ``tau_time``; the two silently diverge whenever
+        ``tau_time != H * base_time``.
+        """
         def fn(step: int) -> np.ndarray:
-            active, _ = self.next_step()
+            active, do_sync = self.next_step()
+            self.last_do_sync = do_sync
             return active
         return fn
 

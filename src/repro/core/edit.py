@@ -312,10 +312,18 @@ def _cast_for_compute(params, dtype):
 def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
                     cast_params_dtype=None, grad_specs=None,
                     streamed: bool = True) -> Callable:
-    """Returns train_step(state, batch, active=None) -> (state, metrics).
+    """Returns train_step(state, batch, active=None, sync_hint=None)
+    -> (state, metrics).
 
     ``batch`` leaves have a leading global-batch dim divisible by R.
     ``active``: (R,) bool — A-EDiT per-replica step mask (None = all on).
+    ``sync_hint``: scalar bool — when given, it REPLACES the step-counter
+    cadence as the boundary decision (warmup gating still applies).  This
+    is how ``AEDiTScheduler``'s time-based ``do_sync`` reaches the graph:
+    without it the loop would sync on ``step % sync_interval`` while the
+    scheduler believes sync fires at ``tau_time``.
+    ``strategy.sync_interval == 0`` means sync at EVERY post-warmup step
+    (a pure-DDP segment), not division by zero.
     ``cast_params_dtype``: e.g. jnp.bfloat16 — pre-cast master weights so
     FSDP all-gathers move half the bytes; the block cast rides the
     per-segment param-provider hook, so each segment's cast (and the
@@ -347,7 +355,7 @@ def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
         _loss = model.loss
     grad_fn = jax.value_and_grad(_loss, has_aux=True)
 
-    def train_step(state, batch, active=None):
+    def train_step(state, batch, active=None, sync_hint=None):
         step = state["step"]
         batch_r = jax.tree.map(
             lambda a: a.reshape((R, a.shape[0] // R) + a.shape[1:]), batch)
@@ -357,9 +365,12 @@ def make_train_step(model, strategy: Strategy, inner_opt, lr_sched,
         sync_info["synced"] = jnp.zeros(())
         if strategy.uses_outer:
             past_warm = step > strategy.warmup_steps
-            at_boundary = jnp.equal(
-                jnp.mod(step - strategy.warmup_steps,
-                        strategy.sync_interval), 0)
+            if sync_hint is not None:
+                at_boundary = jnp.asarray(sync_hint, bool)
+            else:
+                tau = max(1, strategy.sync_interval)   # 0 = every step
+                at_boundary = jnp.equal(
+                    jnp.mod(step - strategy.warmup_steps, tau), 0)
             do_sync = jnp.logical_and(past_warm, at_boundary)
             at_warm_end = jnp.equal(step, strategy.warmup_steps)
             state, info = schedule.apply(state, do_sync, at_warm_end,

@@ -39,3 +39,76 @@ class Nesterov:
         m_new = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
         theta_new = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
         return theta_new, m_new
+
+
+@dataclass(frozen=True)
+class DelayedNesterov:
+    """Per-arrival outer optimizer for the asynchronous anchor (Delayed
+    Nesterov, after "Asynchronous Local-SGD Training for Language
+    Modeling").
+
+    A synchronous Nesterov outer step needs every replica's pseudo
+    gradient at once; applying full Nesterov per *arrival* would replay
+    the (stale) momentum once per worker.  DN splits the update:
+
+    * :meth:`contribute` — on each pseudo-gradient arrival, apply only
+      the gradient part ``theta -= lr * w * g`` immediately and add
+      ``w * g`` to that ROUND's buffer.  Data is incorporated the moment
+      it exists; momentum is NOT applied.
+    * :meth:`flush` — when the round's membership has fully contributed,
+      fold that round's buffer into the momentum and apply the delayed
+      lookahead: ``m' = mu * m + buf; theta -= lr * mu * m'``.
+
+    Buffers are PER ROUND (the caller holds one per open round): a fast
+    worker running a bounded-staleness round ahead must not leak its
+    round-(k+1) gradient into round k's momentum fold.  Over one complete
+    round the composition telescopes to exactly the synchronous
+    :class:`Nesterov` update with ``g = sum_i w_i g_i`` (up to fp
+    reassociation), which is what pins the async executor to the
+    synchronous EDiT trajectory under uniform worker speeds.
+    """
+    lr: float = 0.8
+    momentum: float = 0.85
+
+    def init(self, anchor):
+        """A zero buffer/momentum shaped like ``anchor`` (fp32)."""
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                            anchor)
+
+    def contribute(self, anchor, buf, delta_hat,
+                   weight) -> Tuple[Any, Any]:
+        """One arrival: ``delta_hat`` is the worker's pseudo gradient
+        (descent direction, no replica dim), ``weight`` its averaging
+        weight (1/R for plain-mean rounds), ``buf`` the arrival round's
+        buffer.  Returns ``(new_anchor, new_buf)``."""
+        nu = self.lr
+        w = jnp.asarray(weight, jnp.float32)
+
+        def upd(theta, b, dh):
+            g = -w * dh.astype(jnp.float32)        # weighted outer gradient
+            theta_new = theta.astype(jnp.float32) - nu * g
+            return b + g, theta_new.astype(theta.dtype)
+
+        out = jax.tree.map(upd, anchor, buf, delta_hat)
+        is_t = lambda x: isinstance(x, tuple)
+        new_buf = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        theta = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        return theta, new_buf
+
+    def flush(self, anchor, m, buf) -> Tuple[Any, Any]:
+        """Round boundary: fold ``buf`` into the momentum and apply the
+        delayed lookahead.  Returns ``(new_anchor, new_m)``; the round's
+        buffer is dead after this.  With ``momentum == 0`` the params are
+        untouched."""
+        mu, nu = self.momentum, self.lr
+
+        def upd(theta, m_, b):
+            m_new = mu * m_ + b
+            theta_new = theta.astype(jnp.float32) - nu * mu * m_new
+            return m_new, theta_new.astype(theta.dtype)
+
+        out = jax.tree.map(upd, anchor, m, buf)
+        is_t = lambda x: isinstance(x, tuple)
+        new_m = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+        theta = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+        return theta, new_m

@@ -127,8 +127,9 @@ class TrainSession:
         point where membership changes are lossless."""
         s = self.strategy
         step = int(self.state["step"])
+        tau = max(1, s.sync_interval)          # 0 = sync every step
         return bool(s.uses_outer and step > s.warmup_steps
-                    and (step - s.warmup_steps) % s.sync_interval == 0)
+                    and (step - s.warmup_steps) % tau == 0)
 
     def advance(self, replicas: Optional[int] = None,
                 sync_interval: Optional[int] = None,
@@ -158,7 +159,10 @@ class TrainSession:
         self._val_data = self._make_val_data()
         self.strategy = dataclasses.replace(
             old, replicas=new_r,
-            sync_interval=sync_interval or old.sync_interval,
+            # `is not None`, not truthiness: an explicit sync_interval=0
+            # (sync-every-boundary / pure-DDP segment) must stick
+            sync_interval=(sync_interval if sync_interval is not None
+                           else old.sync_interval),
             warmup_steps=old.warmup_steps if in_warmup else step)
         self.segments.append({
             "step": step, "replicas": new_r,
@@ -173,14 +177,27 @@ class TrainSession:
         steps = steps or tcfg.total_steps
         t0 = time.time()
         for _ in range(steps):
+            active = hint = None
             if self.scheduler is not None:
-                n = self.scheduler.poll_membership(self.at_boundary())
+                # time-based cadence: the scheduler's do_sync hint drives
+                # BOTH the in-graph sync (via sync_hint) and the membership
+                # boundary — not the step counter, which may disagree
+                # whenever tau_time != H * base_time (DESIGN.md §16)
+                mask, do_sync = self.scheduler.next_step()
+                hint = bool(do_sync)     # warmup gating stays in-graph
+                n = self.scheduler.poll_membership(hint)
                 if n is not None and n != self.strategy.replicas:
                     self.advance(replicas=n)
+                    mask = self._reseat_mask(mask, n)
+                active = jnp.asarray(mask)
+            elif self.active_fn is not None:
+                active = jnp.asarray(self.active_fn(int(self.state["step"])))
             step = int(self.state["step"])
             batch = {"tokens": jnp.asarray(self.data.batch(step))}
-            if self.active_fn is not None:
-                active = jnp.asarray(self.active_fn(step))
+            if hint is not None:
+                self.state, m = self._step_fn(self.state, batch, active,
+                                              jnp.asarray(hint))
+            elif active is not None:
                 self.state, m = self._step_fn(self.state, batch, active)
             else:
                 self.state, m = self._step_fn(self.state, batch)
@@ -215,14 +232,120 @@ class TrainSession:
             self.run_steps(seg.steps)
         return self.history
 
+    @staticmethod
+    def _reseat_mask(mask: np.ndarray, n: int) -> np.ndarray:
+        """Resize a pre-seam activity mask to the post-seam replica count:
+        departures truncate, joiners sit out the seam step (they cannot
+        have completed a full inner step yet)."""
+        out = np.zeros(n, dtype=bool)
+        keep = min(len(mask), n)
+        out[:keep] = mask[:keep]
+        return out
+
     def _differs(self, seg: Segment) -> bool:
-        return ((seg.replicas or self.strategy.replicas)
+        def pick(v, cur):
+            return v if v is not None else cur     # 0 is a real value
+        return (pick(seg.replicas, self.strategy.replicas)
                 != self.strategy.replicas
-                or (seg.sync_interval or self.strategy.sync_interval)
+                or pick(seg.sync_interval, self.strategy.sync_interval)
                 != self.strategy.sync_interval
-                or (seg.global_batch or self.data.global_batch)
+                or pick(seg.global_batch, self.data.global_batch)
                 != self.data.global_batch
                 or seg.lr_scale not in (None, 1.0))
+
+    # -- asynchronous execution (A-EDiT for real) ---------------------------
+
+    def run_async(self, rounds: int, tau_time: float, *, speeds=None,
+                  backend: str = "events", time_scale: float = 0.02,
+                  max_lead: int = 1, controller=None, gate=None,
+                  lr: Optional[float] = None):
+        """Run ``rounds`` time-based A-EDiT rounds through the asynchronous
+        executor (``repro.async_exec``), seeded from this session's anchor,
+        outer momentum and per-replica inner-optimizer rows, then fold the
+        result back into the SPMD train state so synchronous segments can
+        continue.  ``controller`` (an ``AdaptiveSyncController``) enables
+        AdLoCo adaptive tau/batch from measured per-round throughput.
+        Returns the executor's :class:`~repro.async_exec.AsyncResult`.
+
+        With the ``process`` backend the inner-optimizer moments live in
+        the worker processes and are not folded back (anchor, outer
+        momentum and params are)."""
+        from repro.async_exec import AsyncExecutor
+        from repro.async_exec.worker import flat_unflattener, tree_to_flat
+        from repro.core import penalty as PEN
+        from repro.core.outer_opt import DelayedNesterov
+
+        s = self.strategy
+        assert s.uses_outer, "async execution needs an outer-loop strategy"
+        cfg = self.model.cfg
+        R = s.replicas
+        step0 = int(self.state["step"])
+        p_template = jax.tree.map(lambda a: a[0], self.state["params"])
+        anchor_tree = (PEN.merge_groups(self.state["anchor"], p_template)
+                       if "anchor" in self.state else p_template)
+        dn_m = None
+        if "outer_m" in self.state:
+            dn_m = tree_to_flat(
+                PEN.merge_groups(self.state["outer_m"], p_template))
+
+        def _row(tree, w):
+            return jax.tree.map(
+                lambda a: a[w] if (hasattr(a, "ndim") and a.ndim >= 1
+                                   and a.shape[:1] == (R,)) else a, tree)
+
+        opt_rows = [_row(self.state["inner_opt"], w) for w in range(R)]
+        base, scale = self._base_lr_sched, self.lr_scale
+        sched = base if scale == 1.0 else (lambda st: base(st) * scale)
+        ex = AsyncExecutor(
+            self.model, s, self.data, tau_time=tau_time, speeds=speeds,
+            inner_opt=self.inner_opt, lr_sched=sched, lr=lr,
+            backend=backend, time_scale=time_scale, max_lead=max_lead,
+            gate=gate, controller=controller, init_params=anchor_tree,
+            outer=DelayedNesterov(s.outer_lr, s.outer_momentum),
+            inner_opt_states=opt_rows, dn_m=dn_m, start_step=step0)
+        res = ex.run(rounds)
+
+        # ---- fold the async outcome back into the SPMD state -------------
+        new_anchor = ex.anchor.snapshot()
+        self.state["params"] = jax.tree.map(
+            lambda a: jnp.repeat(a[None], R, axis=0), new_anchor)
+        if "anchor" in self.state:
+            self.state["anchor"] = PEN.split_by_group(new_anchor, cfg)
+        if "outer_m" in self.state:
+            f32_t = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, jnp.float32),
+                p_template)
+            m_tree = flat_unflattener(f32_t)(ex.anchor.m)
+            self.state["outer_m"] = PEN.split_by_group(m_tree, cfg)
+        if backend != "process":
+            stacked = jax.tree.map(
+                lambda ref, *rows: (jnp.stack(rows)
+                                    if (hasattr(ref, "ndim") and
+                                        ref.ndim >= 1 and
+                                        ref.shape[:1] == (R,)) else rows[0]),
+                self.state["inner_opt"],
+                *[wk.opt_state for wk in ex.workers])
+            self.state["inner_opt"] = stacked
+        step1 = step0 + int(round(float(np.mean(
+            [wk.local_step for wk in ex.workers])) - step0))
+        self.state["step"] = jnp.asarray(step1, self.state["step"].dtype)
+        for rec in res.rounds:
+            losses = list(rec["losses"].values())
+            self.history.append({
+                "step": step1, "async_round": rec["round"],
+                "loss": float(np.mean(losses)) if losses else float("nan"),
+                "round_steps": float(np.mean(list(rec["steps"].values()))),
+                "wire_bytes": float(rec["wire_bytes"]),
+                "replicas": R})
+        self.segments.append({
+            "step": step1, "replicas": R, "async_rounds": rounds,
+            "tau_time": ex.tau_time, "backend": backend,
+            "global_batch": self.data.global_batch,
+            "lr_scale": self.lr_scale})
+        if step1 > s.warmup_steps:
+            # sync cadence restarts at the seam, as in advance()
+            self.strategy = dataclasses.replace(s, warmup_steps=step1)
+        return res
 
     # -- eval / checkpoint --------------------------------------------------
 

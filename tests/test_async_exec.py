@@ -1,0 +1,405 @@
+"""Async A-EDiT executor: differential vs the synchronous path, straggler
+time-sync behavior, Delayed-Nesterov properties, compression, checkpoint
+resume, the threads/process backends, and the AdLoCo controller.
+
+The flagship differential (ISSUE 7): with uniform worker speeds and
+``tau_time`` fitting exactly H steps, the async executor's outer
+trajectory must match the synchronous EDiT path round for round; with an
+injected straggler it syncs on wall time, faster workers log more inner
+steps per round (paper Fig. 3(b)) and round time is bounded by the
+straggler's single-step lag.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.comm import CommConfig
+from repro.configs import get_config
+from repro.core import (DelayedNesterov, Nesterov, PenaltyConfig,
+                        Strategy, init_train_state, make_train_step)
+from repro.core import penalty as PEN
+from repro.core.async_sim import WorkerSpeedModel, effective_steps_per_round
+from repro.data.pipeline import SyntheticLM
+from repro.optim import AdamW, constant
+from repro.async_exec import (AdaptiveSyncController, AsyncExecutor,
+                              UploadGate)
+from repro.async_exec.worker import tree_to_flat
+
+R, H = 4, 3
+PEN_OFF = PenaltyConfig(enable_anomaly=False, enable_weighting=False,
+                        enable_clip=False)
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("llama_350m").reduced(), name="tiny_async", d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=128)
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.models import build_model
+    return build_model(_tiny_cfg(), compute_dtype=jnp.float32, remat=False)
+
+
+@pytest.fixture(scope="module")
+def data(model):
+    return SyntheticLM(model.cfg.vocab_size, 16, 8, seed=3, replicas=R)
+
+
+def _strategy(name="edit", **kw):
+    kw.setdefault("sync_interval", H)
+    return Strategy(name=name, replicas=R, warmup_steps=0, penalty=PEN_OFF,
+                    **kw)
+
+
+def _executor(model, data, strat, tau_time, speeds=None, **kw):
+    kw.setdefault("inner_opt", AdamW())
+    kw.setdefault("lr_sched", constant(1e-3))
+    kw.setdefault("init_key", jax.random.PRNGKey(11))
+    return AsyncExecutor(model, strat, data, tau_time=tau_time,
+                         speeds=speeds or WorkerSpeedModel(n_workers=R),
+                         **kw)
+
+
+def _sync_anchor_trajectory(model, data, strat, rounds):
+    """Anchors after each boundary sync of the synchronous SPMD path."""
+    opt = AdamW()
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(11))
+    step_fn = jax.jit(make_train_step(model, strat, opt, constant(1e-3)))
+    p_t = jax.tree.map(lambda a: a[0], state["params"])
+    anchors = []
+    for s in range(H * rounds + 1):
+        state, m = step_fn(state, {"tokens": jnp.asarray(data.batch(s))})
+        if float(m["synced"]) > 0:
+            anchors.append(np.asarray(tree_to_flat(
+                PEN.merge_groups(state["anchor"], p_t))))
+    assert len(anchors) == rounds
+    return anchors
+
+
+# ---------------------------------------------------------------------------
+# Flagship differential: uniform speeds == synchronous EDiT
+# ---------------------------------------------------------------------------
+
+def test_uniform_speeds_match_synchronous_edit(model, data):
+    """tau_time = H * base_time => every worker fits exactly H steps and
+    the async outer trajectory equals synchronous EDiT round for round."""
+    strat = _strategy("edit")
+    sync_anchors = _sync_anchor_trajectory(model, data, strat, rounds=3)
+    ex = _executor(model, data, strat, tau_time=float(H))
+    for r, ref in enumerate(sync_anchors):
+        res = ex.run(1)
+        rec = res.rounds[0]
+        assert rec["steps"] == {w: H for w in range(R)}
+        np.testing.assert_allclose(
+            np.asarray(ex.anchor.snapshot_flat()), ref,
+            atol=1e-5, rtol=1e-4, err_msg=f"round {r}")
+
+
+def test_uniform_worker_params_match_broadcast_anchor(model, data):
+    """After a uniform round every worker pulls the flushed anchor."""
+    ex = _executor(model, data, _strategy("a_edit"), tau_time=float(H))
+    ex.run(2)
+    ref = np.asarray(ex.anchor.snapshot_flat())
+    for wk in ex.workers:
+        np.testing.assert_allclose(np.asarray(wk._anchor_flat), ref,
+                                   atol=0, rtol=0)
+
+
+# ---------------------------------------------------------------------------
+# Straggler: time-based sync, not step-based
+# ---------------------------------------------------------------------------
+
+def test_straggler_syncs_on_time_not_steps(model, data):
+    """sync_interval=128 would never fire in 4 rounds; the executor must
+    sync on tau_time anyway, fast workers logging 2x the straggler's
+    steps, with round time bounded by ONE straggler step of overshoot."""
+    lag = 1.5
+    speeds = WorkerSpeedModel(n_workers=R, consistent_lag={3: lag})
+    strat = _strategy("a_edit", sync_interval=128)
+    ex = _executor(model, data, strat, tau_time=6.0, speeds=speeds)
+    res = ex.run(4)
+    assert ex.anchor.round == 4          # synced 4 times despite tau=128
+    for rec in res.rounds:
+        assert rec["steps"][0] == 6      # fast: 6 steps of 1.0 in 6.0
+        assert rec["steps"][3] == 3      # slow: ceil(6.0 / 2.5) = 3
+        assert rec["steps"][0] > rec["steps"][3]
+    for t in res.round_times:
+        # bounded by the straggler's single-step lag (2.5), NOT its
+        # full-round lag (a synchronous H-step round would take 6*2.5)
+        assert t <= 6.0 + (1.0 + lag) + 1e-9
+        assert t >= 6.0 - 1e-9
+
+
+def test_straggler_loss_decreases(model, data):
+    """Sanity on the training signal itself under asynchrony: mean round
+    loss goes down (the analytic fig5 curve's qualitative shape)."""
+    speeds = WorkerSpeedModel(n_workers=R, consistent_lag={1: 1.0})
+    ex = _executor(model, data, _strategy("a_edit"), tau_time=4.0,
+                   speeds=speeds)
+    res = ex.run(6)
+    losses = [float(np.mean(list(r["losses"].values())))
+              for r in res.rounds]
+    assert losses[-1] < losses[0]
+
+
+# ---------------------------------------------------------------------------
+# Delayed Nesterov property
+# ---------------------------------------------------------------------------
+
+def test_delayed_nesterov_telescopes_to_nesterov():
+    """contribute x N + flush == one synchronous Nesterov step on the
+    weighted mean pseudo gradient, momentum included."""
+    theta = jax.random.normal(jax.random.PRNGKey(0), (129,))
+    deltas = [jax.random.normal(jax.random.PRNGKey(i + 1), (129,))
+              for i in range(5)]
+    nes = Nesterov(lr=0.7, momentum=0.9)
+    dn = DelayedNesterov(lr=0.7, momentum=0.9)
+    t_sync, m_sync = theta, nes.init(theta)
+    t_async, m_async = theta, dn.init(theta)
+    for k in range(3):                   # momentum carries across rounds
+        dbar = sum(deltas) / len(deltas)
+        t_sync, m_sync = nes.update(t_sync, m_sync, dbar)
+        buf = dn.init(theta)
+        for d in deltas:
+            t_async, buf = dn.contribute(t_async, buf, d, 1 / len(deltas))
+        t_async, m_async = dn.flush(t_async, m_async, buf)
+        np.testing.assert_allclose(np.asarray(t_async), np.asarray(t_sync),
+                                   atol=1e-5, rtol=1e-5, err_msg=f"round {k}")
+        np.testing.assert_allclose(np.asarray(m_async), np.asarray(m_sync),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_delayed_nesterov_out_of_order_rounds():
+    """A fast worker's round-(k+1) gradient may land before the round-k
+    flush; bookkeeping must still flush rounds in order and converge to
+    the same state as in-order delivery of the same per-round means."""
+    from repro.async_exec.anchor import DelayedNesterovAnchor
+    from repro.async_exec.worker import Upload
+
+    theta = jax.random.normal(jax.random.PRNGKey(5), (33,))
+    ups = {(r, w): jax.random.normal(jax.random.PRNGKey(100 + 10 * r + w),
+                                     (33,))
+           for r in range(2) for w in range(2)}
+
+    def mk(r, w):
+        return Upload(w, r, ups[(r, w)], 1, 16, 4.0, 0.0)
+
+    a_in = DelayedNesterovAnchor(theta, DelayedNesterov(0.7, 0.9),
+                                 n_expected=2)
+    for r in range(2):
+        for w in range(2):
+            a_in.contribute(mk(r, w))
+    a_out = DelayedNesterovAnchor(theta, DelayedNesterov(0.7, 0.9),
+                                  n_expected=2)
+    # worker 0 races one round ahead of worker 1
+    a_out.contribute(mk(0, 0))
+    a_out.contribute(mk(1, 0))
+    a_out.contribute(mk(0, 1))          # closes round 0
+    a_out.contribute(mk(1, 1))          # closes round 1
+    assert a_in.round == a_out.round == 2
+    np.testing.assert_allclose(np.asarray(a_in.theta),
+                               np.asarray(a_out.theta), atol=1e-5,
+                               rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 4: executor vs effective_steps_per_round (replay-twin property)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("speeds_kw", [
+    dict(),                                       # uniform
+    dict(consistent_lag={1: 1.0, 3: 0.4}),        # consistent stragglers
+    dict(jitter=0.25, seed=5),                    # lognormal jitter
+    dict(random_lag=2.0, seed=9),                 # random straggler
+])
+def test_executor_steps_match_simulation(model, data, speeds_kw):
+    """Measured per-worker steps/round vs the analytic simulation.  The
+    executor uses check-before-deadline-with-overshoot semantics, the sim
+    counts whole steps that FIT in tau_time: they may differ by one step
+    per worker per round (plus sampling noise when stochastic)."""
+    tau = 5.0
+    rounds = 6
+    speeds = WorkerSpeedModel(n_workers=R, **speeds_kw)
+    ex = _executor(model, data, _strategy("a_edit"), tau_time=tau,
+                   speeds=speeds)
+    res = ex.run(rounds)
+    measured = np.zeros(R)
+    for rec in res.rounds:
+        for w, s in rec["steps"].items():
+            measured[w] += s
+    measured /= rounds
+    predicted = effective_steps_per_round(
+        WorkerSpeedModel(n_workers=R, **speeds_kw), tau, rounds=200)
+    stochastic = speeds_kw.get("jitter") or speeds_kw.get("random_lag")
+    tol = 1.0 + (1.0 if stochastic else 0.0)
+    assert np.all(np.abs(measured - predicted) <= tol + 1e-9), (
+        measured, predicted)
+
+
+# ---------------------------------------------------------------------------
+# Compression, gate, adaptation
+# ---------------------------------------------------------------------------
+
+def test_compressed_upload_tracks_uncompressed(model, data):
+    """int8 point-to-point uploads: wire bytes shrink ~4x and the outer
+    trajectory stays close to the exact one (error feedback carries the
+    residual across rounds)."""
+    strat = _strategy("a_edit")
+    ex_exact = _executor(model, data, strat, tau_time=float(H))
+    comp = dataclasses.replace(strat,
+                               comm=CommConfig(compressor="int8", chunk=256))
+    ex_comp = _executor(model, data, comp, tau_time=float(H))
+    r_exact = ex_exact.run(3)
+    r_comp = ex_comp.run(3)
+    exact_bytes = sum(r["wire_bytes"] for r in r_exact.rounds)
+    comp_bytes = sum(r["wire_bytes"] for r in r_comp.rounds)
+    assert comp_bytes < 0.5 * exact_bytes
+    a, b = (np.asarray(ex_exact.anchor.snapshot_flat()),
+            np.asarray(ex_comp.anchor.snapshot_flat()))
+    denom = max(1e-8, float(np.linalg.norm(a)))
+    assert np.linalg.norm(a - b) / denom < 0.05
+    assert any(float(jnp.abs(wk.ef).sum()) > 0 for wk in ex_comp.workers)
+
+
+def test_upload_gate_drops_anomalous_upload():
+    from repro.async_exec.anchor import DelayedNesterovAnchor, UploadGate
+    from repro.async_exec.worker import Upload
+
+    theta = jnp.zeros((16,))
+    gate = UploadGate(anomaly_z=3.0, warmup=2)
+    a = DelayedNesterovAnchor(theta, DelayedNesterov(1.0, 0.0),
+                              n_expected=1, gate=gate)
+    rng = np.random.default_rng(0)
+    for r in range(4):                   # establish the norm EMA
+        a.contribute(Upload(0, r, jnp.asarray(
+            rng.normal(0, 0.01, 16), jnp.float32), 1, 16, 4.0, 0.0))
+    before = np.asarray(a.theta).copy()
+    a.contribute(Upload(0, 4, jnp.full((16,), 1e3, jnp.float32),
+                        1, 16, 4.0, 0.0))
+    after = np.asarray(a.theta)
+    assert a.history[-1]["dropped"] == 1
+    np.testing.assert_allclose(after, before)    # poisoned delta ignored
+
+
+def test_adaptive_controller_levels_step_counts(model, data):
+    """AdLoCo: tau shrinks toward h_target * median step time, and the
+    straggler is handed a smaller batch fraction."""
+    ctrl = AdaptiveSyncController(h_target=4, gain=1.0, min_tau=1.0,
+                                  max_tau=64.0)
+    speeds = WorkerSpeedModel(n_workers=R, consistent_lag={2: 1.0})
+    ex = _executor(model, data, _strategy("a_edit"), tau_time=16.0,
+                   speeds=speeds, controller=ctrl)
+    res = ex.run(4)
+    assert ex.tau_time < 16.0                    # tau adapted down
+    assert ex.workers[2].batch_frac < 1.0        # straggler batch shrunk
+    assert ex.workers[0].batch_frac == 1.0
+    assert len(ctrl.history) == len(res.rounds)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint: anchor + in-flight round state
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_resume_is_bit_identical(model, data, tmp_path):
+    """run(3) == run(1); save; fresh executor; load; run(2) — including an
+    in-flight straggler round crossing the checkpoint."""
+    strat = _strategy("a_edit")
+    speeds_kw = dict(n_workers=R, consistent_lag={1: 0.7})
+
+    ex_ref = _executor(model, data, strat, tau_time=4.0,
+                       speeds=WorkerSpeedModel(**speeds_kw))
+    ex_ref.run(3)
+
+    ex_a = _executor(model, data, strat, tau_time=4.0,
+                     speeds=WorkerSpeedModel(**speeds_kw))
+    ex_a.run(1)
+    ex_a.save(str(tmp_path / "async_ck"))
+    ex_b = _executor(model, data, strat, tau_time=4.0,
+                     speeds=WorkerSpeedModel(**speeds_kw))
+    ex_b.load(str(tmp_path / "async_ck"))
+    assert ex_b.anchor.round == 1
+    ex_b.run(2)
+
+    np.testing.assert_array_equal(np.asarray(ex_ref.anchor.snapshot_flat()),
+                                  np.asarray(ex_b.anchor.snapshot_flat()))
+    np.testing.assert_array_equal(np.asarray(ex_ref.anchor.m),
+                                  np.asarray(ex_b.anchor.m))
+    for wr, wb in zip(ex_ref.workers, ex_b.workers):
+        assert wr.local_step == wb.local_step
+        for lr_, lb in zip(jax.tree.leaves(wr.params),
+                           jax.tree.leaves(wb.params)):
+            np.testing.assert_array_equal(np.asarray(lr_), np.asarray(lb))
+
+
+# ---------------------------------------------------------------------------
+# Threads backend: real wall clock
+# ---------------------------------------------------------------------------
+
+def test_threads_backend_syncs_on_wall_time(model, data):
+    """Real threads, real clock: a sleeping straggler must not stop the
+    anchor from closing rounds on time, and fast workers do more steps."""
+    speeds = WorkerSpeedModel(n_workers=R, consistent_lag={3: 1.0})
+    strat = _strategy("a_edit", sync_interval=10_000)
+    ex = _executor(model, data, strat, tau_time=4.0, speeds=speeds,
+                   backend="threads", time_scale=0.1)
+    res = ex.run(2)
+    assert ex.anchor.round == 2
+    for rec in res.rounds:
+        assert rec["steps"][0] > rec["steps"][3]
+    # workers ended on the flushed anchor of their final pull
+    assert all(wk.round == 2 for wk in ex.workers)
+
+
+# ---------------------------------------------------------------------------
+# Process backend: true multi-process workers over pipes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_process_backend_multi_process_workers(model, data):
+    """Spawned worker processes (own interpreter + jax runtime each) talk
+    to the in-parent anchor over pipes; rounds close on wall time."""
+    speeds = WorkerSpeedModel(n_workers=R, consistent_lag={3: 1.0})
+    strat = _strategy("a_edit", sync_interval=10_000)
+    ex = _executor(model, data, strat, tau_time=4.0, speeds=speeds,
+                   backend="process", time_scale=0.1, lr=1e-3)
+    res = ex.run(2)
+    assert ex.anchor.round == 2
+    for rec in res.rounds:
+        assert rec["steps"][0] > rec["steps"][3]
+    # anchor moved away from the init params
+    p0 = tree_to_flat(ex.anchor.template)
+    assert float(jnp.abs(ex.anchor.snapshot_flat() - p0).max()) > 0
+
+
+# ---------------------------------------------------------------------------
+# Session integration (fold-back into the SPMD state)
+# ---------------------------------------------------------------------------
+
+def test_session_run_async_folds_back(model, data):
+    from repro.elastic.session import TrainSession
+    from repro.train.loop import TrainerConfig
+
+    strat = _strategy("a_edit")
+    tcfg = TrainerConfig(total_steps=50, inner_lr=1e-3, lr_warmup=0,
+                         log_every=0, seed=11)
+    sess = TrainSession(model, strat, data, tcfg)
+    res = sess.run_async(rounds=2, tau_time=float(H))
+    assert res.final_round == 2
+    st = sess.state
+    assert int(st["step"]) == 2 * H
+    p_t = jax.tree.map(lambda a: a[0], st["params"])
+    anchor = PEN.merge_groups(st["anchor"], p_t)
+    np.testing.assert_allclose(
+        np.asarray(tree_to_flat(anchor)),
+        np.asarray(tree_to_flat(p_t)), atol=1e-6, rtol=1e-6)
+    # momentum folded back as well (non-zero after two rounds)
+    m = PEN.merge_groups(st["outer_m"], p_t)
+    assert float(tree_to_flat(m).astype(jnp.float32).std()) > 0
+    # the session can continue synchronously from the folded state
+    sess.run_steps(2)
+    assert int(sess.state["step"]) == 2 * H + 2

@@ -187,14 +187,17 @@ def test_warmup_grow_boots_from_live_params_not_stale_anchor(model):
 
 
 def test_membership_events_fire_only_at_sync_boundaries(model):
-    """AEDiTScheduler join/leave requests defer to the next boundary."""
+    """AEDiTScheduler join/leave requests defer to the next boundary —
+    the scheduler's TIME boundary, which drives the in-graph sync and is
+    the lossless seam point (replicas equal the anchor right after)."""
     speeds = WorkerSpeedModel(n_workers=R0)
-    sched = AEDiTScheduler(speeds, tau_time=1e9)       # never time-syncs
+    sched = AEDiTScheduler(speeds, tau_time=5.0)
     strat = _strategy("a_edit")
     sess = TrainSession(model, strat, _data(), _tcfg(), scheduler=sched)
     sched.request_membership(2)
     sess.run_steps(SEAM + 2)
-    # boundary at step 4 ((4 - warm) % tau == 0): steps 0-3 ran at R=4
+    # uniform unit speeds: tick crosses tau_time=5.0 at loop iteration 4,
+    # so steps 0-3 ran at R=4 and the seam lands with the first time-sync
     reps = [r["replicas"] for r in sess.history]
     assert reps[:4] == [R0] * 4
     assert reps[4:] == [2] * (SEAM + 2 - 4)

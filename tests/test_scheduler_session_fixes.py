@@ -1,0 +1,185 @@
+"""Regression tests for the scheduler/session bugfixes shipped with the
+async executor (ISSUE 7 satellites):
+
+1. `AEDiTScheduler`'s time-based ``do_sync`` hint must actually drive the
+   in-graph sync when a session runs with a scheduler — previously the
+   hint was discarded and the loop synced on ``step % sync_interval``,
+   silently diverging whenever ``tau_time != H * base_time``.
+2. ``TrainSession.advance`` / ``Segment`` falsy-zero audit: an explicit
+   ``sync_interval=0`` (sync-every-boundary) and ``lr_scale=0.0`` must
+   stick instead of being swallowed by ``or``-defaulting.
+3. A joiner admitted at a membership seam cannot be marked active before
+   completing one full inner step after the seam.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import PenaltyConfig, Strategy
+from repro.core.async_sim import AEDiTScheduler, WorkerSpeedModel
+from repro.data.pipeline import SyntheticLM
+from repro.elastic.session import Segment, TrainSession
+from repro.train.loop import TrainerConfig
+
+PEN_OFF = PenaltyConfig(enable_anomaly=False, enable_weighting=False,
+                        enable_clip=False)
+
+
+@pytest.fixture(scope="module")
+def model():
+    from repro.models import build_model
+    cfg = dataclasses.replace(
+        get_config("llama_350m").reduced(), name="tiny_fixes", d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=128)
+    return build_model(cfg, compute_dtype=jnp.float32, remat=False)
+
+
+def _session(model, strat, scheduler=None, total=50):
+    data = SyntheticLM(model.cfg.vocab_size, 16, 2 * strat.replicas,
+                       seed=3, replicas=strat.replicas)
+    tcfg = TrainerConfig(total_steps=total, inner_lr=1e-3, lr_warmup=0,
+                         log_every=0, seed=11)
+    return TrainSession(model, strat, data, tcfg, scheduler=scheduler)
+
+
+# ---------------------------------------------------------------------------
+# Satellite 1: the do_sync hint reaches the graph
+# ---------------------------------------------------------------------------
+
+def test_scheduler_time_cadence_drives_sync_not_step_counter(model):
+    """Straggler makes the step-count cadence (tau=128: never in 10
+    steps) and the time cadence (tau_time=3.0: every 3 ticks) disagree;
+    the session must follow the scheduler."""
+    speeds = WorkerSpeedModel(n_workers=2, consistent_lag={1: 1.0})
+    sched = AEDiTScheduler(speeds, tau_time=3.0)
+    strat = Strategy(name="a_edit", replicas=2, sync_interval=128,
+                     warmup_steps=0, penalty=PEN_OFF)
+    sess = _session(model, strat, scheduler=sched)
+    sess.run_steps(10)
+    synced_steps = [r["step"] for r in sess.history if r.get("synced")]
+    # ticks advance by t.min()=1.0 per step; tau_time=3.0 fires on ticks
+    # 3, 6, 9 -> loop iterations 2, 5, 8 (all past warmup_steps=0)
+    assert synced_steps == [2, 5, 8]
+
+
+def test_scheduler_active_fn_records_hint():
+    """The legacy Trainer(active_fn=...) adapter cannot return the hint,
+    but it must at least expose it for callers that poll."""
+    sched = AEDiTScheduler(WorkerSpeedModel(n_workers=2), tau_time=2.0)
+    fn = sched.active_fn()
+    assert sched.last_do_sync is False
+    hints = []
+    for step in range(4):
+        fn(step)
+        hints.append(sched.last_do_sync)
+    assert hints == [False, True, False, True]      # tick 2.0 and 4.0
+
+
+def test_scheduler_and_masked_step_agree_on_sync_count(model):
+    """The scheduler's own do_sync count over N steps equals the number
+    of in-graph syncs the session performed (no silent divergence)."""
+    speeds = WorkerSpeedModel(n_workers=2, consistent_lag={0: 0.5})
+    strat = Strategy(name="a_edit", replicas=2, sync_interval=7,
+                     warmup_steps=0, penalty=PEN_OFF)
+    sess = _session(
+        model, strat,
+        scheduler=AEDiTScheduler(WorkerSpeedModel(
+            n_workers=2, consistent_lag={0: 0.5}), tau_time=4.0))
+    sess.run_steps(12)
+    twin = AEDiTScheduler(speeds, tau_time=4.0)
+    expected = sum(twin.next_step()[1] for _ in range(12))
+    got = sum(1 for r in sess.history if r.get("synced"))
+    assert got == expected > 0
+
+
+# ---------------------------------------------------------------------------
+# Satellite 2: falsy-zero audit (sync_interval=0, lr_scale=0.0)
+# ---------------------------------------------------------------------------
+
+def test_advance_sync_interval_zero_sticks(model):
+    strat = Strategy(name="edit", replicas=2, sync_interval=4,
+                     warmup_steps=0, penalty=PEN_OFF)
+    sess = _session(model, strat)
+    sess.run_steps(1)
+    sess.advance(sync_interval=0)
+    assert sess.strategy.sync_interval == 0       # not swallowed by `or`
+    assert isinstance(sess.at_boundary(), bool)   # no ZeroDivisionError
+    sess.run_steps(3)
+    # tau=0 means sync at EVERY post-warmup step
+    post = [r for r in sess.history
+            if r["step"] > sess.strategy.warmup_steps]
+    assert post and all(r["synced"] == 1.0 for r in post)
+
+
+def test_advance_lr_scale_zero_sticks(model):
+    strat = Strategy(name="edit", replicas=2, sync_interval=4,
+                     warmup_steps=0, penalty=PEN_OFF)
+    sess = _session(model, strat)
+    sess.run_steps(1)
+    sess.advance(lr_scale=0.0)
+    assert sess.lr_scale == 0.0
+    sess.run_steps(1)
+    assert sess.history[-1]["lr"] == 0.0          # frozen segment, honored
+
+
+def test_segment_differs_sees_zero_values(model):
+    strat = Strategy(name="edit", replicas=2, sync_interval=4,
+                     warmup_steps=0, penalty=PEN_OFF)
+    sess = _session(model, strat)
+    assert sess._differs(Segment(steps=1, sync_interval=0))
+    assert sess._differs(Segment(steps=1, lr_scale=0.0))
+    assert not sess._differs(Segment(steps=1))
+    assert not sess._differs(Segment(steps=1, sync_interval=4))
+
+
+# ---------------------------------------------------------------------------
+# Satellite 3: joiner activation at a membership seam
+# ---------------------------------------------------------------------------
+
+def test_joiner_inactive_until_full_step_after_seam():
+    """Joiner clocks start at the frontier and `_progress` at zero: a slow
+    joiner must stay masked until the global tick has advanced by its own
+    step time since the seam."""
+    speeds = WorkerSpeedModel(n_workers=2)     # uniform base 1.0
+    sched = AEDiTScheduler(speeds, tau_time=2.0)
+    while True:                                # reach a sync boundary
+        _, do_sync = sched.next_step()
+        if do_sync:
+            break
+    sched.request_membership(3)
+    assert sched.poll_membership(True) == 3
+    # joiner (index 2) is the slowest worker from here on
+    sched.speeds.consistent_lag[2] = 1.0       # joiner step time = 2.0
+    active1, _ = sched.next_step()             # +1.0 tick: progress 0.5
+    assert not active1[2]
+    assert active1[:2].all()
+    active2, _ = sched.next_step()             # +1.0 tick: progress 1.0
+    assert active2[2]
+
+
+def test_joiner_uniform_first_tick_is_one_full_step():
+    """With uniform speeds every tick IS one full step, so the joiner may
+    be active on the first post-seam tick — but never before the seam's
+    first tick (its progress starts at zero, not at the frontier)."""
+    sched = AEDiTScheduler(WorkerSpeedModel(n_workers=2), tau_time=4.0)
+    sched.request_membership(4)
+    assert sched.poll_membership(False) is None   # deferred off-boundary
+    assert sched.speeds.n_workers == 2
+    while True:                                   # reach the seam
+        _, do_sync = sched.next_step()
+        if do_sync:
+            break
+    assert sched.poll_membership(True) == 4
+    assert (sched._progress[2:] == 0).all()    # joiners owe a full step
+    active, _ = sched.next_step()
+    assert active.all()                        # uniform: 1 tick = 1 step
+
+
+def test_mask_reseat_on_seam_truncates_and_benches_joiners():
+    m = TrainSession._reseat_mask(np.array([True, False, True]), 5)
+    assert m.tolist() == [True, False, True, False, False]
+    m = TrainSession._reseat_mask(np.array([True, True, True]), 2)
+    assert m.tolist() == [True, True]
