@@ -12,18 +12,18 @@ whereas the synchronous EDiT boundary waits for the straggler's full
 round, ``H * (base + lag)``.  Virtual times are deterministic, so the
 bound is hard-asserted (no wall-clock jitter to excuse).
 
-Writes ``BENCH_async.json`` at the repo root so the perf trajectory of
-the async engine is tracked alongside the test suite.
+Writes ``benchmarks/BENCH_async.json`` (shared artifact schema —
+``common.write_bench``) so the perf trajectory of the async engine is
+tracked alongside the other suites and diffed by the perf gate.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import FAST, bench_model, emit
+from benchmarks.common import FAST, bench_model, emit, write_bench
 
 from repro.core import PenaltyConfig, Strategy
 from repro.core.async_sim import WorkerSpeedModel, effective_steps_per_round
@@ -106,10 +106,7 @@ def main() -> None:
     worst = max(r["speedup_vs_sync"]
                 for r in report["cases"].values() if r["lag"])
     report["best_speedup_vs_sync"] = round(worst, 3)
-    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_async.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    out = write_bench("async", report)
     print(f"# async round bounded by one straggler step, not a full round; "
           f"best speedup vs synchronous boundary: "
           f"{report['best_speedup_vs_sync']:.2f}x -> {os.path.normpath(out)}",

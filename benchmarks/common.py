@@ -1,12 +1,16 @@
 """Shared benchmark scaffolding: tiny-but-real model configs, timing
-helpers, CSV emission in the harness format ``name,us_per_call,derived``."""
+helpers, CSV emission in the harness format ``name,us_per_call,derived``,
+and the canonical ``benchmarks/BENCH_<area>.json`` artifact writer every
+suite shares (one directory, one schema version — the perf gate diffs
+these records against committed baselines)."""
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import sys
 import time
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Optional
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -69,3 +73,47 @@ def emit(name: str, us_per_call: float, derived: str):
     row = f"{name},{us_per_call:.1f},{derived}"
     ROWS.append(row)
     print(row, flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Canonical benchmark artifacts (perf-gate surface, DESIGN.md §17)
+# ---------------------------------------------------------------------------
+
+BENCH_SCHEMA_VERSION = 1
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+
+
+def bench_path(area: str) -> str:
+    return os.path.join(BENCH_DIR, f"BENCH_{area}.json")
+
+
+def write_bench(area: str, report: Dict, metrics: Optional[Dict] = None
+                ) -> str:
+    """Write the canonical ``benchmarks/BENCH_<area>.json`` record.
+
+    ``report`` is the suite's free-form payload (whatever the suite main
+    historically emitted); ``metrics`` is the perf-gate surface — a flat
+    ``{name: {"value": ..., "gated": bool, "tol": float, "kind": ...}}``
+    dict ``perf_gate.py --check`` diffs against the committed baseline in
+    ``benchmarks/baselines/``.  Every artifact carries the shared
+    ``schema_version`` so readers can reject stale formats.
+    """
+    rec = {"schema_version": BENCH_SCHEMA_VERSION, "area": area,
+           "metrics": metrics or {}, "report": report}
+    path = bench_path(area)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return path
+
+
+def read_bench(path: str) -> Optional[Dict]:
+    """Load a BENCH record; None when absent or from another schema."""
+    try:
+        with open(path) as f:
+            rec = json.load(f)
+    except (OSError, ValueError):
+        return None
+    if rec.get("schema_version") != BENCH_SCHEMA_VERSION:
+        return None
+    return rec

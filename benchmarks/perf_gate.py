@@ -1,0 +1,513 @@
+"""Perf-regression gate: run the benchmark suites on fixed small configs,
+emit canonical ``benchmarks/BENCH_<area>.json`` records, and diff them
+against the committed baselines in ``benchmarks/baselines/`` (DESIGN.md
+§17).
+
+Areas and what each record carries:
+
+* ``roofline``      — analytic cost-model terms (flops, HBM bytes,
+  roofline times, useful-flop ratio) for fixed (arch, shape) points.
+  Pure arithmetic — gated with zero tolerance.
+* ``sync_overlap``  — HLO sync structure of the 4-device train step
+  (distinct sync tags, independent sync regions, ``overlap_fraction``
+  from ``hlo_analysis.sync_overlap_report``).  Deterministic — gated.
+* ``sync_bytes``    — per-class ``edit_sync``-tagged collective bytes
+  per compressor, the none/int8 reduction ratio (>= 3x floor), and the
+  fused-vs-staged quantize-into-reduce byte comparison keyed on the
+  ``fused_qr`` HLO scope (fused must not exceed staged).  Gated with a
+  small tolerance for XLA layout drift.
+* ``serve``         — the paged-vs-slotted equal-HBM trace: scheduling
+  counters (decode steps, prefix hits, shared tokens, CoW copies,
+  evictions, prefill chunks, occupancy) are deterministic and gated;
+  tokens/s and TTFT ride along as informational timing.
+* ``async``         — the async executor on its deterministic virtual
+  clock: round times, the tau+one-straggler-step bound and the
+  speedup-vs-sync are gated; wall us/step is informational.
+* ``autotune``      — the kernel autotuner: the committed
+  ``autotune_table.json`` must be reproducible (deterministic cost-model
+  timer), and a real-timer pass records tuned-vs-default speedup per
+  kernel plus the costmodel-predicted vs measured ratio.
+
+Usage::
+
+    python benchmarks/perf_gate.py --check                # diff vs baselines
+    python benchmarks/perf_gate.py --update-baselines     # intentional refresh
+    python benchmarks/perf_gate.py --check --suite sync_bytes --suite roofline
+    python benchmarks/perf_gate.py                        # record only
+
+Metric gating: every metric is ``{"value": v, "gated": bool, "tol": rel,
+"kind": "eq"|"max"|"min"}``.  ``eq`` fails outside ``base ± tol``;
+``max`` fails when the value grows past ``base * (1 + tol)`` (times,
+bytes); ``min`` fails when it drops below ``base * (1 - tol)``
+(speedups, ratios).  ``--check`` exits nonzero naming every failing
+``area/metric``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+from typing import Callable, Dict, List, Optional, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.common import (BENCH_DIR, FAST, bench_path, emit,  # noqa: E402
+                               read_bench, write_bench)
+
+BASELINE_DIR = os.path.join(BENCH_DIR, "baselines")
+
+
+def _m(value, *, gated=True, tol=0.0, kind="eq") -> Dict:
+    if hasattr(value, "item"):
+        value = value.item()
+    return {"value": value, "gated": gated, "tol": tol, "kind": kind}
+
+
+# ---------------------------------------------------------------------------
+# roofline — analytic, exact
+# ---------------------------------------------------------------------------
+
+ROOFLINE_POINTS = (("llama_350m", "train_4k", 16),
+                   ("llama_7b", "train_4k", 16))
+
+
+def suite_roofline() -> Tuple[Dict, Dict]:
+    from benchmarks.costmodel import cost_for
+    from repro.configs import get_config, get_shape
+    from repro.launch.hlo_analysis import roofline_terms
+
+    metrics, report = {}, {"points": {}}
+    for arch, shape_name, replicas in ROOFLINE_POINTS:
+        cfg = get_config(arch)
+        shape = get_shape(shape_name)
+        cost = cost_for(cfg, shape, replicas=replicas)
+        ndev = replicas
+        terms = roofline_terms(cost.hlo_flops / ndev, cost.hbm_bytes / ndev,
+                               0.0)
+        key = f"{arch}@{shape_name}"
+        report["points"][key] = {
+            "model_flops": cost.model_flops, "hlo_flops": cost.hlo_flops,
+            "hbm_bytes": cost.hbm_bytes, "useful_ratio": cost.ratio(),
+            **terms,
+        }
+        metrics[f"{key}/hlo_flops"] = _m(cost.hlo_flops)
+        metrics[f"{key}/hbm_bytes"] = _m(cost.hbm_bytes)
+        metrics[f"{key}/useful_ratio"] = _m(round(cost.ratio(), 6))
+        metrics[f"{key}/bottleneck"] = _m(terms["bottleneck"])
+        emit(f"perf_gate/roofline_{key}", terms["compute_s"] * 1e6,
+             f"bottleneck={terms['bottleneck']} "
+             f"useful={cost.ratio():.3f}")
+    return metrics, report
+
+
+# ---------------------------------------------------------------------------
+# sync_overlap + sync_bytes — one shared 4-device HLO subprocess
+# ---------------------------------------------------------------------------
+
+_SYNC_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, dataclasses, json; sys.path.insert(0, "src")
+import repro  # noqa
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.core import CommConfig, Strategy, init_train_state, make_train_step
+from repro.dist.sharding import TRAIN_POLICY, use_policy
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import sync_overlap_report
+from repro.models import build_model
+from repro.optim import AdamW, constant
+
+mesh = jax.make_mesh((4, 1), ("data", "model"), axis_types=(AxisType.Auto,) * 2)
+cfg = dataclasses.replace(
+    get_config("llama_350m").reduced(), name="tiny-gate",
+    d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+    vocab_size=128)
+model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+opt = AdamW()
+CONFIGS = {
+    "mono_none": (False, CommConfig()),
+    "streamed_none": (True, CommConfig()),
+    "streamed_int8_fused": (True, CommConfig(compressor="int8", fused=True)),
+    "streamed_int8_staged": (True, CommConfig(compressor="int8", fused=False)),
+}
+out = {}
+with jax.set_mesh(mesh), use_policy(TRAIN_POLICY):
+    for name, (streamed, comm) in CONFIGS.items():
+        strat = Strategy(name="edit", replicas=4, sync_interval=2,
+                         warmup_steps=0, comm=comm)
+        state = jax.eval_shape(lambda k: init_train_state(model, strat, opt, k),
+                               jax.random.PRNGKey(0))
+        st_specs = SP.train_state_specs(state, cfg, mesh)
+        batch = jax.ShapeDtypeStruct((8, 32), jnp.int32)
+        b_specs = SP.train_batch_specs({"tokens": batch}, cfg, mesh, 4)
+        step = jax.jit(make_train_step(model, strat, opt, constant(1e-3),
+                                       streamed=streamed),
+                       in_shardings=(st_specs, b_specs))
+        txt = step.lower(state, {"tokens": batch}).compile().as_text()
+        out[name] = sync_overlap_report(txt)
+print("SYNCREP", json.dumps(out))
+"""
+
+_sync_cache: Optional[Dict] = None
+
+
+def _sync_reports() -> Dict:
+    """Compile the 4 gate configs once per process; both sync suites read
+    the same subprocess result."""
+    global _sync_cache
+    if _sync_cache is not None:
+        return _sync_cache
+    import subprocess
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    root = os.path.join(os.path.dirname(__file__), "..")
+    res = subprocess.run([sys.executable, "-c", _SYNC_SUBPROC],
+                         capture_output=True, text=True, env=env,
+                         cwd=root, timeout=560)
+    if "SYNCREP" not in res.stdout:
+        raise RuntimeError(
+            f"sync HLO subprocess failed:\n{res.stderr[-2000:]}")
+    _sync_cache = json.loads(res.stdout.split("SYNCREP", 1)[1].strip())
+    return _sync_cache
+
+
+def suite_sync_overlap() -> Tuple[Dict, Dict]:
+    reps = _sync_reports()
+    st, mono = reps["streamed_none"], reps["mono_none"]
+    metrics = {
+        "streamed/n_sync_tags": _m(st["n_sync_tags"]),
+        "streamed/n_sync_regions": _m(st["n_sync_regions"]),
+        "streamed/overlap_fraction": _m(round(st["overlap_fraction"], 6)),
+        "streamed/is_streamed": _m(st["streamed"]),
+        "mono/n_sync_tags": _m(mono["n_sync_tags"]),
+        "mono/overlap_fraction": _m(round(mono["overlap_fraction"], 6)),
+    }
+    assert st["streamed"] and not mono["streamed"], (st, mono)
+    assert st["overlap_fraction"] > mono["overlap_fraction"], (st, mono)
+    emit("perf_gate/sync_overlap_streamed", 0.0,
+         f"tags={st['n_sync_tags']} regions={st['n_sync_regions']} "
+         f"overlap={st['overlap_fraction']:.3f}")
+    report = {k: {kk: vv for kk, vv in v.items() if kk != "tag_bytes"}
+              for k, v in reps.items()}
+    return metrics, report
+
+
+def suite_sync_bytes() -> Tuple[Dict, Dict]:
+    reps = _sync_reports()
+    none_b = reps["streamed_none"]["sync_bytes"]
+    fused = reps["streamed_int8_fused"]
+    staged = reps["streamed_int8_staged"]
+    ratio = none_b / max(fused["sync_bytes"], 1)
+    fused_vs_staged = fused["sync_bytes"] / max(staged["sync_bytes"], 1)
+    # hard invariants first (named failures even without a baseline)
+    assert ratio >= 3.0, f"int8 byte reduction fell under 3x: {ratio:.2f}"
+    assert fused["fused_qr_bytes"] > 0, "fused path lost its fused_qr tag"
+    assert staged["fused_qr_bytes"] == 0, "staged path grew a fused_qr tag"
+    assert fused["sync_bytes"] <= staged["sync_bytes"], (
+        "quantize-into-reduce grew the tagged wire: "
+        f"{fused['sync_bytes']} > {staged['sync_bytes']}")
+    metrics = {
+        "none/sync_bytes": _m(none_b, tol=0.02, kind="max"),
+        "int8_fused/sync_bytes": _m(fused["sync_bytes"], tol=0.02,
+                                    kind="max"),
+        "int8_fused/fused_qr_bytes": _m(fused["fused_qr_bytes"], tol=0.02,
+                                        kind="max"),
+        "int8_staged/sync_bytes": _m(staged["sync_bytes"], tol=0.02,
+                                     kind="max"),
+        "none_over_int8_ratio": _m(round(ratio, 3), tol=0.05, kind="min"),
+        "fused_over_staged_ratio": _m(round(fused_vs_staged, 6),
+                                      tol=0.0, kind="max"),
+    }
+    emit("perf_gate/sync_bytes_int8_reduction", ratio,
+         f"none={none_b}B int8={fused['sync_bytes']}B "
+         f"fused_qr={fused['fused_qr_bytes']}B")
+    report = {"tag_bytes": {k: v["tag_bytes"] for k, v in reps.items()},
+              "sync_bytes": {k: v["sync_bytes"] for k, v in reps.items()},
+              "fused_qr_bytes": {k: v["fused_qr_bytes"]
+                                 for k, v in reps.items()}}
+    return metrics, report
+
+
+# ---------------------------------------------------------------------------
+# serve — deterministic scheduling counters gated, timing informational
+# ---------------------------------------------------------------------------
+
+SERVE_COUNTERS = ("decode_steps", "steps", "occupancy_mean")
+PAGED_COUNTERS = SERVE_COUNTERS + ("prefix_hits", "shared_tokens",
+                                   "cow_copies", "evictions",
+                                   "prefill_chunks")
+
+
+def suite_serve() -> Tuple[Dict, Dict]:
+    import jax
+    from benchmarks import serve_throughput as ST
+    from benchmarks.common import bench_model
+
+    model = bench_model(seq_len=ST.PROMPT_LEN)
+    params = model.init(jax.random.PRNGKey(0))
+    report = ST.bench_paged_vs_slotted(model, params)
+    metrics = {}
+    for eng, counters in (("slotted", SERVE_COUNTERS),
+                          ("paged", PAGED_COUNTERS)):
+        for c in counters:
+            metrics[f"{eng}/{c}"] = _m(report[eng][c])
+        metrics[f"{eng}/tokens_per_s"] = _m(report[eng]["tokens_per_s"],
+                                            gated=False)
+        metrics[f"{eng}/ttft_mean_s"] = _m(report[eng]["ttft_mean_s"],
+                                           gated=False)
+    metrics["speedup_tokens_per_s"] = _m(report["speedup_tokens_per_s"],
+                                         gated=False)
+    return metrics, report
+
+
+# ---------------------------------------------------------------------------
+# async — virtual-clock metrics gated, wall time informational
+# ---------------------------------------------------------------------------
+
+def suite_async() -> Tuple[Dict, Dict]:
+    from benchmarks import async_throughput as AT
+    from benchmarks.common import bench_model
+
+    model = bench_model(seq_len=16)
+    metrics, report = {}, {"cases": {}}
+    for lag in AT.LAGS:
+        rep = AT.run_case(model, lag)
+        key = f"lag{lag}"
+        report["cases"][key] = rep
+        metrics[f"{key}/round_time"] = _m(round(rep["async_round_time"], 6))
+        metrics[f"{key}/bound"] = _m(rep["bound_tau_plus_one_step"])
+        metrics[f"{key}/speedup_vs_sync"] = _m(
+            round(rep["speedup_vs_sync"], 4), tol=0.0, kind="min")
+        metrics[f"{key}/us_per_inner_step"] = _m(
+            round(rep["us_per_inner_step"], 1), gated=False)
+        assert max(rep["round_times"]) <= rep["bound_tau_plus_one_step"] \
+            + 1e-6, (rep["round_times"], rep["bound_tau_plus_one_step"])
+        emit(f"perf_gate/async_lag{lag}", rep["us_per_inner_step"],
+             f"round_t={rep['async_round_time']:.2f} "
+             f"speedup={rep['speedup_vs_sync']:.2f}")
+    return metrics, report
+
+
+# ---------------------------------------------------------------------------
+# autotune — table reproducibility gated; tuned-vs-default speedup timed
+# ---------------------------------------------------------------------------
+
+# shapes the checked-in table covers (CPU backend; TPU entries are added
+# by running --retune on real hardware)
+TUNE_SHAPES = {
+    "pg_combine": [{"L": 2, "R": 4, "N": 65536}],
+    "pg_sumsq": [{"L": 2, "R": 4, "N": 65536}],
+    "pg_quant": [{"L": 2, "P": 4, "nch": 32, "chunk": 128}],
+    "flash_attention": [{"S": 128, "T": 128, "hd": 32}],
+    "paged_attention": [{"B": 4, "ps": 8, "hd": 32, "nb": 4}],
+}
+# kernels whose tuned params are re-measured with the real timer for the
+# gate's timing record (the others are table-determinism only)
+TIMED_KERNELS = ("pg_combine", "pg_quant")
+
+
+def suite_autotune() -> Tuple[Dict, Dict]:
+    from repro.kernels import autotune as AT
+
+    bk = AT.backend()
+    table = AT._load_table(AT.default_table_path())
+
+    # 1. determinism: two cost-model-timer tuner runs must agree with each
+    #    other AND with the committed table entries for this backend.
+    tuner = AT.Autotuner(timer=AT.costmodel_timer())
+    run1 = tuner.tune(TUNE_SHAPES, bk=bk)
+    # verify=False: verification cannot change the selection, so the
+    # repeat run only needs to reproduce the table entries
+    run2 = AT.Autotuner(timer=AT.costmodel_timer(),
+                        verify=False).tune(TUNE_SHAPES, bk=bk)
+    deterministic = run1 == run2
+    assert deterministic, "autotuner cache is not deterministic across runs"
+
+    metrics = {"backend": _m(bk), "deterministic": _m(deterministic),
+               "n_entries": _m(len(run1))}
+    report = {"backend": bk, "entries": {}}
+    stale = []
+    for key, ent in run1.items():
+        committed = table.get(key)
+        match = (committed is not None
+                 and committed.get("params") == ent["params"])
+        if not match:
+            stale.append(key)
+        metrics[f"table/{key}"] = _m(json.dumps(ent["params"],
+                                                sort_keys=True))
+        report["entries"][key] = {
+            "params": ent["params"],
+            "predicted_us": ent["predicted_us"],
+            "committed_match": match,
+        }
+    assert not stale, (
+        f"autotune_table.json is stale for {stale}; run "
+        f"python benchmarks/perf_gate.py --retune")
+
+    # 2. real-timer pass: tuned params must beat the fixed defaults — the
+    #    gate's timing record for "spend the wins".
+    timed = AT.Autotuner(iters=2, verify=False)
+    best_speedup = 0.0
+    for kernel in TIMED_KERNELS:
+        for dims in TUNE_SHAPES[kernel]:
+            res = timed.tune_kernel(kernel, dims)
+            key = AT.table_key(kernel, dims, bk)
+            sp = res["speedup_vs_default"] or 0.0
+            best_speedup = max(best_speedup, sp)
+            measured_over_pred = (res["us"] / res["predicted_us"]
+                                  if res["predicted_us"] else None)
+            report["entries"].setdefault(key, {}).update({
+                "us": res["us"], "default_us": res["default_us"],
+                "speedup_vs_default": sp,
+                "measured_over_predicted": (round(measured_over_pred, 3)
+                                            if measured_over_pred else None),
+                "timed_params": res["params"],
+            })
+            metrics[f"timing/{key}/speedup_vs_default"] = _m(sp, gated=False)
+            metrics[f"timing/{key}/measured_over_predicted"] = _m(
+                round(measured_over_pred, 3) if measured_over_pred else 0.0,
+                gated=False)
+            emit(f"perf_gate/autotune_{kernel}", res["us"],
+                 f"tuned={json.dumps(res['params'])} "
+                 f"speedup_vs_default={sp:.2f}")
+    report["best_speedup_vs_default"] = best_speedup
+    metrics["best_speedup_vs_default"] = _m(round(best_speedup, 3),
+                                            gated=False)
+    if best_speedup <= 1.0:
+        msg = ("autotuned block sizes did not beat the fixed defaults "
+               f"on any timed kernel (best {best_speedup:.2f}x)")
+        if os.environ.get("BENCH_STRICT", "0") == "1":
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}", flush=True)
+    return metrics, report
+
+
+SUITES: Dict[str, Callable[[], Tuple[Dict, Dict]]] = {
+    "roofline": suite_roofline,
+    "sync_overlap": suite_sync_overlap,
+    "sync_bytes": suite_sync_bytes,
+    "serve": suite_serve,
+    "async": suite_async,
+    "autotune": suite_autotune,
+}
+
+
+# ---------------------------------------------------------------------------
+# Gate mechanics
+# ---------------------------------------------------------------------------
+
+def _compare(area: str, name: str, cur: Dict, base: Dict) -> Optional[str]:
+    """None when within tolerance, else a failure message."""
+    kind = cur.get("kind", "eq")
+    tol = float(cur.get("tol", 0.0))
+    cv, bv = cur["value"], base["value"]
+    if not isinstance(cv, (int, float)) or isinstance(cv, bool) \
+            or not isinstance(bv, (int, float)) or isinstance(bv, bool):
+        if cv != bv:
+            return (f"{area}/{name}: value changed "
+                    f"(baseline {bv!r} -> {cv!r})")
+        return None
+    scale = max(abs(bv), 1e-12)
+    if kind == "max" and cv > bv + tol * scale:
+        return (f"{area}/{name}: regressed above baseline "
+                f"(baseline {bv} -> {cv}, tol {tol:.0%})")
+    if kind == "min" and cv < bv - tol * scale:
+        return (f"{area}/{name}: regressed below baseline "
+                f"(baseline {bv} -> {cv}, tol {tol:.0%})")
+    if kind == "eq" and abs(cv - bv) > tol * scale:
+        return (f"{area}/{name}: drifted from baseline "
+                f"(baseline {bv} -> {cv}, tol {tol:.0%})")
+    return None
+
+
+def check_area(area: str, record: Dict) -> List[str]:
+    base = read_bench(os.path.join(BASELINE_DIR, f"BENCH_{area}.json"))
+    if base is None:
+        return [f"{area}: no committed baseline "
+                f"(run perf_gate.py --update-baselines)"]
+    fails = []
+    bmetrics = base.get("metrics", {})
+    for name, cur in record["metrics"].items():
+        if not cur.get("gated"):
+            continue
+        if name not in bmetrics:
+            fails.append(f"{area}/{name}: metric missing from baseline "
+                         f"(refresh baselines intentionally)")
+            continue
+        msg = _compare(area, name, cur, bmetrics[name])
+        if msg:
+            fails.append(msg)
+    for name, b in bmetrics.items():
+        if b.get("gated") and name not in record["metrics"]:
+            fails.append(f"{area}/{name}: gated metric disappeared "
+                         f"from the current run")
+    return fails
+
+
+def run_suites(suites: List[str], *, check: bool, update: bool) -> int:
+    failures: List[str] = []
+    for area in suites:
+        print(f"# --- perf_gate:{area} ---", flush=True)
+        metrics, report = SUITES[area]()
+        path = write_bench(area, report, metrics)
+        record = read_bench(path)
+        if update:
+            os.makedirs(BASELINE_DIR, exist_ok=True)
+            shutil.copyfile(path,
+                            os.path.join(BASELINE_DIR, f"BENCH_{area}.json"))
+            print(f"# baseline updated: baselines/BENCH_{area}.json",
+                  flush=True)
+        elif check:
+            fails = check_area(area, record)
+            failures.extend(fails)
+            status = "OK" if not fails else f"FAIL ({len(fails)})"
+            print(f"# perf_gate:{area} {status}", flush=True)
+    if failures:
+        print("\nPERF GATE FAILURES:", file=sys.stderr)
+        for f in failures:
+            print(f"  FAIL {f}", file=sys.stderr)
+        return 1
+    if check:
+        print(f"# perf gate: all {len(suites)} suites within tolerance",
+              flush=True)
+    return 0
+
+
+def retune() -> None:
+    """Refresh ``autotune_table.json`` for this backend (deterministic
+    cost-model timer, candidates verified against the jnp refs)."""
+    from repro.kernels import autotune as AT
+    tuner = AT.Autotuner(timer=AT.costmodel_timer())
+    entries = tuner.tune(TUNE_SHAPES)
+    path = AT.save_table(entries)
+    print(f"# wrote {len(entries)} entries -> {path}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--check", action="store_true",
+                    help="diff gated metrics against committed baselines; "
+                         "nonzero exit on regression")
+    ap.add_argument("--update-baselines", action="store_true",
+                    help="refresh benchmarks/baselines/ from this run")
+    ap.add_argument("--retune", action="store_true",
+                    help="regenerate kernels/autotune_table.json")
+    ap.add_argument("--suite", action="append", choices=sorted(SUITES),
+                    help="run a subset (repeatable); default: all")
+    args = ap.parse_args(argv)
+    if args.retune:
+        retune()
+        if not (args.check or args.update_baselines):
+            return 0
+    suites = args.suite or list(SUITES)
+    return run_suites(suites, check=args.check,
+                      update=args.update_baselines)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

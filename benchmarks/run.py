@@ -15,7 +15,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 def main() -> None:
     from benchmarks import (async_throughput, elastic_scaling,
                             fig4_convergence, fig5_stragglers,
-                            fig6_scalability, fig7_ablation,
+                            fig6_scalability, fig7_ablation, perf_gate,
                             serve_throughput, sync_bytes, sync_overlap,
                             table2_throughput)
     print("name,us_per_call,derived")
@@ -26,6 +26,11 @@ def main() -> None:
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---", flush=True)
         mod.main()
+    # perf gate in record mode: every BENCH_<area>.json refreshed under the
+    # shared schema (the serve/async suites above are skipped — they just
+    # wrote their records).  ``--check`` against baselines is CI's job.
+    perf_gate.main(["--suite", "roofline", "--suite", "sync_overlap",
+                    "--suite", "sync_bytes", "--suite", "autotune"])
     # roofline summary (requires dry-run artifacts; skip gracefully)
     if os.path.isdir("results/dryrun") and os.listdir("results/dryrun"):
         n = len(glob.glob("results/dryrun/*__single.json"))

@@ -23,13 +23,12 @@ Rows:
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 
 import numpy as np
 
-from benchmarks.common import FAST, bench_model, emit
+from benchmarks.common import FAST, bench_model, emit, write_bench
 
 import jax                                   # noqa: E402
 import jax.numpy as jnp                      # noqa: E402
@@ -237,10 +236,7 @@ def main() -> None:
         print(f"# WARNING: {msg}", flush=True)
 
     report = bench_paged_vs_slotted(model, params)
-    out = os.path.join(os.path.dirname(__file__), "BENCH_serve.json")
-    with open(out, "w") as f:
-        json.dump(report, f, indent=2)
-        f.write("\n")
+    out = write_bench("serve", report)
     print(f"# paged vs slotted (equal {P2_BUDGET}-token HBM budget): "
           f"{report['speedup_tokens_per_s']:.2f}x tokens/s "
           f"-> {out}", flush=True)

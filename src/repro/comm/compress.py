@@ -61,12 +61,19 @@ class CommConfig:
     compressed exchange crosses groups (the slow inter-node links).
     ``stochastic``: stochastic rounding (False: round-to-nearest, biased —
     debugging only).
+    ``fused``: quantize-into-reduce — the int8 encode runs inside the
+    per-chunk combine (``kernels.pg_quant.pg_quant_msg``) so the fp32
+    message is never staged in HBM and compression overlaps the
+    inter-node exchange (the collective sits under the ``fused_qr`` HLO
+    scope).  Bit-identical to the staged path; False keeps the PR-5
+    two-stage pipeline (debug / A-B in the perf gate).
     """
     compressor: str = "none"
     chunk: int = 1024
     topk_frac: float = 0.01
     intra: int = 1
     stochastic: bool = True
+    fused: bool = True
 
     def __post_init__(self):
         if self.compressor not in _COMPRESSORS:

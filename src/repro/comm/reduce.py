@@ -36,7 +36,8 @@ import jax.numpy as jnp
 
 from repro.comm.compress import (FP8_QMAX, CommConfig, effective_chunking,
                                  fp8_quantize)
-from repro.kernels.ops import pg_dequant_op, pg_quant_op
+from repro.kernels.ops import (pg_dequant_op, pg_msg_absmax_op, pg_quant_msg_op,
+                               pg_quant_op)
 
 
 def int8_qmax(P: int) -> float:
@@ -58,11 +59,14 @@ def compressed_combine(delta, w, ef: Optional[jnp.ndarray],
     slow-link payload for telemetry.
     """
     L, R, N = delta.shape
+    Rd = comm.intra if (comm.intra > 1 and R % comm.intra == 0) else 1
+    P = R // Rd
+    if (comm.compressor == "int8" and getattr(comm, "fused", False)
+            and Rd == 1):
+        return _fused_int8_combine(delta, w, ef, comm, seed, impl=impl)
     u = delta * w[:, :, None]
     if ef is not None:
         u = u + ef.astype(jnp.float32)
-    Rd = comm.intra if (comm.intra > 1 and R % comm.intra == 0) else 1
-    P = R // Rd
     if Rd > 1:
         part = u.reshape(L, P, Rd, N).sum(axis=2)   # exact fp32 intra-node
     else:
@@ -109,3 +113,42 @@ def compressed_combine(delta, w, ef: Optional[jnp.ndarray],
     # hierarchical reduce: only one partial per node crosses the slow
     # links, so the per-replica slow-link payload divides by Rd
     return avg, new_ef, comm.wire_bytes(L, N) / Rd
+
+
+def _fused_int8_combine(delta, w, ef, comm: CommConfig, seed, *, impl: str
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray, float]:
+    """Quantize-into-reduce int8 path (``comm.fused``, flat hierarchy).
+
+    The staged pipeline above materializes ``u = w * x + e`` in HBM, takes
+    chunk maxima, then quantizes — three passes over R x N fp32 before a
+    single int8 byte exists.  Here the message is formed inside the
+    kernels (``pg_msg_absmax`` for the scale pass, ``pg_quant_msg`` for
+    the encode), so the only full-size fp32 traffic left before the
+    collective is the one read of delta/ef each pass, and the encode can
+    overlap the inter-node exchange it feeds.  The code-sum reduction —
+    the actual wire — runs under the ``fused_qr`` name scope: inside a
+    ``core.stream`` sync region the collective's HLO op_name becomes
+    ``edit_sync/<group>/fused_qr/...``, which
+    ``hlo_analysis.fused_qr_collective_bytes`` keys on (the no-byte-
+    regression assertion vs the staged path).
+
+    Values are bit-identical to the staged path: same elementwise op
+    order for u, same order-independent chunk maxima, same global SR
+    index stream, same dequants.  EF is ``u - dec`` exactly as before
+    (the u rebuild is elementwise and fuses into the subtract).
+    """
+    L, R, N = delta.shape
+    chunk, nch = effective_chunking(N, comm.chunk)
+    cmax = pg_msg_absmax_op(delta, w, ef, nch=nch, impl=impl)
+    scale = jnp.sum(cmax, axis=1)                             # (L, nch)
+    qmax = int8_qmax(R)
+    with jax.named_scope("fused_qr"):
+        codes = pg_quant_msg_op(delta, w, ef, scale, seed, qmax=qmax,
+                                stochastic=comm.stochastic, impl=impl)
+        csum = jnp.sum(codes, axis=1, dtype=jnp.int8)
+    avg = pg_dequant_op(csum[:, None, :], scale, qmax=qmax, impl=impl)[:, 0]
+    dec = pg_dequant_op(codes, scale, qmax=qmax, impl=impl)
+    u = delta * w[:, :, None]
+    if ef is not None:
+        u = u + ef.astype(jnp.float32)
+    return avg, u - dec, comm.wire_bytes(L, N)

@@ -12,11 +12,12 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ref
+from repro.kernels import autotune, ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.pg_penalty import (pg_combine, pg_combine_stacked,
                                       pg_sumsq, pg_sumsq_stacked)
-from repro.kernels.pg_quant import pg_dequant, pg_quant
+from repro.kernels.pg_quant import (pg_dequant, pg_msg_absmax, pg_quant,
+                                    pg_quant_msg)
 from repro.kernels.selective_scan import selective_scan
 
 
@@ -31,8 +32,10 @@ def attention_op(q, k, v, *, causal: bool = True, window: int = 0,
     if impl == "ref" or (impl == "auto" and not on_tpu()):
         return ref.attention_ref(q, k, v, causal=causal, window=window)
     interp = impl == "interpret"
+    bq, bk = autotune.attn_blocks(S=q.shape[2], T=k.shape[2],
+                                  hd=q.shape[3])
     return flash_attention(q, k, v, causal=causal, window=window,
-                           interpret=interp)
+                           block_q=bq, block_k=bk, interpret=interp)
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
@@ -45,18 +48,24 @@ def selective_scan_op(a, bx, C, *, impl: str = "auto"):
     return selective_scan(a, bx, C, interpret=interp)
 
 
-_PG_BLOCK_N = 4096
-
-
 def _pad_flat(delta):
-    """Zero-pad the flat dim of (L, R, N) to a multiple of the kernel block.
+    """Zero-pad the flat dim of (L, R, N) to a multiple of the kernel block
+    (block size from the autotune table, env-overridable — the old
+    ``_PG_BLOCK_N = 4096`` constant is now just the table-miss default).
     Zeros are exact no-ops for both sumsq and the weighted combine."""
-    N = delta.shape[-1]
-    bn = min(_PG_BLOCK_N, -(-N // 128) * 128)
+    L, R, N = delta.shape
+    block_n = autotune.pg_block_n(L=L, R=R, N=N)
+    bn = min(block_n, -(-N // 128) * 128)
     Np = -(-N // bn) * bn
     if Np != N:
         delta = jnp.pad(delta, ((0, 0), (0, 0), (0, Np - N)))
     return delta, bn
+
+
+def _quant_bc(shape, nch):
+    """Autotuned chunks-per-grid-step for the quantizer kernels."""
+    L, P, Np = shape
+    return autotune.quant_block_chunks(L=L, P=P, nch=nch, chunk=Np // nch)
 
 
 @functools.partial(jax.jit, static_argnames=("qmax", "stochastic", "impl"))
@@ -69,8 +78,9 @@ def pg_quant_op(u, scale, seed, *, qmax: float,
     use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
     interp = impl == "interpret" or not on_tpu()
     if use_kernel:
-        return pg_quant(u, scale, seed, qmax=qmax,
-                        stochastic=stochastic, interpret=interp)
+        return pg_quant(u, scale, seed, qmax=qmax, stochastic=stochastic,
+                        block_chunks=_quant_bc(u.shape, scale.shape[1]),
+                        interpret=interp)
     return ref.pg_quant_ref(u, scale, seed, qmax=qmax, stochastic=stochastic)
 
 
@@ -81,8 +91,43 @@ def pg_dequant_op(codes, scale, *, qmax: float, impl: str = "auto"):
     use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
     interp = impl == "interpret" or not on_tpu()
     if use_kernel:
-        return pg_dequant(codes, scale, qmax=qmax, interpret=interp)
+        return pg_dequant(codes, scale, qmax=qmax,
+                          block_chunks=_quant_bc(codes.shape,
+                                                 scale.shape[1]),
+                          interpret=interp)
     return ref.pg_dequant_ref(codes, scale, qmax=qmax)
+
+
+@functools.partial(jax.jit, static_argnames=("nch", "impl"))
+def pg_msg_absmax_op(x, w, e, *, nch: int, impl: str = "auto"):
+    """Per-chunk maxabs of the sync message ``u = w * x + e`` without
+    materializing u (fused quantize-into-reduce scale pass).  x/e:
+    (L, P, Np) fp32 (e may be None); w: (L, P).  Returns (L, P, nch)."""
+    use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
+    interp = impl == "interpret" or not on_tpu()
+    if use_kernel:
+        return pg_msg_absmax(x, w, e, nch=nch,
+                             block_chunks=_quant_bc(x.shape, nch),
+                             interpret=interp)
+    return ref.pg_msg_absmax_ref(x, w, e, nch=nch)
+
+
+@functools.partial(jax.jit, static_argnames=("qmax", "stochastic", "impl"))
+def pg_quant_msg_op(x, w, e, scale, seed, *, qmax: float,
+                    stochastic: bool = True, impl: str = "auto"):
+    """Fused message quantizer: int8 codes of ``w * x + e`` in one pass —
+    bit-identical to ``pg_quant_op`` on the staged message (the fused /
+    unfused differential in tests/test_comm.py)."""
+    use_kernel = impl == "interpret" or (impl != "ref" and on_tpu())
+    interp = impl == "interpret" or not on_tpu()
+    if use_kernel:
+        return pg_quant_msg(x, w, e, scale, seed, qmax=qmax,
+                            stochastic=stochastic,
+                            block_chunks=_quant_bc(x.shape,
+                                                   scale.shape[1]),
+                            interpret=interp)
+    return ref.pg_quant_msg_ref(x, w, e, scale, seed, qmax=qmax,
+                                stochastic=stochastic)
 
 
 @functools.partial(jax.jit, static_argnames=(

@@ -19,8 +19,20 @@ repeats, replica rows, flat params padded to a chunk multiple.  The
 replica axis stays a standalone array axis (merging it with L would stop
 GSPMD from sharding it over the replica mesh axes and force an fp32
 all-gather of the whole buffer).  The per-chunk scales are (L, Np/chunk),
-shared across P; the kernel block IS the chunk, so each grid step sees
-exactly one scale scalar in SMEM.
+shared across P.  ``block_chunks`` (autotuned — ``kernels.autotune``)
+sets how many scale chunks one grid step covers: the block is
+``block_chunks * chunk`` wide with the matching scale slice alongside,
+and the SR index stream stays the global element index, so codes are
+bit-identical across every legal ``block_chunks``.
+
+``pg_msg_absmax`` / ``pg_quant_msg`` are the fused quantize-into-reduce
+variants: they form the message ``u = w * x + e`` (Algorithm-2 weight
+times pseudo gradient plus error feedback) inside the kernel body, so the
+fp32 ``u`` is never materialized in HBM — the scale pass reads x/e once
+and writes only (L, P, nch) maxima, the encode pass reads x/e once and
+writes int8.  The elementwise order (mul, add, then quantize) matches the
+jnp composition bit-for-bit, which is what lets ``comm/reduce`` switch
+between fused and staged paths without changing a single code.
 """
 from __future__ import annotations
 
@@ -34,74 +46,204 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.ref import mix32, uniform01
 
 
-def _quant_kernel(seed_ref, u_ref, s_ref, o_ref, *, qmax, bn, nb, P,
+def _block_chunks(nch: int, block_chunks: int) -> int:
+    bc = max(1, int(block_chunks))
+    return bc if nch % bc == 0 else 1
+
+
+def _sr_codes(v, base, seed, *, stochastic):
+    """Shared SR body: v pre-scaled (bc, bn), base the global element index
+    of v[0, 0].  The index stream is row-major over v — the same contiguous
+    ``arange`` the jnp ref walks, whatever the blocking."""
+    if not stochastic:
+        return jnp.round(v)
+    bc, bn = v.shape
+    idx = (base
+           + jax.lax.broadcasted_iota(jnp.uint32, v.shape, 0) * jnp.uint32(bn)
+           + jax.lax.broadcasted_iota(jnp.uint32, v.shape, 1))
+    u01 = uniform01(mix32(idx, seed))
+    lo = jnp.floor(v)
+    return lo + (u01 < (v - lo)).astype(jnp.float32)
+
+
+def _quant_kernel(seed_ref, u_ref, s_ref, o_ref, *, qmax, bn, bc, nb, P,
                   stochastic):
     l = pl.program_id(0)
     p = pl.program_id(1)
     i = pl.program_id(2)
-    s = s_ref[0, 0]
-    v = u_ref[0].astype(jnp.float32) * (qmax / jnp.maximum(s, 1e-30))
-    v = jnp.clip(v, -qmax, qmax)                          # (1, bn)
-    if stochastic:
-        base = (((l * P + p) * nb + i) * bn).astype(jnp.uint32)
-        idx = base + jax.lax.broadcasted_iota(jnp.uint32, v.shape, 1)
-        u01 = uniform01(mix32(idx, seed_ref[0, 0]))
-        lo = jnp.floor(v)
-        code = lo + (u01 < (v - lo)).astype(jnp.float32)
-    else:
-        code = jnp.round(v)
-    o_ref[0] = code.astype(jnp.int8)
+    s = s_ref[...].reshape(bc, 1)                         # (bc, 1)
+    v = u_ref[0].reshape(bc, bn).astype(jnp.float32) \
+        * (qmax / jnp.maximum(s, 1e-30))
+    v = jnp.clip(v, -qmax, qmax)                          # (bc, bn)
+    base = (((l * P + p) * nb + i * bc) * bn).astype(jnp.uint32)
+    code = _sr_codes(v, base, seed_ref[0, 0], stochastic=stochastic)
+    o_ref[0] = code.astype(jnp.int8).reshape(1, bc * bn)
 
 
 def pg_quant(u, scale, seed, *, qmax: float, stochastic: bool = True,
-             interpret: bool = False):
+             block_chunks: int = 1, interpret: bool = False):
     """u: (L, P, Np) fp32; scale: (L, nch) with Np == nch * chunk.
     Returns int8 codes (L, P, Np); decode is ``codes * scale / qmax``.
-    One HBM read of u, one int8 write."""
+    One HBM read of u, one int8 write.  ``block_chunks`` chunks per grid
+    step (must divide nch); codes are bit-identical for every value."""
     L, P, Np = u.shape
     Ls, nch = scale.shape
     assert L == Ls and Np % nch == 0, (u.shape, scale.shape)
     bn = Np // nch
+    bc = _block_chunks(nch, block_chunks)
     seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
     return pl.pallas_call(
         lambda sd, ur, sr, orf: _quant_kernel(
-            sd, ur, sr, orf, qmax=qmax, bn=bn, nb=nch, P=P,
+            sd, ur, sr, orf, qmax=qmax, bn=bn, bc=bc, nb=nch, P=P,
             stochastic=stochastic),
-        grid=(L, P, nch),
+        grid=(L, P, nch // bc),
         in_specs=[
             pl.BlockSpec((1, 1), lambda l, p, i: (0, 0),
                          memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, bn), lambda l, p, i: (l, p, i)),
-            pl.BlockSpec((1, 1), lambda l, p, i: (l, i),
-                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)),
+            pl.BlockSpec((1, bc), lambda l, p, i: (l, i)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bn), lambda l, p, i: (l, p, i)),
+        out_specs=pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)),
         out_shape=jax.ShapeDtypeStruct((L, P, Np), jnp.int8),
         interpret=interpret,
     )(seed_arr, u, scale)
 
 
-def _dequant_kernel(c_ref, s_ref, o_ref, *, qmax):
-    s = s_ref[0, 0]
-    o_ref[0] = c_ref[0].astype(jnp.float32) * (s / qmax)
+def _dequant_kernel(c_ref, s_ref, o_ref, *, qmax, bn, bc):
+    s = s_ref[...].reshape(bc, 1)
+    c = c_ref[0].reshape(bc, bn).astype(jnp.float32)
+    o_ref[0] = (c * (s / qmax)).reshape(1, bc * bn)
 
 
-def pg_dequant(codes, scale, *, qmax: float, interpret: bool = False):
+def pg_dequant(codes, scale, *, qmax: float, block_chunks: int = 1,
+               interpret: bool = False):
     """codes: (L, M, Np) int8/int32 (M: replica rows, or 1 for the reduced
     sum) -> fp32 ``codes * scale / qmax``."""
     L, M, Np = codes.shape
     Ls, nch = scale.shape
     assert L == Ls and Np % nch == 0, (codes.shape, scale.shape)
     bn = Np // nch
+    bc = _block_chunks(nch, block_chunks)
     return pl.pallas_call(
-        lambda cr, sr, orf: _dequant_kernel(cr, sr, orf, qmax=qmax),
-        grid=(L, M, nch),
+        lambda cr, sr, orf: _dequant_kernel(cr, sr, orf, qmax=qmax, bn=bn,
+                                            bc=bc),
+        grid=(L, M, nch // bc),
         in_specs=[
-            pl.BlockSpec((1, 1, bn), lambda l, m, i: (l, m, i)),
-            pl.BlockSpec((1, 1), lambda l, m, i: (l, i),
-                         memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, bc * bn), lambda l, m, i: (l, m, i)),
+            pl.BlockSpec((1, bc), lambda l, m, i: (l, i)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bn), lambda l, m, i: (l, m, i)),
+        out_specs=pl.BlockSpec((1, 1, bc * bn), lambda l, m, i: (l, m, i)),
         out_shape=jax.ShapeDtypeStruct((L, M, Np), jnp.float32),
         interpret=interpret,
     )(codes, scale)
+
+
+# ---------------------------------------------------------------------------
+# Fused quantize-into-reduce: the message u = w * x + e is formed inside
+# the kernel, never written to HBM.
+# ---------------------------------------------------------------------------
+
+
+def _msg(x_ref, w_ref, e_ref, *, bn, bc):
+    """In-kernel message: (bc, bn) fp32 ``w * x (+ e)``.  Same op order as
+    the jnp composition in ``comm/reduce`` — mul, then add — so the fused
+    and staged paths agree bitwise."""
+    u = x_ref[0].reshape(bc, bn).astype(jnp.float32) * w_ref[0, 0]
+    if e_ref is not None:
+        u = u + e_ref[0].reshape(bc, bn).astype(jnp.float32)
+    return u
+
+
+def _msg_absmax_kernel(x_ref, w_ref, e_ref, o_ref, *, bn, bc):
+    u = _msg(x_ref, w_ref, e_ref, bn=bn, bc=bc)
+    o_ref[0, 0] = jnp.max(jnp.abs(u), axis=1)             # (bc,)
+
+
+def pg_msg_absmax(x, w, e, *, nch: int, block_chunks: int = 1,
+                  interpret: bool = False):
+    """Per-chunk maxabs of the message ``u = w * x + e`` without
+    materializing u.  x/e: (L, P, Np) fp32 (e may be None); w: (L, P).
+    Returns (L, P, nch); summing over P gives the shared quant scale."""
+    L, P, Np = x.shape
+    assert Np % nch == 0, (x.shape, nch)
+    bn = Np // nch
+    bc = _block_chunks(nch, block_chunks)
+    has_e = e is not None
+    in_specs = [
+        pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)),
+        pl.BlockSpec((1, 1), lambda l, p, i: (l, p),
+                     memory_space=pltpu.SMEM),
+    ]
+    args = [x, w]
+    if has_e:
+        in_specs.append(
+            pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)))
+        args.append(e)
+
+    def kern(xr, wr, *rest):
+        er, orf = (rest[0], rest[1]) if has_e else (None, rest[0])
+        _msg_absmax_kernel(xr, wr, er, orf, bn=bn, bc=bc)
+
+    return pl.pallas_call(
+        kern,
+        grid=(L, P, nch // bc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, bc), lambda l, p, i: (l, p, i)),
+        out_shape=jax.ShapeDtypeStruct((L, P, nch), jnp.float32),
+        interpret=interpret,
+    )(*args)
+
+
+def _quant_msg_kernel(seed_ref, x_ref, w_ref, s_ref, e_ref, o_ref, *,
+                      qmax, bn, bc, nb, P, stochastic):
+    l = pl.program_id(0)
+    p = pl.program_id(1)
+    i = pl.program_id(2)
+    u = _msg(x_ref, w_ref, e_ref, bn=bn, bc=bc)
+    s = s_ref[...].reshape(bc, 1)
+    v = jnp.clip(u * (qmax / jnp.maximum(s, 1e-30)), -qmax, qmax)
+    base = (((l * P + p) * nb + i * bc) * bn).astype(jnp.uint32)
+    code = _sr_codes(v, base, seed_ref[0, 0], stochastic=stochastic)
+    o_ref[0] = code.astype(jnp.int8).reshape(1, bc * bn)
+
+
+def pg_quant_msg(x, w, e, scale, seed, *, qmax: float,
+                 stochastic: bool = True, block_chunks: int = 1,
+                 interpret: bool = False):
+    """Fused message quantizer: int8 codes of ``w * x + e`` against the
+    shared per-chunk ``scale`` (L, nch), one read of x/e and one int8
+    write — bit-identical to ``pg_quant(w*x+e, ...)`` for every blocking."""
+    L, P, Np = x.shape
+    Ls, nch = scale.shape
+    assert L == Ls and Np % nch == 0, (x.shape, scale.shape)
+    bn = Np // nch
+    bc = _block_chunks(nch, block_chunks)
+    has_e = e is not None
+    seed_arr = jnp.asarray(seed, jnp.uint32).reshape(1, 1)
+    in_specs = [
+        pl.BlockSpec((1, 1), lambda l, p, i: (0, 0),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)),
+        pl.BlockSpec((1, 1), lambda l, p, i: (l, p),
+                     memory_space=pltpu.SMEM),
+        pl.BlockSpec((1, bc), lambda l, p, i: (l, i)),
+    ]
+    args = [seed_arr, x, w, scale]
+    if has_e:
+        in_specs.append(
+            pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)))
+        args.append(e)
+
+    def kern(sd, xr, wr, sr, *rest):
+        er, orf = (rest[0], rest[1]) if has_e else (None, rest[0])
+        _quant_msg_kernel(sd, xr, wr, sr, er, orf, qmax=qmax, bn=bn, bc=bc,
+                          nb=nch, P=P, stochastic=stochastic)
+
+    return pl.pallas_call(
+        kern,
+        grid=(L, P, nch // bc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, bc * bn), lambda l, p, i: (l, p, i)),
+        out_shape=jax.ShapeDtypeStruct((L, P, Np), jnp.int8),
+        interpret=interpret,
+    )(*args)

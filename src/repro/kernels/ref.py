@@ -162,3 +162,29 @@ def pg_dequant_ref(codes, scale, *, qmax: float):
     chunk = codes.shape[2] // scale.shape[1]
     s = jnp.repeat(scale, chunk, axis=1)[:, None, :]
     return codes.astype(jnp.float32) * (s / qmax)
+
+
+def _msg_ref(x, w, e):
+    """Message ``u = w * x + e`` with the op order the fused kernels use
+    (mul, then add) — keeps fused and staged paths bit-identical."""
+    u = x.astype(jnp.float32) * w.astype(jnp.float32)[:, :, None]
+    if e is not None:
+        u = u + e.astype(jnp.float32)
+    return u
+
+
+def pg_msg_absmax_ref(x, w, e, *, nch: int):
+    """jnp oracle of ``pg_quant.pg_msg_absmax``: per-chunk maxabs of the
+    message.  x/e: (L, P, Np); w: (L, P).  Returns (L, P, nch)."""
+    L, P, Np = x.shape
+    u = _msg_ref(x, w, e)
+    return jnp.max(jnp.abs(u).reshape(L, P, nch, Np // nch), axis=3)
+
+
+def pg_quant_msg_ref(x, w, e, scale, seed, *, qmax: float,
+                     stochastic: bool = True):
+    """jnp oracle of ``pg_quant.pg_quant_msg``: quantize the message
+    without a separate staging array (the jnp form still materializes u —
+    the fusion win is kernel-only; this pins the values)."""
+    return pg_quant_ref(_msg_ref(x, w, e), scale, seed, qmax=qmax,
+                        stochastic=stochastic)

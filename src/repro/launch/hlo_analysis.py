@@ -214,6 +214,37 @@ def sync_collective_bytes(hlo_text: str) -> Dict[str, Dict[str, int]]:
     return out
 
 
+def fused_qr_collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-class output bytes of the quantize-into-reduce collectives.
+
+    ``comm/reduce._fused_int8_combine`` wraps the code-sum reduction in
+    ``jax.named_scope('fused_qr')``; inside a streamed sync region the HLO
+    op_name is ``edit_sync/<group>/fused_qr/...`` (the group tag survives
+    for :func:`sync_collective_bytes` since tags key on the first path
+    component).  This collects the per-class bytes of every collective
+    whose op_name carries the ``fused_qr`` scope — the assertion surface
+    for "fusing the encode did not grow the wire".
+    """
+    out: Dict[str, int] = {c: 0 for c in _COLLECTIVES}
+    out["total"] = 0
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        if "-done" in ls or not _COLL_RE.search(ls):
+            continue
+        m = _OPNAME_RE.search(ls)
+        if not m or "fused_qr" not in m.group(1):
+            continue
+        md = _COLL_DEF_RE.match(ls)
+        if not md:
+            continue
+        b = _shape_bytes(md.group(1))
+        out[md.group(2)] += b
+        out["total"] += b
+        out["count"] += 1
+    return out
+
+
 def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
     """Assess the sync emission structure of a compiled train step.
 
@@ -223,6 +254,12 @@ def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
     forward compute) rather than one monolithic pre-forward block.
     ``n_sync_regions`` counts the distinct HLO computations holding sync
     collectives — per-group conds lower to separate branch computations.
+    ``overlap_fraction`` is the structural overlap opportunity: the share
+    of sync regions that are NOT serialized behind the whole step — with
+    one monolithic region nothing overlaps (0.0); with k independent
+    per-group regions all but the first-consumed one can run under
+    compute ((k-1)/k).  Deterministic from HLO structure, so the perf
+    gate can diff it on CPU.
     """
     comps = _split_computations(hlo_text)
     if not comps:
@@ -233,15 +270,20 @@ def sync_overlap_report(hlo_text: str) -> Dict[str, object]:
     for name, text in comps.items():
         if any(_sync_tag(line.strip()) for line in text.splitlines()):
             regions.add(name)
+    n_regions = len(regions)
     return {
         "tags": tags,
         "n_sync_tags": len(tags),
         "sync_collectives": sum(tags.values()),
-        "n_sync_regions": len(regions),
+        "n_sync_regions": n_regions,
         "streamed": len(tags) >= 2,
+        "overlap_fraction": ((n_regions - 1) / n_regions
+                             if n_regions else 0.0),
         # per-group per-class wire bytes (repro.comm attribution)
         "tag_bytes": tag_bytes,
         "sync_bytes": sum(d["total"] for d in tag_bytes.values()),
+        # quantize-into-reduce attribution (comm.fused)
+        "fused_qr_bytes": fused_qr_collective_bytes(hlo_text)["total"],
     }
 
 

@@ -142,11 +142,15 @@ def test_int8_code_sum_stays_in_wire_range():
 # Reduction + error feedback
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("comp,intra", [("int8", 1), ("int8", 2),
-                                        ("fp8", 1), ("topk", 1)])
-def test_combine_conserves_message_sum(comp, intra):
+@pytest.mark.parametrize("comp,intra,fused", [
+    ("int8", 1, True),       # quantize-into-reduce (the default)
+    ("int8", 1, False),      # PR-5 two-stage pipeline
+    ("int8", 2, True),       # hierarchical: fused flag inert when Rd > 1
+    ("fp8", 1, True), ("topk", 1, True)])
+def test_combine_conserves_message_sum(comp, intra, fused):
     """avg + sum(new_ef) == sum_r (w_r x_r + ef_r): compression defers
-    updates into the residual, it never loses them."""
+    updates into the residual, it never loses them — on the staged AND
+    the fused quantize-into-reduce paths."""
     L, R_, N = 2, 4, 300
     key = jax.random.PRNGKey(8)
     delta = jax.random.normal(key, (L, R_, N), jnp.float32)
@@ -154,7 +158,7 @@ def test_combine_conserves_message_sum(comp, intra):
                        axis=1)
     ef = 0.01 * jax.random.normal(jax.random.PRNGKey(10), (L, R_, N))
     comm = CommConfig(compressor=comp, chunk=128, intra=intra,
-                      topk_frac=0.1)
+                      topk_frac=0.1, fused=fused)
     avg, new_ef, wire = compressed_combine(delta, w, ef, comm,
                                            jnp.uint32(5), impl="ref")
     assert avg.shape == (L, N) and new_ef.shape == (L, R_, N)
@@ -164,6 +168,33 @@ def test_combine_conserves_message_sum(comp, intra):
     np.testing.assert_allclose(np.asarray(got), np.asarray(target),
                                atol=tol, rtol=tol)
     assert wire < L * N * 4                  # compressed vs fp32
+
+
+@pytest.mark.parametrize("impl", ["ref", "interpret"])
+@pytest.mark.parametrize("with_ef", [True, False])
+def test_fused_combine_bitwise_equals_staged(impl, with_ef):
+    """Quantize-into-reduce is a scheduling change, not a math change:
+    under jit (where XLA applies the same mul-add contraction to both
+    sides) the fused path's average AND residuals are bit-identical to
+    the two-stage encode-then-reduce pipeline."""
+    L, R_, N = 2, 4, 640
+    delta = jax.random.normal(jax.random.PRNGKey(21), (L, R_, N))
+    w = jax.nn.softmax(jax.random.normal(jax.random.PRNGKey(22), (L, R_)),
+                       axis=1)
+    ef = (0.01 * jax.random.normal(jax.random.PRNGKey(23), (L, R_, N))
+          if with_ef else None)
+    outs = {}
+    for fused in (True, False):
+        comm = CommConfig(compressor="int8", chunk=128, fused=fused)
+        fn = jax.jit(compressed_combine,
+                     static_argnames=("comm", "impl"))
+        avg, new_ef, wire = fn(delta, w, ef, comm, jnp.uint32(5), impl=impl)
+        outs[fused] = (avg, new_ef, wire)
+    np.testing.assert_array_equal(np.asarray(outs[True][0]),
+                                  np.asarray(outs[False][0]))
+    np.testing.assert_array_equal(np.asarray(outs[True][1]),
+                                  np.asarray(outs[False][1]))
+    assert outs[True][2] == outs[False][2]   # same wire bytes
 
 
 def test_hierarchical_reduce_matches_flat_and_splits_ef():
@@ -272,13 +303,15 @@ def test_none_compressor_bit_identical(model, name):
             assert float(m["comp_ratio"]) in (0.0, 1.0)
 
 
-def test_int8_streamed_equals_monolithic(model):
+@pytest.mark.parametrize("fused", [True, False])
+def test_int8_streamed_equals_monolithic(model, fused):
     """SR seeds are a pure function of (group, sync round), so the
     compressed streamed pipeline and the monolithic oracle quantize
-    bit-identically."""
+    bit-identically — with the encode fused into the reduce or staged."""
     strat = Strategy(name="edit", replicas=R, sync_interval=TAU,
                      warmup_steps=WARMUP,
-                     comm=CommConfig(compressor="int8", chunk=256))
+                     comm=CommConfig(compressor="int8", chunk=256,
+                                     fused=fused))
     s_str, m_str = _run_pipeline(model, strat, streamed=True)
     s_mono, _ = _run_pipeline(model, strat, streamed=False)
     assert sum(float(m["synced"]) for m in m_str) >= 3
@@ -386,8 +419,11 @@ model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
 opt = AdamW()
 out = {}
 with jax.set_mesh(mesh), use_policy(TRAIN_POLICY):
-    for name in ("none", "int8"):
-        comm = CommConfig(compressor=name) if name != "none" else CommConfig()
+    for name in ("none", "int8", "int8_staged"):
+        comm = {"none": CommConfig(),
+                "int8": CommConfig(compressor="int8"),
+                "int8_staged": CommConfig(compressor="int8", fused=False),
+                }[name]
         strat = Strategy(name="edit", replicas=4, sync_interval=2,
                          warmup_steps=0, comm=comm)
         state = jax.eval_shape(lambda k: init_train_state(model, strat, opt, k),
@@ -422,11 +458,18 @@ def test_int8_cuts_tagged_collective_bytes_3x_in_hlo():
     assert out.returncode == 0, out.stderr[-2000:]
     reports = _json.loads(out.stdout.split("REPORTS", 1)[1].strip())
     none, int8 = reports["none"], reports["int8"]
-    assert none["streamed"] and int8["streamed"]
+    staged = reports["int8_staged"]
+    assert none["streamed"] and int8["streamed"] and staged["streamed"]
     assert set(int8["tag_bytes"]) == set(none["tag_bytes"])
     assert none["sync_bytes"] >= 3 * int8["sync_bytes"], reports
     for tag, d in none["tag_bytes"].items():
         assert d["total"] >= 3 * int8["tag_bytes"][tag]["total"], tag
+    # quantize-into-reduce: the default int8 path carries the fused_qr
+    # scope on its code-sum collectives, the staged pipeline does not,
+    # and fusing must not grow the tagged wire vs the two-stage path
+    assert int8["fused_qr_bytes"] > 0, int8
+    assert staged["fused_qr_bytes"] == 0, staged
+    assert int8["sync_bytes"] <= staged["sync_bytes"], (int8, staged)
 
 
 def test_consolidate_flush_equals_exact_sync_plus_residuals(model):
