@@ -181,6 +181,16 @@ def paged_attention_impl(*, B: int, ps: int, hd: int) -> str:
                           defaults=default)["impl"])
 
 
+def paged_verify_impl(*, B: int, W: int, ps: int, hd: int) -> str:
+    """Dispatch choice for the ragged multi-query verify kernel
+    (speculative decoding); buckets additionally on the speculation
+    window W since it sets the kernel's VMEM footprint."""
+    default = {"impl": "pallas" if backend() == "tpu" else "ref"}
+    return str(params_for("paged_verify",
+                          {"B": B, "W": W, "ps": ps, "hd": hd},
+                          defaults=default)["impl"])
+
+
 # ---------------------------------------------------------------------------
 # Kernel registry for the tuner
 # ---------------------------------------------------------------------------
@@ -389,6 +399,45 @@ def _paged_cost(dims, params):
     return float(bytes_moved), steps
 
 
+def _verify_inputs(dims):
+    import jax
+    import jax.numpy as jnp
+    B, H, Kv, hd = dims["B"], dims.get("H", 4), dims.get("Kv", 2), dims["hd"]
+    W, ps, nb = dims["W"], dims["ps"], dims.get("nb", 4)
+    n_pages = 1 + B * nb
+    ks = jax.random.split(jax.random.PRNGKey(4), 4)
+    q = jax.random.normal(ks[0], (B, W, H, hd), jnp.float32)
+    ka = jax.random.normal(ks[1], (n_pages, ps, Kv, hd), jnp.float32)
+    va = jax.random.normal(ks[2], (n_pages, ps, Kv, hd), jnp.float32)
+    table = (jnp.arange(B * nb, dtype=jnp.int32).reshape(B, nb) + 1)
+    # ragged: every slot starts mid-sequence with a different live window
+    q_starts = jnp.asarray([(nb * ps - W) // 2 + (b % 3) for b in range(B)],
+                           jnp.int32)
+    q_lens = jnp.asarray([1 + b % W for b in range(B)], jnp.int32)
+    return q, ka, va, table, q_starts, q_lens
+
+
+def _run_verify(inputs, params, interpret):
+    from repro.kernels.paged_attention import paged_verify
+    impl = str(params["impl"])
+    if impl == "pallas" and interpret:
+        impl = "interpret"
+    return paged_verify(*inputs, impl=impl)
+
+
+def _ref_verify(inputs):
+    from repro.kernels import ref
+    return ref.paged_verify_ref(*inputs)
+
+
+def _verify_cost(dims, params):
+    B, H, Kv, hd = dims["B"], dims.get("H", 4), dims.get("Kv", 2), dims["hd"]
+    W, ps, nb = dims["W"], dims["ps"], dims.get("nb", 4)
+    bytes_moved = B * nb * ps * Kv * hd * 8 + B * W * H * hd * 8
+    steps = float(B * nb) if params["impl"] in ("pallas", "interpret") else 1.0
+    return float(bytes_moved), steps
+
+
 KERNELS: Dict[str, KernelSpec] = {
     "pg_sumsq": KernelSpec(
         "pg_sumsq", {"block_n": 4096},
@@ -417,6 +466,12 @@ KERNELS: Dict[str, KernelSpec] = {
         if backend() != "tpu" else [{"impl": "pallas"}, {"impl": "ref"}],
         _paged_inputs, _run_paged, _ref_paged,
         bitwise=False, cost_dims=_paged_cost),
+    "paged_verify": KernelSpec(
+        "paged_verify", {"impl": "ref"},
+        lambda dims: [{"impl": "ref"}, {"impl": "interpret"}]
+        if backend() != "tpu" else [{"impl": "pallas"}, {"impl": "ref"}],
+        _verify_inputs, _run_verify, _ref_verify,
+        bitwise=False, cost_dims=_verify_cost),
 }
 
 

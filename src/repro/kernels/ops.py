@@ -39,6 +39,24 @@ def attention_op(q, k, v, *, causal: bool = True, window: int = 0,
 
 
 @functools.partial(jax.jit, static_argnames=("impl",))
+def paged_verify_op(q, k_arena, v_arena, page_table, q_starts, q_lens, *,
+                    impl: str = "auto"):
+    """Ragged multi-query paged verify (speculative decoding hot path).
+    q: (B,W,H,hd) — W speculated query lanes per sequence, the first
+    ``q_lens[b]`` real, lane w at absolute position ``q_starts[b] +
+    min(w, q_lens[b]-1)``; k/v_arena: (P,ps,Kv,hd); page_table: (B,NB).
+    ``impl='auto'`` resolves through the autotune table
+    (``paged_verify_impl``): pallas on TPU, the jnp gather ref elsewhere."""
+    from repro.kernels.paged_attention import paged_verify
+    if impl == "auto":
+        impl = autotune.paged_verify_impl(
+            B=q.shape[0], W=q.shape[1], ps=k_arena.shape[1],
+            hd=q.shape[3])
+    return paged_verify(q, k_arena, v_arena, page_table, q_starts, q_lens,
+                        impl=impl)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
 def selective_scan_op(a, bx, C, *, impl: str = "auto"):
     if impl == "ref" or (impl == "auto" and not on_tpu()):
         B, S, mi, st = a.shape

@@ -132,3 +132,109 @@ def paged_attention(q, k_arena, v_arena, page_table, lengths, *,
                                      lengths)
     return paged_attention_kernel(q, k_arena, v_arena, page_table, lengths,
                                   interpret=(impl == "interpret"))
+
+
+# ---------------------------------------------------------------------------
+# Ragged multi-query verify kernel (speculative decoding, DESIGN.md §18)
+# ---------------------------------------------------------------------------
+
+def _paged_verify_kernel(table_ref, q_starts_ref, q_lens_ref, q_ref, k_ref,
+                         v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                         scale: float, page_size: int, nb: int):
+    """Like :func:`_paged_kernel` but with W query lanes per sequence.
+
+    Lane ``w`` sits at absolute position ``q_starts[b] + min(w,
+    q_lens[b] - 1)`` and attends causally up to it — per-slot ragged
+    query lengths arrive via scalar prefetch, and the min() clamp makes
+    padding lanes recompute the last valid lane instead of reading KV
+    past the sequence (bounded, finite, discarded by the caller)."""
+    b = pl.program_id(0)          # sequence
+    j = pl.program_id(1)          # logical block (page index in the table)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32)             # (Kv, G, W, hd)
+    k = k_ref[0].astype(jnp.float32)             # (ps, Kv, hd)
+    v = v_ref[0].astype(jnp.float32)
+    # (Kv, G, W, hd) x (ps, Kv, hd) -> (Kv, G, W, ps)
+    s = jax.lax.dot_general(
+        q, k, (((3,), (2,)), ((0,), (1,)))) * scale
+    k_pos = j * page_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+    lane = jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+    q_pos = q_starts_ref[b] + jnp.minimum(lane, q_lens_ref[b] - 1)
+    s = jnp.where(k_pos <= q_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=3))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=3)
+    m_scr[...] = m_new
+    # (Kv, G, W, ps) x (ps, Kv, hd) -> (Kv, G, W, hd)
+    acc_scr[...] = (acc_scr[...] * corr[..., None]
+                    + jax.lax.dot_general(
+                        p, v, (((3,), (0,)), ((0,), (1,)))))
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+def paged_verify_kernel(q, k_arena, v_arena, page_table, q_starts, q_lens,
+                        *, interpret: bool = False):
+    """q: (B, W, H, hd) — W speculated query tokens per sequence, the
+    first ``q_lens[b]`` lanes real; k/v_arena: (P, ps, Kv, hd);
+    page_table: (B, NB); q_starts: (B,) absolute position of lane 0;
+    q_lens: (B,) valid lanes (>= 1).  Returns (B, W, H, hd)."""
+    B, W, H, hd = q.shape
+    P, ps, Kv, _ = k_arena.shape
+    NB = page_table.shape[1]
+    G = H // Kv
+    qg = q.reshape(B, W, Kv, G, hd).transpose(0, 2, 3, 1, 4)
+    scale = hd ** -0.5
+
+    kernel = functools.partial(_paged_verify_kernel, scale=scale,
+                               page_size=ps, nb=NB)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,     # page_table, q_starts, q_lens
+        grid=(B, NB),
+        in_specs=[
+            pl.BlockSpec((1, Kv, G, W, hd),
+                         lambda b, j, pt, qs, ql: (b, 0, 0, 0, 0)),
+            pl.BlockSpec((1, ps, Kv, hd),
+                         lambda b, j, pt, qs, ql: (pt[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, ps, Kv, hd),
+                         lambda b, j, pt, qs, ql: (pt[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Kv, G, W, hd),
+                               lambda b, j, pt, qs, ql: (b, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Kv, G, W), jnp.float32),       # m (running max)
+            pltpu.VMEM((Kv, G, W), jnp.float32),       # l (running sum)
+            pltpu.VMEM((Kv, G, W, hd), jnp.float32),   # output accumulator
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Kv, G, W, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), q_starts.astype(jnp.int32),
+      q_lens.astype(jnp.int32), qg, k_arena, v_arena)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, W, H, hd)
+
+
+def paged_verify(q, k_arena, v_arena, page_table, q_starts, q_lens, *,
+                 impl: str = "ref"):
+    """Dispatcher for the ragged verify kernel: ``impl`` in {'ref',
+    'interpret', 'pallas'}, same contract as :func:`paged_attention`."""
+    if impl == "ref":
+        return R.paged_verify_ref(q, k_arena, v_arena, page_table,
+                                  q_starts, q_lens)
+    return paged_verify_kernel(q, k_arena, v_arena, page_table, q_starts,
+                               q_lens, interpret=(impl == "interpret"))

@@ -70,6 +70,59 @@ def paged_attention_ref(q, k_arena, v_arena, page_table, lengths):
     return out.reshape(B, H, hd).astype(q.dtype)
 
 
+def paged_verify_ref(q, k_arena, v_arena, page_table, q_starts, q_lens):
+    """jnp gather oracle for the ragged multi-query paged verify kernel.
+
+    q: (B, W, H, hd) — a fixed speculation window of W query tokens per
+    sequence, of which only the first ``q_lens[b]`` lanes are real (the
+    rest are padding that recomputes the last valid lane); k/v_arena:
+    (P, ps, Kv, hd) page arenas; page_table: (B, NB); q_starts: (B,)
+    absolute position of lane 0; q_lens: (B,) valid query lanes (>= 1).
+
+    Lane ``w`` attends causally up to absolute position
+    ``q_starts[b] + min(w, q_lens[b] - 1)`` — the clamp is what makes
+    padding lanes well-defined without reading garbage KV.  Same block
+    order / fp32 casts / -1e30 masking as the Pallas kernel body, so
+    interpret-mode kernel output matches this bitwise.
+    """
+    B, W, H, hd = q.shape
+    ps, Kv = k_arena.shape[1], k_arena.shape[2]
+    NB = page_table.shape[1]
+    G = H // Kv
+    scale = hd ** -0.5
+    qg = q.reshape(B, W, Kv, G, hd).transpose(0, 2, 3, 1, 4)  # (B,Kv,G,W,hd)
+    qg = qg.astype(jnp.float32)
+
+    def body(carry, j):
+        m, l, acc = carry
+        pages = page_table[:, j]
+        k = k_arena[pages].astype(jnp.float32)        # (B, ps, Kv, hd)
+        v = v_arena[pages].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            qg, k, (((4,), (3,)), ((0, 1), (0, 2)))) * scale  # (B,Kv,G,W,ps)
+        k_pos = j * ps + jax.lax.broadcasted_iota(jnp.int32, s.shape, 4)
+        lane = jax.lax.broadcasted_iota(jnp.int32, s.shape, 3)
+        q_pos = (q_starts[:, None, None, None, None]
+                 + jnp.minimum(lane,
+                               (q_lens - 1)[:, None, None, None, None]))
+        s = jnp.where(k_pos <= q_pos, s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=4))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=4)
+        acc = (acc * corr[..., None]
+               + jax.lax.dot_general(
+                   p, v, (((4,), (1,)), ((0, 1), (0, 2)))))
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, Kv, G, W), -1e30, jnp.float32)
+    l0 = jnp.zeros((B, Kv, G, W), jnp.float32)
+    a0 = jnp.zeros((B, Kv, G, W, hd), jnp.float32)
+    (_, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(NB))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, Kv, G, W, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, W, H, hd).astype(q.dtype)
+
+
 def selective_scan_ref(a, bx, C, h0):
     """Sequential oracle for the SSM recurrence.
     a, bx: (B,S,mi,st); C: (B,S,st); h0: (B,mi,st).

@@ -217,6 +217,15 @@ def paged_cache_specs(cache, cfg, mesh):
         treedef, [spec_for(p, l) for p, l in flat])
 
 
+def draft_cache_specs(cache, cfg, mesh):
+    """Speculative-decoding draft arena (DESIGN.md §18): the draft model's
+    page arena has the same leaf layout as the target's — one global page
+    address space, feature dim tensor-parallel over 'model' — so it shards
+    by the same rule.  ``cfg`` is the DRAFT config; kept as a named entry
+    point so launch code states which arena it is sharding."""
+    return paged_cache_specs(cache, cfg, mesh)
+
+
 def serve_batch_specs(batch, cfg, mesh, global_batch: int):
     rep = replica_axes(mesh)
     rep_n = 1

@@ -335,6 +335,36 @@ def attn_prefill_paged(p, x, cache, table, positions, cfg, valid=None):
     return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
 
 
+def attn_verify_paged(p, x, cache, table, positions, q_lens, cfg, *,
+                      attn_impl="ref"):
+    """Speculative multi-token verify: x (B,W,d) holds the current token
+    plus the drafted window at absolute ``positions`` (B,W); only the
+    first ``q_lens[b]`` lanes are real — padding lanes carry clamped
+    positions (repeats of the last valid lane) and their k/v writes are
+    masked to the null page.  Attends causally over the gathered pages
+    through the ragged :func:`repro.kernels.paged_attention.paged_verify`
+    kernel (or the 'exact' gather + full-softmax path)."""
+    from repro.kernels.paged_attention import paged_verify
+    W = x.shape[1]
+    q, k_new, v_new = _qkv(p, x, cfg, positions)
+    valid = jnp.arange(W)[None, :] < q_lens[:, None]
+    k = paged_scatter(cache["k"], k_new, table, positions, valid)
+    v = paged_scatter(cache["v"], v_new, table, positions, valid)
+    k, v = hint(k, "cache"), hint(v, "cache")
+    if attn_impl == "exact":
+        kg = paged_gather(k, table).astype(x.dtype)   # (B, L, Kv, hd)
+        vg = paged_gather(v, table).astype(x.dtype)
+        L = kg.shape[1]
+        k_pos = jnp.arange(L)[None, None, None, None, :]
+        q_pos = positions[:, None, None, :, None]
+        out = _sdpa(q, kg, vg, k_pos <= q_pos, cfg)
+    else:
+        out = paged_verify(q, k, v, table, positions[:, 0], q_lens,
+                           impl=attn_impl)
+        out = out.reshape(x.shape[0], W, -1)
+    return out @ p["wo"].astype(x.dtype), {"k": k, "v": v}
+
+
 # ---------------------------------------------------------------------------
 # MLPs
 # ---------------------------------------------------------------------------

@@ -179,6 +179,41 @@ def mla_decode_paged(p, x, cache, pos, table, cfg):
     return out @ p["wo"].astype(x.dtype), {"c_kv": c_arena, "k_rope": kr_arena}
 
 
+def mla_verify_paged(p, x, cache, table, positions, q_lens, cfg):
+    """Speculative multi-token verify for MLA: the absorbed latent decode
+    arithmetic of :func:`mla_decode_paged` generalized to W query lanes.
+    x: (B,W,d) current token + drafted window at absolute ``positions``
+    (B,W); only the first ``q_lens[b]`` lanes are real (padding lanes
+    carry clamped positions and their latent writes are masked to the
+    null page).  Lane w attends causally up to ``positions[b, w]``."""
+    m = cfg.mla
+    B, W, _ = x.shape
+    H = cfg.n_heads
+    q_nope, q_rope, c_new, kr_new = _compress(p, x, cfg, positions)
+    lane_ok = jnp.arange(W)[None, :] < q_lens[:, None]
+    c_arena = paged_scatter(cache["c_kv"], c_new, table, positions, lane_ok)
+    kr_arena = paged_scatter(cache["k_rope"], kr_new, table, positions,
+                             lane_ok)
+    c_arena, kr_arena = hint(c_arena, "cache"), hint(kr_arena, "cache")
+    c_kv = paged_gather(c_arena, table)               # (B, L, r)
+    k_rope = paged_gather(kr_arena, table)            # (B, L, rr)
+    L = c_kv.shape[1]
+    wk_b = p["wk_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bqhc,khc->bqhk", q_nope, wk_b)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    s = jnp.einsum("bqhk,btk->bhqt", q_lat, c_kv).astype(jnp.float32)
+    s += jnp.einsum("bqhr,btr->bhqt", q_rope, k_rope).astype(jnp.float32)
+    s *= scale
+    valid = jnp.arange(L)[None, :] <= positions[:, :, None]    # (B, W, L)
+    s = jnp.where(valid[:, None], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1).astype(x.dtype)
+    lat = jnp.einsum("bhqt,btk->bqhk", w, c_kv)
+    wv_b = p["wv_b"].astype(x.dtype).reshape(m.kv_lora_rank, H, m.v_head_dim)
+    out = jnp.einsum("bqhk,khv->bqhv", lat, wv_b)
+    out = out.reshape(B, W, H * m.v_head_dim)
+    return out @ p["wo"].astype(x.dtype), {"c_kv": c_arena, "k_rope": kr_arena}
+
+
 def mla_prefill_paged(p, x, cache, table, positions, cfg, valid=None):
     """Chunked prefill for MLA: scatter the chunk's latent into the page
     arenas, decompress K/V from ALL gathered pages (earlier chunks

@@ -80,6 +80,7 @@ class Model:
     init_paged_cache: Optional[Callable] = None
     prefill_chunk: Optional[Callable] = None
     decode_paged: Optional[Callable] = None
+    verify_paged: Optional[Callable] = None
 
 
 def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
@@ -283,6 +284,24 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
         logits = hint(_logits_head(params, h), "logits")
         return logits, cache
 
+    def verify_paged(params, cache, tokens, positions, table, q_lens):
+        """Speculative verification (DESIGN.md §18): one forward over the
+        fixed window ``tokens`` (B,W) = [current, draft_1..k, pad...] at
+        absolute ``positions`` (B,W).  ``q_lens`` (B,) counts the real
+        lanes (k+1; inactive rows pass 1 with an all-null table); padding
+        lanes must carry clamped positions (repeats of the last real
+        lane).  Returns logits for EVERY lane (B,W,V) — the engine scores
+        all k+1 candidate continuations in one target forward — plus the
+        cache with the window's k/v written (the engine rolls pages past
+        the accepted point back)."""
+        x = hint(_embed(params, tokens, compute_dtype), "act")
+        h, cache = T.stack_verify_paged(params["blocks"], cache, x, cfg,
+                                        positions, q_lens, table,
+                                        attn_impl=paged_attn_impl)
+        h = L.rms_norm(h, params["final_norm"], cfg.norm_eps)
+        logits = hint(_logits_head(params, h), "logits")
+        return logits, cache
+
     # -- dry-run input specs ----------------------------------------------------
     def input_specs(shape_cfg) -> Dict[str, Any]:
         S, GB = shape_cfg.seq_len, shape_cfg.global_batch
@@ -316,4 +335,5 @@ def build_model(cfg, *, param_dtype=jnp.float32, compute_dtype=jnp.bfloat16,
                  input_specs=input_specs,
                  init_paged_cache=init_paged_cache if pageable else None,
                  prefill_chunk=prefill_chunk if pageable else None,
-                 decode_paged=decode_paged if pageable else None)
+                 decode_paged=decode_paged if pageable else None,
+                 verify_paged=verify_paged if pageable else None)

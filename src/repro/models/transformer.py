@@ -268,6 +268,33 @@ def layer_prefill_paged(p, prog, x, cfg, positions, cache, table,
     return hint(x, "act"), {"self": new_self}
 
 
+def layer_verify_paged(p, prog, x, cfg, positions, q_lens, cache, table, *,
+                       attn_impl="ref"):
+    """Speculative multi-token verify of one layer against page arenas.
+    x: (B,W,d) — the current token plus drafted window at absolute
+    ``positions`` (B,W), of which the first ``q_lens[b]`` lanes are real.
+    Returns (x for every lane, new_cache)."""
+    h = L.rms_norm(x, p["norm1"], cfg.norm_eps)
+    if prog.mixer == "attn":
+        mix, new_self = L.attn_verify_paged(p["mixer"], h, cache["self"],
+                                            table, positions, q_lens, cfg,
+                                            attn_impl=attn_impl)
+    elif prog.mixer == "mla":
+        mix, new_self = MLA.mla_verify_paged(p["mixer"], h, cache["self"],
+                                             table, positions, q_lens, cfg)
+    else:
+        raise ValueError(prog.mixer)
+    x = x + hint(mix, "act")
+    if prog.ffn != "none":
+        h = L.rms_norm(x, p["norm2"], cfg.norm_eps)
+        if prog.ffn == "moe":
+            f, _ = MOE.moe_forward(p["ffn"], h, cfg, train=False)
+        else:
+            f = L.mlp_forward(p["ffn"], h, cfg.activation)
+        x = x + hint(f, "act")
+    return hint(x, "act"), {"self": new_self}
+
+
 def layer_decode_paged(p, prog, x, cfg, cache, pos, table, *,
                        attn_impl="ref"):
     """One-token decode against page arenas.  Returns (x, new_cache)."""
@@ -423,6 +450,35 @@ def stack_decode_paged(stack_params, cache, x, cfg, pos, table, *,
                 for prog, lp, lc in zip(_seg.programs, rep_params, rep_cache):
                     h, nc = layer_decode_paged(lp, prog, h, cfg, lc, pos,
                                                table, attn_impl=attn_impl)
+                    ncs.append(nc)
+                return h, ncs
+
+            x, nc_stacked = jax.lax.scan(body, x, (seg_p, seg_c))
+            new_cache.append(nc_stacked)
+    return x, new_cache
+
+
+def stack_verify_paged(stack_params, cache, x, cfg, positions, q_lens,
+                       table, *, attn_impl="ref"):
+    segs = plan_segments(cfg)
+    new_cache = []
+    for seg, seg_p, seg_c in zip(segs, stack_params, cache):
+        if seg.kind == "unroll":
+            ncs = []
+            for prog, lp, lc in zip(seg.programs, seg_p, seg_c):
+                x, nc = layer_verify_paged(lp, prog, x, cfg, positions,
+                                           q_lens, lc, table,
+                                           attn_impl=attn_impl)
+                ncs.append(nc)
+            new_cache.append(ncs)
+        else:
+            def body(h, rep, _seg=seg):
+                rep_params, rep_cache = rep
+                ncs = []
+                for prog, lp, lc in zip(_seg.programs, rep_params, rep_cache):
+                    h, nc = layer_verify_paged(lp, prog, h, cfg, positions,
+                                               q_lens, lc, table,
+                                               attn_impl=attn_impl)
                     ncs.append(nc)
                 return h, ncs
 

@@ -4,3 +4,5 @@ from repro.serve.engine import (ContinuousConfig, ContinuousEngine, Engine,
                                 ServeConfig, consolidated_params)
 from repro.serve.scheduler import (PagedScheduler, Request, RequestQueue,
                                    Scheduler)
+from repro.serve.spec import (AdaptiveSpecController, DraftEngine, SpecConfig,
+                              SpeculativeEngine)

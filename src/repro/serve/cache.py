@@ -149,7 +149,7 @@ class PagedKVPool:
         self._slot_reserve = np.zeros((max_slots,), np.int32)
         self._copy = jax.jit(page_copy, donate_argnums=(0,))
         self.stats = {"cow_copies": 0, "evictions": 0, "prefix_hits": 0,
-                      "shared_tokens": 0}
+                      "shared_tokens": 0, "rollback_pages": 0}
 
     # -- compatibility with the slotted Scheduler arithmetic ---------------
     @property
@@ -172,6 +172,11 @@ class PagedKVPool:
 
     def alloc_slot(self) -> Optional[int]:
         return self._free_slots.pop() if self._free_slots else None
+
+    def claim_slot(self, slot: int) -> None:
+        """Claim a SPECIFIC free slot — the speculative draft pool mirrors
+        the target pool's slot assignment so one index addresses both."""
+        self._free_slots.remove(slot)
 
     def _alloc_page(self) -> int:
         pid = self._free_pages.pop()
@@ -357,6 +362,41 @@ class PagedKVPool:
         self._slot_reserve[slot] -= 1
         self.reserved -= 1
         return self._alloc_page()
+
+    # -- speculative rollback (DESIGN.md §18) --------------------------------
+
+    def rollback(self, slot: int, n_tokens: int) -> int:
+        """Rewind ``slot`` so only its first ``n_tokens`` positions are
+        valid, freeing pages grown for speculated positions past the
+        accepted point.  ``n_tokens`` must be >= 1 and must not cut into
+        blocks that can be shared (the engine only ever rolls back past
+        the accepted decode point, which is beyond the prompt, so every
+        freed page is private decode growth with refcount 1 — rolling
+        back into registered-prefix pages is a caller bug).  Freed pages
+        return to the slot's reservation (``grow_for`` drew them from
+        it), so re-growth over the same blocks cannot fail.  Returns the
+        number of pages freed."""
+        assert n_tokens >= 1, n_tokens
+        last_blk = (n_tokens - 1) // self.page_size
+        freed = 0
+        for blk in range(last_blk + 1, self.max_pages):
+            pid = int(self.page_table[slot, blk])
+            if pid == 0:
+                continue
+            assert self.refcount[pid] == 1, (
+                f"rollback of slot {slot} would free shared page {pid} "
+                f"(refcount {self.refcount[pid]}) — rolled back into the "
+                f"prompt/prefix region?")
+            self.page_table[slot, blk] = 0
+            self._unref(pid)
+            freed += 1
+        self.reserved += freed
+        self._slot_reserve[slot] += freed
+        self.positions[slot] = n_tokens
+        if freed:
+            self.stats["rollback_pages"] = (
+                self.stats.get("rollback_pages", 0) + freed)
+        return freed
 
     # -- retirement ----------------------------------------------------------
 

@@ -33,8 +33,8 @@ from repro.serve.scheduler import (PagedScheduler, Request, RequestQueue,
                                    Scheduler)
 
 
-@jax.jit
-def _batched_sample(logits, keys, temps):
+@functools.partial(jax.jit, static_argnames=("first",))
+def _batched_sample(logits, keys, temps, first=False):
     """One jitted sampling step for ALL slots: split every slot's key,
     sample categorical (or argmax for temp<=0) per row, return (tokens,
     next keys).  Bit-identical per slot to the per-slot chain
@@ -42,10 +42,18 @@ def _batched_sample(logits, keys, temps):
     to the same per-key stream and `categorical` draws the same bits for
     a (V,) row as for a (1, V) one.
 
+    ``first=True`` is the admission-time variant: the FIRST token of a
+    request draws with its root key directly (no split) and the key is
+    returned unchanged, matching ``OneShotEngine``'s very first sample so
+    the seeded per-request streams stay bit-identical.
+
     logits: (S, V); keys: (S, 2) uint32; temps: (S,) fp32.
     """
-    splits = jax.vmap(jax.random.split)(keys)      # (S, 2, 2)
-    next_keys, use_keys = splits[:, 0], splits[:, 1]
+    if first:
+        next_keys, use_keys = keys, keys
+    else:
+        splits = jax.vmap(jax.random.split)(keys)  # (S, 2, 2)
+        next_keys, use_keys = splits[:, 0], splits[:, 1]
     safe = jnp.where(temps > 0, temps, 1.0)
     cat = jax.vmap(jax.random.categorical)(use_keys, logits / safe[:, None])
     greedy = jnp.argmax(logits, -1)
@@ -116,6 +124,67 @@ Engine = OneShotEngine
 
 
 # ---------------------------------------------------------------------------
+# Shared continuous-serving driver
+# ---------------------------------------------------------------------------
+
+class _EngineBase:
+    """Driver loop shared by the continuous engines (slotted, paged,
+    speculative): submit/run/generate plus per-token emit & retire.
+
+    Subclasses provide ``step()`` and set ``queue``, ``pool``, ``stream``,
+    ``finished``, ``_active`` and ``_eos`` in ``__init__``.
+    """
+
+    def submit(self, req: Request) -> None:
+        self.queue.submit(req)
+
+    def _emit(self, slot: int, st, tok: int) -> bool:
+        """Record one generated token; retire the slot when the request
+        hits its budget or EOS.  Returns ``done`` so multi-token emitters
+        (speculative windows) can stop at the retirement point."""
+        st.emitted.append(tok)
+        done = (len(st.emitted) >= st.req.max_new_tokens
+                or (self._eos >= 0 and tok == self._eos))
+        if self.stream is not None:
+            self.stream(st.req.uid, tok, done)
+        if done:
+            self.finished[st.req.uid] = np.asarray(st.emitted, np.int32)
+            self._release(slot)
+        return done
+
+    def _release(self, slot: int) -> None:
+        del self._active[slot]
+        self.pool.release(slot)
+
+    def _reject_detail(self) -> str:
+        return (f"prompt + max_new_tokens exceeds cache_len="
+                f"{self.pool.cache_len}?")
+
+    def run(self) -> Dict[int, np.ndarray]:
+        """Drain queue + slots; returns {uid: generated ids}."""
+        while self.step():
+            pass
+        return self.finished
+
+    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 32,
+                 temperature: float = 0.0, seed: int = 0) -> List[np.ndarray]:
+        """Submit one request per prompt and drain; returns outputs in
+        prompt order."""
+        base = len(self.finished)
+        for i, p in enumerate(prompts):
+            self.submit(Request(uid=base + i, tokens=np.asarray(p, np.int32),
+                                max_new_tokens=max_new_tokens,
+                                temperature=temperature, seed=seed + i))
+        out = self.run()
+        missing = [i for i in range(len(prompts)) if base + i not in out]
+        if missing:
+            raise ValueError(
+                f"requests {missing} were rejected by the scheduler "
+                f"({self._reject_detail()})")
+        return [out[base + i] for i in range(len(prompts))]
+
+
+# ---------------------------------------------------------------------------
 # Continuous batching
 # ---------------------------------------------------------------------------
 
@@ -136,7 +205,7 @@ class _SlotState:
     emitted: List[int] = field(default_factory=list)
 
 
-class ContinuousEngine:
+class ContinuousEngine(_EngineBase):
     """Slot-pooled continuous batching.
 
     ``submit`` enqueues requests; each ``step()`` admits as many queued
@@ -159,6 +228,7 @@ class ContinuousEngine:
         self.finished: Dict[int, np.ndarray] = {}
         self.stats = {"decode_steps": 0, "prefills": 0}
         self._active: Dict[int, _SlotState] = {}
+        self._eos = ccfg.eos_id
         # donate the pool cache: the per-token ring update aliases in place
         # instead of copying the whole max_slots x cache_len pool every step
         self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
@@ -174,9 +244,6 @@ class ContinuousEngine:
 
     # -- admission -----------------------------------------------------------
 
-    def submit(self, req: Request) -> None:
-        self.queue.submit(req)
-
     def _admit(self) -> None:
         for slot, req in self.scheduler.next_admissions():
             batch = {"tokens": jnp.asarray(req.tokens, jnp.int32)[None, :],
@@ -184,7 +251,15 @@ class ContinuousEngine:
             logits, rcache = self._prefill(self.params, batch)
             self.stats["prefills"] += 1
             st = _SlotState(req=req, key=jax.random.PRNGKey(req.seed))
-            tok = self._sample_one(logits[:, -1], st.key, req.temperature)
+            if self.ccfg.batched_sampling:
+                # jitted first-token sampling: the root key draws directly
+                # (first=True), bit-identical to the legacy host path
+                tok_dev, _ = _batched_sample(
+                    logits[:, -1], st.key[None, :],
+                    jnp.full((1,), req.temperature, jnp.float32), first=True)
+                tok = int(tok_dev[0])
+            else:
+                tok = self._sample_one(logits[:, -1], st.key, req.temperature)
             total0 = req.prompt_len + Scheduler.prefix_len(req)
             self.pool.insert(slot, rcache, tok, total0)
             self._keys = self._keys.at[slot].set(st.key)
@@ -202,17 +277,6 @@ class ContinuousEngine:
         return int(jax.random.categorical(key, logits / temperature, -1)[0])
 
     # -- stepping ------------------------------------------------------------
-
-    def _emit(self, slot: int, st: _SlotState, tok: int) -> None:
-        st.emitted.append(tok)
-        done = (len(st.emitted) >= st.req.max_new_tokens
-                or (self.ccfg.eos_id >= 0 and tok == self.ccfg.eos_id))
-        if self.stream is not None:
-            self.stream(st.req.uid, tok, done)
-        if done:
-            self.finished[st.req.uid] = np.asarray(st.emitted, np.int32)
-            del self._active[slot]
-            self.pool.release(slot)
 
     def step(self) -> bool:
         """Admit waiting requests, then advance all active slots by one
@@ -251,32 +315,6 @@ class ContinuousEngine:
             self._emit(slot, st, tok)
         return bool(self._active) or len(self.queue) > 0
 
-    def run(self) -> Dict[int, np.ndarray]:
-        """Drain queue + slots; returns {uid: generated ids}."""
-        while self.step():
-            pass
-        return self.finished
-
-    # -- convenience ---------------------------------------------------------
-
-    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 32,
-                 temperature: float = 0.0, seed: int = 0) -> List[np.ndarray]:
-        """Submit one request per prompt and drain; returns outputs in
-        prompt order."""
-        base = len(self.finished)
-        for i, p in enumerate(prompts):
-            self.submit(Request(uid=base + i, tokens=np.asarray(p, np.int32),
-                                max_new_tokens=max_new_tokens,
-                                temperature=temperature, seed=seed + i))
-        out = self.run()
-        missing = [i for i in range(len(prompts)) if base + i not in out]
-        if missing:
-            raise ValueError(
-                f"requests {missing} were rejected by the scheduler "
-                f"(prompt + max_new_tokens exceeds cache_len="
-                f"{self.pool.cache_len}?)")
-        return [out[base + i] for i in range(len(prompts))]
-
 
 # ---------------------------------------------------------------------------
 # Paged continuous batching (DESIGN.md §15)
@@ -290,6 +328,8 @@ class PagedConfig:
     n_pages: int = 0              # 0 -> max_slots * cache_len/page_size + 1
     prefill_chunk: int = 32       # max prompt tokens prefilled per step
     eos_id: int = -1              # < 0: disabled
+    spec_k: int = 0               # max speculated tokens per slot per step
+    #                               (> 0 requires SpeculativeEngine)
 
 
 @dataclass
@@ -300,7 +340,7 @@ class _PagedSlotState:
     emitted: List[int] = field(default_factory=list)
 
 
-class PagedEngine:
+class PagedEngine(_EngineBase):
     """Continuous batching over a paged KV pool (DESIGN.md §15).
 
     Differences from :class:`ContinuousEngine`:
@@ -321,12 +361,17 @@ class PagedEngine:
     differential suite pins token identity against :class:`OneShotEngine`.
     """
 
+    _supports_spec = False        # SpeculativeEngine flips this
+
     def __init__(self, model: Model, params,
                  pcfg: PagedConfig = PagedConfig(), *,
                  stream: Optional[Callable[[int, int, bool], None]] = None):
         if model.decode_paged is None:
             raise ValueError(
                 f"family {model.cfg.family!r} has no pageable decode cache")
+        if pcfg.spec_k > 0 and not self._supports_spec:
+            raise ValueError(
+                "spec_k > 0 needs SpeculativeEngine (repro.serve.spec)")
         assert pcfg.cache_len % pcfg.page_size == 0
         self.model = model
         self.params = params
@@ -347,11 +392,9 @@ class PagedEngine:
         self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
         self._keys = jnp.zeros((pcfg.max_slots, 2), jnp.uint32)
         self._temps = np.zeros((pcfg.max_slots,), np.float32)
+        self._eos = pcfg.eos_id
 
     # -- admission -----------------------------------------------------------
-
-    def submit(self, req: Request) -> None:
-        self.queue.submit(req)
 
     def _admit(self) -> None:
         for slot, req, shared in self.scheduler.next_admissions():
@@ -388,28 +431,27 @@ class PagedEngine:
             self.stats["prefill_tokens"] += C
             if st.offset >= Lp:
                 self.pool.register_prefix(slot, st.req.tokens)
-                tok = ContinuousEngine._sample_one(logits[:, -1], st.key,
-                                                   st.req.temperature)
+                # jitted first-token sampling (root key draws directly;
+                # bit-identical to OneShotEngine's first sample)
+                tok_dev, _ = _batched_sample(
+                    logits[:, -1], st.key[None, :],
+                    jnp.full((1,), st.req.temperature, jnp.float32),
+                    first=True)
+                tok = int(tok_dev[0])
                 del self._prefilling[slot]
                 self.pool.tokens[slot] = tok
                 self.pool.positions[slot] = Lp
                 self._keys = self._keys.at[slot].set(st.key)
                 self._temps[slot] = st.req.temperature
                 self._active[slot] = st
-                self._emit(slot, st, tok)
+                if not self._emit(slot, st, tok):
+                    self._on_decode_join(slot, st)
+
+    def _on_decode_join(self, slot: int, st: _PagedSlotState) -> None:
+        """Hook: slot finished its prompt and entered decode (speculative
+        engine prefills its draft cache here)."""
 
     # -- decode ----------------------------------------------------------------
-
-    def _emit(self, slot: int, st: _PagedSlotState, tok: int) -> None:
-        st.emitted.append(tok)
-        done = (len(st.emitted) >= st.req.max_new_tokens
-                or (self.pcfg.eos_id >= 0 and tok == self.pcfg.eos_id))
-        if self.stream is not None:
-            self.stream(st.req.uid, tok, done)
-        if done:
-            self.finished[st.req.uid] = np.asarray(st.emitted, np.int32)
-            del self._active[slot]
-            self.pool.release(slot)
 
     def _decode_step(self) -> None:
         if not self._active:
@@ -439,26 +481,9 @@ class PagedEngine:
         self._decode_step()
         return bool(self._active or self._prefilling or len(self.queue))
 
-    def run(self) -> Dict[int, np.ndarray]:
-        while self.step():
-            pass
-        return self.finished
-
-    def generate(self, prompts: List[np.ndarray], *, max_new_tokens: int = 32,
-                 temperature: float = 0.0, seed: int = 0) -> List[np.ndarray]:
-        base = len(self.finished)
-        for i, p in enumerate(prompts):
-            self.submit(Request(uid=base + i, tokens=np.asarray(p, np.int32),
-                                max_new_tokens=max_new_tokens,
-                                temperature=temperature, seed=seed + i))
-        out = self.run()
-        missing = [i for i in range(len(prompts)) if base + i not in out]
-        if missing:
-            raise ValueError(
-                f"requests {missing} were rejected by the scheduler "
-                f"(prompt + max_new_tokens exceeds the page budget "
-                f"cache_len={self.pool.cache_len}?)")
-        return [out[base + i] for i in range(len(prompts))]
+    def _reject_detail(self) -> str:
+        return (f"prompt + max_new_tokens exceeds the page budget "
+                f"cache_len={self.pool.cache_len}?")
 
 
 def consolidated_params(train_state) -> Any:

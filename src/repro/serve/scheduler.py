@@ -105,19 +105,32 @@ class PagedScheduler:
     budget is never double-spent.  A head-of-line request that fits but
     cannot be admitted *yet* waits (FIFO order is preserved, no starvation
     of long prompts behind short ones).
+
+    With speculative decoding a second (draft) pool shadows the target
+    pool slot-for-slot; admission then charges BOTH budgets — a request
+    is admitted only when target and draft pools can each reserve its
+    worst-case footprint, so speculation never over-commits pages that
+    plain decode was promised (DESIGN.md §18).
     """
 
-    def __init__(self, queue: RequestQueue, pool):
+    def __init__(self, queue: RequestQueue, pool, draft_pool=None):
         self.queue = queue
         self.pool = pool
+        self.draft_pool = draft_pool
         self.rejected: List[Request] = []
+
+    def _pools(self):
+        return (self.pool,) if self.draft_pool is None else (
+            self.pool, self.draft_pool)
 
     def fits(self, req: Request) -> bool:
         if req.extras:
             return False                 # paged serving: token-only families
+        if req.prompt_len <= 0:
+            return False
         total = req.prompt_len + req.max_new_tokens
-        blocks = -(-total // self.pool.page_size)
-        return req.prompt_len > 0 and blocks <= self.pool.max_pages
+        return all(-(-total // p.page_size) <= p.max_pages
+                   for p in self._pools())
 
     def next_admissions(self) -> List[Tuple[int, Request, int]]:
         """Returns (slot, request, shared_tokens) triples; ``shared_tokens``
@@ -128,10 +141,17 @@ class PagedScheduler:
             if not self.fits(req):
                 self.rejected.append(req)
                 continue
-            if not self.pool.can_admit(req.tokens, req.max_new_tokens):
+            if not all(p.can_admit(req.tokens, req.max_new_tokens)
+                       for p in self._pools()):
                 self.queue.push_front(req)         # wait for pages to free
                 break
             slot = self.pool.alloc_slot()
             shared = self.pool.admit(slot, req.tokens, req.max_new_tokens)
+            if self.draft_pool is not None:
+                # mirror the slot index so one id addresses both caches; the
+                # draft pool never registers prefixes, so its shared count
+                # is always 0 and the target's offset governs prefill
+                self.draft_pool.claim_slot(slot)
+                self.draft_pool.admit(slot, req.tokens, req.max_new_tokens)
             admissions.append((slot, req, shared))
         return admissions

@@ -1,0 +1,372 @@
+"""Speculative decoding on the paged serve path (DESIGN.md §18).
+
+A :class:`DraftEngine` runs a small config with its OWN paged KV pool
+(slot indices mirror the target pool's, claimed at admission) and
+proposes up to ``k`` tokens per active slot per round with ONE jitted
+``lax.scan``.  The target model then scores the whole window
+``[current, draft_1..k]`` in one ``verify_paged`` forward — the ragged
+multi-query paged-attention kernel — and the engine accepts the longest
+matching prefix:
+
+* ``temperature == 0``: greedy token-match — accept ``d_i`` while it
+  equals the argmax of the previous lane's logits, then emit the argmax
+  at the acceptance point as the bonus token.  This is LOSSLESS: the
+  emitted stream is token-identical to plain greedy decode
+  (tests/test_serve_spec.py pins it against ``OneShotEngine``).
+* ``temperature > 0``: standard rejection sampling against the draft
+  distribution (seeded per request, reproducible; the modified
+  distribution math makes the marginal exact, but float nondeterminism
+  across kernels means we pin reproducibility, not oracle identity).
+
+Draft bookkeeping: ``draft.pool.positions[slot]`` is ``d_next`` — the
+next committed-stream index the draft must be fed.  The catch-up count
+``c = pos - d_next`` is provably always 0 or 1 (when every proposal is
+accepted the draft has already consumed all but the last committed
+token), so each propose round feeds ``c`` catch-up tokens, the current
+token, then its own samples — ``c + k`` feeds in a fixed-length scan of
+``spec_k + 1`` steps, ONE dispatch regardless of ``k``.
+
+Rejected speculation rolls both pools back with
+:meth:`PagedKVPool.rollback`; every page freed is strictly past the
+prompt (the window starts at ``pos >= prompt_len``), so shared prefix
+pages are never touched and CoW/refcount invariants hold.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import Model
+from repro.serve.cache import PagedKVPool
+from repro.serve.engine import PagedConfig, PagedEngine
+from repro.serve.scheduler import PagedScheduler
+
+
+# ---------------------------------------------------------------------------
+# Adaptive speculation depth
+# ---------------------------------------------------------------------------
+
+@dataclass
+class SpecConfig:
+    """Knobs for the per-slot adaptive-k controller (AIMD-shaped)."""
+    k_init: int = 1               # speculation depth for a fresh slot
+    probe_every: int = 8          # idle rounds between k=1 probes at k=0
+    demote_below: float = 0.5     # EWMA acceptance below this halves k
+    ewma: float = 0.5             # weight of the newest round's rate
+
+
+class AdaptiveSpecController:
+    """Per-slot speculation depth from observed acceptance.
+
+    Additive increase (a fully-accepted round bumps ``k`` by one, up to
+    ``k_max``), multiplicative decrease (a low acceptance EWMA halves
+    it).  ``k`` can reach 0 — plain decode, zero wasted draft work on
+    cold prompts — and a periodic ``k=1`` probe re-tests the water so a
+    prompt that turns predictable recovers speculation.
+    """
+
+    def __init__(self, n_slots: int, k_max: int,
+                 cfg: SpecConfig = SpecConfig()):
+        self.k_max = k_max
+        self.cfg = cfg
+        self._k = np.zeros((n_slots,), np.int32)
+        self._rate = np.ones((n_slots,), np.float32)
+        self._idle = np.zeros((n_slots,), np.int32)
+
+    def reset(self, slot: int) -> None:
+        self._k[slot] = min(self.cfg.k_init, self.k_max)
+        self._rate[slot] = 1.0
+        self._idle[slot] = 0
+
+    def k(self, slot: int) -> int:
+        return int(self._k[slot])
+
+    def update(self, slot: int, proposed: int, accepted: int) -> None:
+        if proposed == 0:                       # a k=0 (plain-decode) round
+            self._idle[slot] += 1
+            if self._idle[slot] >= self.cfg.probe_every:
+                self._idle[slot] = 0
+                self._k[slot] = min(1, self.k_max)
+            return
+        self._idle[slot] = 0
+        w = self.cfg.ewma
+        self._rate[slot] = w * (accepted / proposed) + (1 - w) * self._rate[slot]
+        if accepted == proposed:
+            self._k[slot] = min(self._k[slot] + 1, self.k_max)
+        elif self._rate[slot] < self.cfg.demote_below:
+            self._k[slot] //= 2
+
+
+# ---------------------------------------------------------------------------
+# Draft engine
+# ---------------------------------------------------------------------------
+
+class DraftEngine:
+    """The proposer: a small pageable model with its own page arena.
+
+    Slots are claimed to MIRROR the target pool's indices (the shared
+    scheduler admits into both pools transactionally), so one slot id
+    addresses both caches.  The draft pool never registers prefixes —
+    its pages are always private, which keeps rollback trivially safe.
+    """
+
+    def __init__(self, model: Model, params, pcfg: PagedConfig):
+        if model.decode_paged is None:
+            raise ValueError(
+                f"draft family {model.cfg.family!r} has no pageable cache")
+        self.model = model
+        self.params = params
+        max_pages = pcfg.cache_len // pcfg.page_size
+        n_pages = pcfg.n_pages or (pcfg.max_slots * max_pages + 1)
+        self.pool = PagedKVPool(model, n_pages, pcfg.page_size,
+                                pcfg.max_slots, max_pages)
+        self._chunk_w = pcfg.prefill_chunk
+        self._chunk = jax.jit(model.prefill_chunk, donate_argnums=(1,))
+        self.propose = jax.jit(self._make_propose(model, pcfg.spec_k + 1),
+                               donate_argnums=(1,))
+
+    @staticmethod
+    def _make_propose(model: Model, S: int) -> Callable:
+        """Build the fixed-length propose scan (S = spec_k + 1 steps).
+
+        Per step ``j`` and slot: feed the catch-up token while
+        ``j < catch``, the current token at ``j == catch``, else the
+        previous step's sample; write KV at ``d_next + j`` (clamped to
+        the last real feed for inactive steps, whose table rows are
+        nulled so the write lands on the null page).  Collects every
+        step's sampled token and logits — the verifier consumes rows
+        ``catch .. catch+k-1`` as proposals ``d_1..d_k``.
+        """
+        def propose(params, cache, cur_tok, catch_tok, catch, d_next,
+                    feeds, table, keys, temps):
+            def body(carry, j):
+                cache, prev, keys = carry
+                tok = jnp.where(j < catch, catch_tok,
+                                jnp.where(j == catch, cur_tok, prev))
+                pos = d_next + jnp.minimum(j, jnp.maximum(feeds - 1, 0))
+                tbl = jnp.where((j < feeds)[:, None], table, 0)
+                logits, cache = model.decode_paged(
+                    params, cache, tok[:, None], pos, tbl)
+                lg = logits[:, -1]
+                splits = jax.vmap(jax.random.split)(keys)
+                nkeys, use = splits[:, 0], splits[:, 1]
+                safe = jnp.where(temps > 0, temps, 1.0)
+                cat = jax.vmap(jax.random.categorical)(use,
+                                                       lg / safe[:, None])
+                samp = jnp.where(temps > 0, cat,
+                                 jnp.argmax(lg, -1)).astype(jnp.int32)
+                return (cache, samp, nkeys), (samp, lg)
+
+            (cache, _, keys), (toks, lgs) = jax.lax.scan(
+                body, (cache, cur_tok, keys),
+                jnp.arange(S, dtype=jnp.int32))
+            return cache, toks, lgs, keys
+        return propose
+
+    def prefill(self, slot: int, tokens: np.ndarray) -> None:
+        """Prefill the FULL prompt into the draft cache (chunked through
+        the draft's own jitted trace); runs once, when the target slot
+        joins decode."""
+        Lp = int(tokens.shape[-1])
+        W = self._chunk_w
+        off = 0
+        while off < Lp:
+            C = min(W, Lp - off)
+            toks = np.zeros((1, W), np.int32)
+            toks[0, :C] = tokens[off:off + C]
+            posn = jnp.arange(W, dtype=jnp.int32)[None] + off
+            table = jnp.asarray(self.pool.page_table[slot:slot + 1])
+            _, self.pool.cache = self._chunk(
+                self.params, self.pool.cache, jnp.asarray(toks), posn,
+                table, jnp.int32(C - 1))
+            off += C
+        self.pool.positions[slot] = Lp        # d_next: all prompt fed
+
+
+# ---------------------------------------------------------------------------
+# Speculative engine
+# ---------------------------------------------------------------------------
+
+class SpeculativeEngine(PagedEngine):
+    """:class:`PagedEngine` whose decode step is propose → verify →
+    accept → rollback.  One draft scan + one target verify forward per
+    round (2 jit dispatches), emitting between 1 and ``k_eff + 1``
+    tokens per slot per round.
+    """
+
+    _supports_spec = True
+
+    def __init__(self, model: Model, params, draft_model: Model,
+                 draft_params, pcfg: PagedConfig = PagedConfig(spec_k=4), *,
+                 spec: SpecConfig = SpecConfig(),
+                 stream: Optional[Callable[[int, int, bool], None]] = None):
+        if pcfg.spec_k < 1:
+            raise ValueError("SpeculativeEngine needs pcfg.spec_k >= 1")
+        if model.verify_paged is None:
+            raise ValueError(
+                f"family {model.cfg.family!r} has no paged verify path")
+        super().__init__(model, params, pcfg, stream=stream)
+        self.draft = DraftEngine(draft_model, draft_params, pcfg)
+        # re-point the scheduler at BOTH pools: admission charges the
+        # draft's page budget too and mirrors slot claims
+        self.scheduler = PagedScheduler(self.queue, self.pool,
+                                        self.draft.pool)
+        self._verify = jax.jit(model.verify_paged, donate_argnums=(1,))
+        self.ctrl = AdaptiveSpecController(pcfg.max_slots, pcfg.spec_k, spec)
+        self._d_keys = jnp.zeros((pcfg.max_slots, 2), jnp.uint32)
+        self._d_catch = np.zeros((pcfg.max_slots,), np.int32)
+        self.stats.update(spec_rounds=0, spec_proposed=0, spec_accepted=0)
+
+    # -- lifecycle hooks -----------------------------------------------------
+
+    def _on_decode_join(self, slot: int, st) -> None:
+        self.draft.prefill(slot, np.asarray(st.req.tokens, np.int32))
+        # the draft's sampling stream is deliberately distinct from the
+        # request's (fold_in) — proposals only gate ACCEPTANCE, the
+        # request's own chain draws the committed randomness
+        self._d_keys = self._d_keys.at[slot].set(
+            jax.random.fold_in(jax.random.PRNGKey(st.req.seed), 7))
+        self.ctrl.reset(slot)
+
+    def _release(self, slot: int) -> None:
+        super()._release(slot)
+        self.draft.pool.release(slot)
+
+    # -- the speculative round -----------------------------------------------
+
+    def _decode_step(self) -> None:
+        if not self._active:
+            return
+        B = self.pcfg.max_slots
+        spec_k = self.pcfg.spec_k
+        k_eff = np.zeros((B,), np.int32)
+        catch = np.zeros((B,), np.int32)
+        feeds = np.zeros((B,), np.int32)
+        d_next = np.zeros((B,), np.int32)
+        for slot, st in self._active.items():
+            pos = int(self.pool.positions[slot])
+            dn = int(self.draft.pool.positions[slot])
+            c = pos - dn
+            assert 0 <= c <= 1, f"draft slot {slot} out of step: {dn}/{pos}"
+            remaining = st.req.max_new_tokens - len(st.emitted)
+            # the +1 bonus token must fit the budget, so k <= remaining-1;
+            # the last KV write (pos + k) then stays inside the pages the
+            # admission reservation already promised this slot
+            k = max(0, min(self.ctrl.k(slot), spec_k, remaining - 1))
+            k_eff[slot], catch[slot], d_next[slot] = k, c, dn
+            feeds[slot] = c + k if k else c
+            for p in range(dn, dn + int(feeds[slot])):
+                self.draft.pool.grow_for(slot, p)
+            for p in range(pos, pos + k + 1):
+                self.pool.grow_for(slot, p)
+        cur = self.pool.tokens[:, 0].copy()
+
+        # 1) propose: one scan over all slots (skipped when nothing to feed)
+        toks = lgs = None
+        if feeds.any():
+            d_table = jnp.asarray(self.draft.pool.device_table(self._active))
+            self.draft.pool.cache, toks_d, lgs_d, self._d_keys = \
+                self.draft.propose(
+                    self.draft.params, self.draft.pool.cache,
+                    jnp.asarray(cur), jnp.asarray(self._d_catch),
+                    jnp.asarray(catch), jnp.asarray(d_next),
+                    jnp.asarray(feeds), d_table, self._d_keys,
+                    jnp.asarray(self._temps))
+            toks = np.asarray(toks_d)                   # (S, B)
+            if any(st.req.temperature > 0
+                   for st in self._active.values()):
+                lgs = np.asarray(lgs_d)                 # (S, B, V)
+
+        # 2) verify: one multi-query forward over [current, d_1..d_k, pad]
+        W = spec_k + 1
+        win = np.zeros((B, W), np.int32)
+        win[:, 0] = cur
+        for slot in self._active:
+            c, k = int(catch[slot]), int(k_eff[slot])
+            for i in range(1, k + 1):
+                win[slot, i] = toks[c + i - 1, slot]
+        q_lens = (k_eff + 1).astype(np.int32)           # inactive rows: 1
+        q_starts = self.pool.positions.astype(np.int32).copy()
+        positions = q_starts[:, None] + np.minimum(
+            np.arange(W, dtype=np.int32)[None, :], q_lens[:, None] - 1)
+        table = jnp.asarray(self.pool.device_table(self._active))
+        logits, self.pool.cache = self._verify(
+            self.params, self.pool.cache, jnp.asarray(win),
+            jnp.asarray(positions), table, jnp.asarray(q_lens))
+        self.stats["decode_steps"] += 1
+        self.stats["spec_rounds"] += 1
+        lg = np.asarray(logits)                         # (B, W, V)
+        am = np.argmax(lg, -1)
+
+        # 3) accept, emit, roll both pools back to the accepted point
+        for slot, st in list(self._active.items()):
+            pos, k, c = int(q_starts[slot]), int(k_eff[slot]), int(catch[slot])
+            props = [int(win[slot, i]) for i in range(1, k + 1)]
+            if st.req.temperature <= 0.0:
+                a = 0
+                while a < k and props[a] == int(am[slot, a]):
+                    a += 1
+                emitted = props[:a] + [int(am[slot, a])]
+            else:
+                emitted, a = self._reject_round(
+                    st, lg[slot], None if k == 0 else lgs[c:c + k, slot],
+                    props)
+            self.stats["spec_proposed"] += k
+            self.stats["spec_accepted"] += a
+            done = False
+            for t in emitted:
+                done = self._emit(slot, st, int(t))
+                if done:                 # budget/EOS: drop the window tail
+                    break
+            if done:                     # _release freed target + draft
+                continue
+            self.pool.rollback(slot, pos + a + 1)
+            self.pool.tokens[slot] = emitted[-1]
+            if a == k:
+                # draft already consumed d_1..d_k; it still owes the token
+                # at index pos+k — window lane k — as next round's catch-up
+                self.draft.pool.rollback(slot, pos + k)
+                self._d_catch[slot] = int(win[slot, k])
+            else:
+                self.draft.pool.rollback(slot, pos + a + 1)
+            self.ctrl.update(slot, k, a)
+
+    # -- rejection sampling (temperature > 0) --------------------------------
+
+    def _reject_round(self, st, lg_t, lg_d, props):
+        """Standard speculative rejection sampling, on host: accept
+        ``d_i`` with prob ``min(1, p_i(d_i)/q_i(d_i))``; on rejection
+        sample the residual ``max(p - q, 0)``; on full acceptance sample
+        the bonus from ``p_{k+1}``.  One key split per round keeps the
+        request's stream reproducible regardless of batch composition."""
+        temp = st.req.temperature
+        k = len(props)
+        st.key, kr = jax.random.split(st.key)
+        us = np.asarray(jax.random.uniform(kr, (k + 1,), jnp.float32))
+
+        def smax(v):
+            v = v.astype(np.float64) / temp
+            e = np.exp(v - v.max())
+            return e / e.sum()
+
+        out = []
+        for i in range(k):
+            p, q = smax(lg_t[i]), smax(lg_d[i])
+            d = props[i]
+            if us[i] * max(q[d], 1e-30) < p[d]:
+                out.append(d)
+                continue
+            res = np.maximum(p - q, 0.0)
+            tot = res.sum()
+            res = p if tot <= 0 else res / tot
+            t = int(np.searchsorted(np.cumsum(res), us[k]))
+            out.append(min(t, res.shape[0] - 1))
+            return out, i
+        p = smax(lg_t[k])
+        t = int(np.searchsorted(np.cumsum(p), us[k]))
+        out.append(min(t, p.shape[0] - 1))
+        return out, k

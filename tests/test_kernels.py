@@ -98,6 +98,125 @@ def test_paged_attention_matches_dense(B, H, Kv, hd, ps, nb):
                                atol=2e-6, rtol=2e-6)
 
 
+def _verify_case(key, B, H, Kv, hd, ps, nb, W, dtype):
+    """Ragged multi-query verify inputs: per-slot window start + live lane
+    count, fully-populated page tables (causal masking, not table nulls,
+    bounds what each lane may read)."""
+    ks = jax.random.split(key, 5)
+    n_pages = 1 + B * nb
+    q = jax.random.normal(ks[0], (B, W, H, hd), dtype)
+    k_arena = jax.random.normal(ks[1], (n_pages, ps, Kv, hd), dtype)
+    v_arena = jax.random.normal(ks[2], (n_pages, ps, Kv, hd), dtype)
+    q_lens = jax.random.randint(ks[3], (B,), 1, W + 1)
+    q_starts = jax.random.randint(ks[4], (B,), 1, nb * ps - W + 1)
+    perm = np.random.default_rng(0).permutation(n_pages - 1) + 1
+    table = jnp.asarray(perm.reshape(B, nb).astype(np.int32))
+    return (q, k_arena, v_arena, table, q_starts.astype(jnp.int32),
+            q_lens.astype(jnp.int32))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Kv,hd,ps,nb,W", [
+    (3, 4, 2, 64, 8, 4, 4),
+    (2, 8, 1, 128, 16, 3, 3),  # MQA
+    (4, 4, 4, 64, 4, 6, 5),    # MHA, small pages, wider window
+])
+def test_paged_verify_interpret_bitwise(B, H, Kv, hd, ps, nb, W, dtype):
+    """Speculative verify kernel (DESIGN.md §18): interpret-mode Pallas
+    body == jnp ref BITWISE — same block order, same fp32 casts, same
+    online-softmax update, ragged per-slot query lengths."""
+    from repro.kernels.paged_attention import paged_verify
+    args = _verify_case(KEY, B, H, Kv, hd, ps, nb, W, dtype)
+    out_i = paged_verify(*args, impl="interpret")
+    out_r = paged_verify(*args, impl="ref")
+    np.testing.assert_array_equal(np.asarray(out_i), np.asarray(out_r))
+
+
+@pytest.mark.parametrize("B,H,Kv,hd,ps,nb,W", [(3, 4, 2, 64, 8, 4, 4),
+                                               (2, 8, 1, 64, 4, 5, 3)])
+def test_paged_verify_matches_dense_causal(B, H, Kv, hd, ps, nb, W):
+    """Gathering the pages dense and masking causally per lane
+    (k_pos <= q_start + lane) reproduces the kernel; padding lanes past
+    ``q_len`` clamp to the last live lane's position (their output is
+    engine-discarded but must stay finite and not perturb live lanes)."""
+    from repro.kernels.paged_attention import paged_verify
+    q, ka, va, table, q_starts, q_lens = _verify_case(
+        jax.random.PRNGKey(7), B, H, Kv, hd, ps, nb, W, jnp.float32)
+    out = paged_verify(q, ka, va, table, q_starts, q_lens, impl="ref")
+    k_dense = ka[table].reshape(B, nb * ps, Kv, hd)
+    v_dense = va[table].reshape(B, nb * ps, Kv, hd)
+    kr = jnp.repeat(jnp.moveaxis(k_dense, 1, 2), H // Kv, axis=1)
+    vr = jnp.repeat(jnp.moveaxis(v_dense, 1, 2), H // Kv, axis=1)
+    s = jnp.einsum("bwhd,bhkd->bhwk", q, kr) * (hd ** -0.5)
+    lane = jnp.minimum(jnp.arange(W), q_lens[:, None] - 1)     # clamped
+    q_pos = q_starts[:, None] + lane                           # (B, W)
+    mask = (jnp.arange(nb * ps)[None, None, None]
+            <= q_pos[:, None, :, None])
+    s = jnp.where(mask, s, -1e30)
+    exp = jnp.einsum("bhwk,bhkd->bwhd", jax.nn.softmax(s, axis=-1), vr)
+    assert np.isfinite(np.asarray(out)).all()
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_paged_verify_single_lane_is_decode():
+    """q_lens == 1 collapses verify to the single-query decode kernel:
+    lane 0 must match ``paged_attention`` at length q_start + 1."""
+    from repro.kernels.paged_attention import paged_attention, paged_verify
+    B, H, Kv, hd, ps, nb, W = 3, 4, 2, 64, 8, 4, 4
+    q, ka, va, table, q_starts, _ = _verify_case(
+        jax.random.PRNGKey(11), B, H, Kv, hd, ps, nb, W, jnp.float32)
+    ones = jnp.ones((B,), jnp.int32)
+    out = paged_verify(q, ka, va, table, q_starts, ones, impl="ref")
+    dec = paged_attention(q[:, 0], ka, va, table, q_starts + 1, impl="ref")
+    np.testing.assert_allclose(np.asarray(out[:, 0]), np.asarray(dec),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_paged_verify_candidates_match_ref():
+    """Every dispatch candidate the tuner may pick for paged_verify is
+    verified against the jnp oracle (allclose: impl switch, not retile)."""
+    from repro.kernels import autotune
+    dims = {"B": 4, "W": 4, "ps": 8, "hd": 32}
+    spec = autotune.KERNELS["paged_verify"]
+    inputs = spec.make_inputs(dims)
+    cands = spec.candidates(dims)
+    assert len(cands) >= 2, cands
+    for params in cands:
+        autotune.verify_candidate(spec, inputs, params)
+
+
+def test_paged_verify_override_and_table(tmp_path, monkeypatch):
+    """REPRO_BLOCK_PAGED_VERIFY env override beats the table; the
+    committed table's verify bucket resolves through paged_verify_impl."""
+    import os
+    from repro.kernels import autotune
+    dims = {"B": 4, "W": 4, "ps": 8, "hd": 32}
+    path = tmp_path / "table.json"
+    autotune.save_table(
+        {autotune.table_key("paged_verify", dims, "cpu"):
+         {"params": {"impl": "interpret"}}}, str(path), merge=False)
+    monkeypatch.setenv("REPRO_AUTOTUNE_TABLE", str(path))
+    autotune.reset_cache()
+    try:
+        if autotune.backend() == "cpu":
+            assert autotune.paged_verify_impl(**dims) == "interpret"
+        monkeypatch.setenv("REPRO_BLOCK_PAGED_VERIFY", "impl=ref")
+        assert autotune.paged_verify_impl(**dims) == "ref"
+        monkeypatch.delenv("REPRO_BLOCK_PAGED_VERIFY")
+    finally:
+        monkeypatch.delenv("REPRO_AUTOTUNE_TABLE")
+        autotune.reset_cache()
+    # the checked-in table carries the verify bucket the impl lookup uses
+    entries = autotune._load_table(os.path.join(
+        os.path.dirname(autotune.__file__), "autotune_table.json"))
+    key = autotune.table_key("paged_verify", dims, "cpu")
+    assert key in entries, "retune did not cover the verify kernel bucket"
+    if autotune.backend() == "cpu":
+        assert autotune.paged_verify_impl(**dims) == str(
+            entries[key]["params"]["impl"])
+
+
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 @pytest.mark.parametrize("B,S,mi,st,ch,bmi", [
     (2, 512, 256, 16, 128, 128),

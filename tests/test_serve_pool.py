@@ -97,8 +97,9 @@ def test_null_page_never_allocated():
 
 def test_property_random_lifecycles():
     """Seeded fuzz: random admits (with prefix sharing), decode growth,
-    early retirement and prefix registration; invariants hold after every
-    mutation and the pool drains clean modulo the prefix cache."""
+    speculative grow+rollback bursts, early retirement and prefix
+    registration; invariants hold after every mutation and the pool drains
+    clean modulo the prefix cache."""
     rng = np.random.default_rng(42)
     pool = _host_pool(n_pages=24, page_size=4, max_slots=3, max_pages=8)
     prompts = [rng.integers(0, 97, size=n, dtype=np.int32)
@@ -106,7 +107,7 @@ def test_property_random_lifecycles():
     live = {}                             # slot -> [tokens, pos, budget]
     for step in range(600):
         op = rng.random()
-        if op < 0.35 and pool.n_free_slots:
+        if op < 0.3 and pool.n_free_slots:
             toks = prompts[int(rng.integers(len(prompts)))]
             if rng.random() < 0.5:        # extend: exercises partial CoW
                 tail = rng.integers(0, 97, size=int(rng.integers(1, 4)),
@@ -118,13 +119,26 @@ def test_property_random_lifecycles():
                 pool.admit(slot, toks, max_new)
                 pool.register_prefix(slot, toks)
                 live[slot] = [toks, len(toks), max_new - 1]
-        elif op < 0.8 and live:
+        elif op < 0.55 and live:
             slot = int(rng.choice(list(live)))
             toks, pos, budget = live[slot]
             if budget > 0:
                 pool.grow_for(slot, pos)
                 live[slot][1] += 1
                 live[slot][2] -= 1
+        elif op < 0.8 and live:
+            # speculative round: write k+1 positions (k <= budget-1, the
+            # engine's bonus-token bound), accept a, roll back the rest
+            slot = int(rng.choice(list(live)))
+            toks, pos, budget = live[slot]
+            if budget > 0:
+                k = int(rng.integers(0, min(budget, 4)))
+                for p in range(pos, pos + k + 1):
+                    pool.grow_for(slot, p)
+                a = int(rng.integers(0, k + 1))
+                pool.rollback(slot, pos + a + 1)
+                live[slot][1] += a + 1
+                live[slot][2] -= a + 1
         elif live:
             slot = int(rng.choice(list(live)))
             del live[slot]
@@ -135,6 +149,7 @@ def test_property_random_lifecycles():
     _check_invariants(pool)
     assert pool.reserved == 0
     assert pool.pages_in_use == len(pool._prefix)
+    assert pool.stats["rollback_pages"] > 0   # rejections really freed pages
 
 
 def test_prefix_sharing_and_eviction_bookkeeping():

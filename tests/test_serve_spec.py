@@ -1,0 +1,240 @@
+"""Differential tests for speculative decoding on the paged path
+(DESIGN.md §18): greedy output of the speculative engine must be
+token-identical to the one-shot oracle — speculation may only change HOW
+tokens are produced, never WHICH — across dense/MLA/MoE, random arrivals,
+prefix sharing, eviction pressure, adversarial drafts (mid-stream
+rejection + rollback), and EOS inside an accepted window.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import build_model
+from repro.serve import (OneShotEngine, PagedConfig, PagedEngine, Request,
+                         ServeConfig, SpecConfig, SpeculativeEngine)
+
+ARCHS = ["qwen3_4b",          # dense transformer (GQA, qk-norm)
+         "deepseek_v3_671b",  # MLA latent cache (+ MoE)
+         "olmoe_1b_7b"]       # MoE
+
+CACHE_LEN = 64
+PAGE = 4
+PROMPT_LENS = (4, 6, 9)
+
+# keep speculating even when the draft keeps missing — maximizes coverage
+# of the rejection/rollback path (the adaptive controller is tested apart)
+STUBBORN = SpecConfig(k_init=3, demote_below=0.0)
+
+
+@pytest.fixture(scope="module", params=ARCHS)
+def setup(request):
+    cfg = get_config(request.param).reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    # a draft with DIFFERENT weights: proposals frequently disagree with
+    # the target, forcing mid-stream rejections and KV rollback
+    draft_params = model.init(jax.random.PRNGKey(9))
+    oracle = OneShotEngine(model, params, ServeConfig(cache_len=CACHE_LEN))
+    return cfg, model, params, draft_params, oracle
+
+
+def _requests(cfg, rng, n, temperature=0.0, shared_prefix=None):
+    reqs = []
+    for i in range(n):
+        if shared_prefix is not None and i % 2 == 0:
+            tail = rng.integers(0, cfg.vocab_size,
+                                size=int(rng.integers(1, 5)), dtype=np.int32)
+            toks = np.concatenate([shared_prefix, tail])
+        else:
+            toks = rng.integers(0, cfg.vocab_size,
+                                size=int(rng.choice(PROMPT_LENS)),
+                                dtype=np.int32)
+        reqs.append(Request(uid=i, tokens=toks,
+                            max_new_tokens=int(rng.integers(3, 9)),
+                            temperature=temperature, seed=1000 + i))
+    return reqs
+
+
+def _oracle_out(oracle, req):
+    oracle.scfg = ServeConfig(max_new_tokens=req.max_new_tokens,
+                              temperature=req.temperature,
+                              cache_len=CACHE_LEN, seed=req.seed)
+    return oracle.generate({"tokens": jnp.asarray(req.tokens)[None]})[0]
+
+
+def _engine(model, params, dparams, *, spec_k=3, max_slots=2, n_pages=40,
+            spec=STUBBORN, eos_id=-1, stream=None):
+    return SpeculativeEngine(
+        model, params, model, dparams,
+        PagedConfig(max_slots=max_slots, cache_len=CACHE_LEN, page_size=PAGE,
+                    n_pages=n_pages, prefill_chunk=4, eos_id=eos_id,
+                    spec_k=spec_k),
+        spec=spec, stream=stream)
+
+
+def _drive(se, reqs, rng):
+    pending = list(reqs)
+    rng.shuffle(pending)
+    while True:
+        if pending and rng.random() < 0.6:
+            se.submit(pending.pop())
+        busy = se.step()
+        if not busy and not pending:
+            break
+    return se
+
+
+def _assert_drained(se):
+    assert se.pool.reserved == 0
+    assert se.draft.pool.reserved == 0
+    assert se.draft.pool.pages_in_use == 0    # draft caches no prefixes
+
+
+def test_spec_greedy_matches_oneshot_with_rejections(setup):
+    """Adversarial draft + prefix sharing + random arrivals: rejections
+    and page-freeing rollbacks happen, outputs stay oracle-identical."""
+    cfg, model, params, draft_params, oracle = setup
+    rng = np.random.default_rng(0)
+    prefix = rng.integers(0, cfg.vocab_size, size=10, dtype=np.int32)
+    reqs = _requests(cfg, rng, 6, shared_prefix=prefix)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    se = _drive(_engine(model, params, draft_params), reqs, rng)
+    assert se.pool.stats["prefix_hits"] > 0
+    assert se.stats["spec_proposed"] > 0
+    assert se.stats["spec_accepted"] < se.stats["spec_proposed"]
+    assert se.pool.stats["rollback_pages"] > 0     # rejections freed pages
+    for r in reqs:
+        np.testing.assert_array_equal(se.finished[r.uid], expected[r.uid],
+                                      err_msg=f"uid={r.uid}")
+    _assert_drained(se)
+
+
+def test_spec_perfect_draft_skips_decode_steps(setup):
+    """Draft == target: every proposal accepted, so the engine emits the
+    same greedy stream in FEWER target forwards than tokens generated —
+    the whole point of speculation."""
+    cfg, model, params, _, oracle = setup
+    rng = np.random.default_rng(1)
+    reqs = _requests(cfg, rng, 4)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    se = _drive(_engine(model, params, params), reqs, rng)
+    for r in reqs:
+        np.testing.assert_array_equal(se.finished[r.uid], expected[r.uid],
+                                      err_msg=f"uid={r.uid}")
+    assert se.stats["spec_accepted"] == se.stats["spec_proposed"] > 0
+    decode_tokens = sum(len(v) for v in expected.values()) - len(reqs)
+    assert se.stats["decode_steps"] < decode_tokens
+    _assert_drained(se)
+
+
+def test_spec_under_page_pressure_with_eviction():
+    """Tight page budgets on BOTH pools: admission waits for pages, prefix
+    entries get LRU-evicted, speculation still never corrupts a stream."""
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    dparams = model.init(jax.random.PRNGKey(9))
+    oracle = OneShotEngine(model, params, ServeConfig(cache_len=CACHE_LEN))
+    rng = np.random.default_rng(2)
+    reqs = _requests(cfg, rng, 6)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    se = _drive(_engine(model, params, dparams, n_pages=14), reqs, rng)
+    assert se.pool.stats["evictions"] > 0
+    for r in reqs:
+        np.testing.assert_array_equal(se.finished[r.uid], expected[r.uid],
+                                      err_msg=f"uid={r.uid}")
+    _assert_drained(se)
+
+
+def test_spec_eos_mid_window():
+    """EOS landing inside an accepted window must retire the request AT
+    the EOS token — accepted tokens past it are dropped, both pools free
+    the slot, and streaming fires exactly one done event."""
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    oracle = OneShotEngine(model, params, ServeConfig(cache_len=CACHE_LEN))
+    rng = np.random.default_rng(3)
+    reqs = _requests(cfg, rng, 4)
+    expected = {r.uid: _oracle_out(oracle, r) for r in reqs}
+    pick = reqs[0]
+    eos = int(expected[pick.uid][min(2, len(expected[pick.uid]) - 1)])
+    events = []
+    # perfect draft: windows of accepted tokens, so EOS lands mid-window
+    se = _drive(_engine(model, params, params, eos_id=eos,
+                        stream=lambda uid, tok, done: events.append(
+                            (uid, tok, done))), reqs, rng)
+    for r in reqs:
+        exp = expected[r.uid]
+        hits = np.nonzero(exp == eos)[0]
+        if hits.size:
+            exp = exp[:hits[0] + 1]
+        np.testing.assert_array_equal(se.finished[r.uid], exp,
+                                      err_msg=f"uid={r.uid} eos={eos}")
+        streamed = [t for (u, t, _) in events if u == r.uid]
+        assert streamed == list(se.finished[r.uid])
+        assert sum(1 for (u, _, d) in events if u == r.uid and d) == 1
+    _assert_drained(se)
+
+
+def test_spec_temperature_seeded_reproducible():
+    """temperature > 0 uses rejection sampling: no oracle-identity claim,
+    but seeded streams must reproduce run-to-run exactly."""
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    dparams = model.init(jax.random.PRNGKey(9))
+    rng = np.random.default_rng(4)
+    reqs = _requests(cfg, rng, 4, temperature=0.8)
+
+    def run():
+        se = _engine(model, params, dparams, spec_k=2)
+        for r in reqs:
+            se.submit(Request(uid=r.uid, tokens=r.tokens,
+                              max_new_tokens=r.max_new_tokens,
+                              temperature=r.temperature, seed=r.seed))
+        return se.run()
+
+    o1, o2 = run(), run()
+    assert o1.keys() == o2.keys()
+    for uid in o1:
+        np.testing.assert_array_equal(o1[uid], o2[uid], err_msg=f"uid={uid}")
+
+
+def test_adaptive_k_degrades_on_cold_draft():
+    """Default controller + hopeless draft: acceptance collapses, k is
+    demoted to 0 (plain decode) with only periodic probes — most rounds
+    must propose nothing."""
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    dparams = model.init(jax.random.PRNGKey(9))
+    rng = np.random.default_rng(5)
+    reqs = _requests(cfg, rng, 3)
+    se = _engine(model, params, dparams, spec=SpecConfig())
+    se = _drive(se, reqs, rng)
+    assert se.stats["spec_rounds"] > 0
+    assert se.stats["spec_proposed"] < se.stats["spec_rounds"]
+    _assert_drained(se)
+
+
+def test_spec_k_requires_speculative_engine():
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="SpeculativeEngine"):
+        PagedEngine(model, params,
+                    PagedConfig(cache_len=CACHE_LEN, page_size=PAGE,
+                                spec_k=2))
+    with pytest.raises(ValueError, match="spec_k"):
+        SpeculativeEngine(model, params, model, params,
+                          PagedConfig(cache_len=CACHE_LEN, page_size=PAGE,
+                                      spec_k=0))
