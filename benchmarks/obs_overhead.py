@@ -1,0 +1,178 @@
+"""Obs-spine overhead benchmark (DESIGN.md §19): the telemetry recorder
+must be observation-only and near-free.
+
+Two arms of the same deterministic workload — tracing disabled (the
+``NullRecorder`` default) vs enabled — measuring:
+
+* **bit-identity** — final params, per-step losses and serve-decode
+  token streams must match EXACTLY across arms (the recorder never
+  touches the computation);
+* **event determinism** — the enabled arm's span/counter totals are a
+  pure function of the schedule (steps, tau, groups, requests), so the
+  perf gate pins them exactly;
+* **overhead** — the enabled/disabled wall-time ratio per train step,
+  plus the microbenchmarked cost of a disabled ``span()`` call (the
+  "~zero cost when off" claim, in ns).
+
+Standalone: ``python benchmarks/obs_overhead.py`` emits the usual CSV
+rows and writes ``BENCH_obs.json``; the perf gate runs the same
+``bench_obs()`` via ``perf_gate.py --suite obs``.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Dict, List, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+import jax                                   # noqa: E402
+import jax.numpy as jnp                      # noqa: E402
+import numpy as np                           # noqa: E402
+
+from benchmarks.common import bench_model, emit, write_bench  # noqa: E402
+from repro import obs                        # noqa: E402
+from repro.core import Strategy              # noqa: E402
+from repro.data import SyntheticLM           # noqa: E402
+
+STEPS, WARM_STEPS, TAU, WARMUP, R = 12, 2, 2, 1, 2
+SEQ = 16
+N_REQS, NEW_TOKENS = 3, 4
+SPAN_ITERS = 200_000
+
+
+def _train_arm(model, enabled: bool) -> Tuple[Dict, List[float], float]:
+    """One fresh TrainSession (own jit cache) on a fixed schedule.
+    Returns (final params, losses, us/step over the timed tail)."""
+    from repro.elastic import TrainSession
+    from repro.train import TrainerConfig
+
+    rec = obs.enable() if enabled else obs.disable()
+    strat = Strategy(name="edit", replicas=R, sync_interval=TAU,
+                     warmup_steps=WARMUP)
+    data = SyntheticLM(model.cfg.vocab_size, SEQ, 8, seed=3, replicas=R)
+    sess = TrainSession(model, strat, data,
+                        TrainerConfig(total_steps=STEPS + WARM_STEPS,
+                                      inner_lr=1e-3, lr_warmup=0,
+                                      log_every=0, seed=7),
+                        recorder=rec)
+    sess.run_steps(WARM_STEPS)          # compile + first boundary
+    t0 = time.perf_counter()
+    sess.run_steps(STEPS)
+    us_per_step = (time.perf_counter() - t0) / STEPS * 1e6
+    params = jax.tree.map(np.asarray, sess.state["params"])
+    losses = [r["loss"] for r in sess.history]
+    return params, losses, us_per_step
+
+
+def _serve_arm(model, params, enabled: bool) -> Dict[int, np.ndarray]:
+    from repro.serve import PagedConfig, PagedEngine, Request
+
+    if enabled:
+        obs.enable()
+    else:
+        obs.disable()
+    pe = PagedEngine(model, params,
+                     PagedConfig(max_slots=2, cache_len=32, page_size=4,
+                                 n_pages=16, prefill_chunk=4, eos_id=-1))
+    rng = np.random.default_rng(5)
+    for i in range(N_REQS):
+        toks = rng.integers(0, model.cfg.vocab_size, size=5, dtype=np.int32)
+        pe.submit(Request(uid=i, tokens=toks, max_new_tokens=NEW_TOKENS))
+    while pe.step():
+        pass
+    return {u: np.asarray(t) for u, t in pe.finished.items()}
+
+
+def _span_ns(rec) -> float:
+    t0 = time.perf_counter()
+    for _ in range(SPAN_ITERS):
+        rec.span("bench")
+    return (time.perf_counter() - t0) / SPAN_ITERS * 1e9
+
+
+def _trees_equal(a, b) -> bool:
+    return all(np.array_equal(x, y) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def bench_obs() -> Dict:
+    model = bench_model(seq_len=SEQ)
+    try:
+        # -- train arms (disabled first: the baseline the ratio divides by)
+        p_off, loss_off, us_off = _train_arm(model, enabled=False)
+        p_on, loss_on, us_on = _train_arm(model, enabled=True)
+        rec = obs.get_recorder()
+        counters = rec.counters()
+        names = [e[2] for e in rec.events()]
+        n_groups = len({n for n in names if n.startswith("edit_sync/")})
+        total = STEPS + WARM_STEPS
+        rounds = len([s for s in range(total)
+                      if s > WARMUP and (s - WARMUP) % TAU == 0])
+
+        # -- serve arms on the matching serve-shaped model
+        serve_model = bench_model(seq_len=32)
+        sparams = serve_model.init(jax.random.PRNGKey(0))
+        toks_off = _serve_arm(serve_model, sparams, enabled=False)
+        toks_on = _serve_arm(serve_model, sparams, enabled=True)
+        srec = obs.get_recorder()
+        scount = srec.counters()
+        ttft_n = len(srec.histograms().get("serve/ttft_s", []))
+
+        # -- span microbenchmark
+        span_off_ns = _span_ns(obs.disable())
+        span_on_ns = _span_ns(obs.Recorder(enabled=True, capacity=4096))
+    finally:
+        obs.disable()
+
+    report = {
+        "train": {
+            "bitwise_identical": bool(_trees_equal(p_off, p_on)
+                                      and loss_off == loss_on),
+            "steps": total, "sync_rounds": rounds,
+            "counter_sync_rounds": counters.get("train/sync_rounds", 0.0),
+            "n_step_spans": names.count("train/step"),
+            "n_sync_groups": n_groups,
+            "us_per_step_disabled": us_off, "us_per_step_enabled": us_on,
+            "enabled_over_disabled": us_on / us_off,
+        },
+        "serve": {
+            "bitwise_identical": bool(
+                toks_off.keys() == toks_on.keys()
+                and all(np.array_equal(toks_off[u], toks_on[u])
+                        for u in toks_off)),
+            "requests": scount.get("serve/requests", 0.0),
+            "tokens": scount.get("serve/tokens", 0.0),
+            "ttft_observations": ttft_n,
+        },
+        "span_ns": {"disabled": span_off_ns, "enabled": span_on_ns},
+    }
+    assert report["train"]["bitwise_identical"], (
+        "enabling obs changed train-step outputs")
+    assert report["serve"]["bitwise_identical"], (
+        "enabling obs changed serve-decode outputs")
+    ratio = report["train"]["enabled_over_disabled"]
+    if ratio > 1.25:
+        msg = f"obs enabled-mode overhead above 25%: {ratio:.3f}x"
+        if os.environ.get("BENCH_STRICT", "0") == "1":
+            raise AssertionError(msg)
+        print(f"# WARNING: {msg}", flush=True)
+    emit("obs/train_step_disabled", us_off,
+         f"enabled={us_on:.1f}us ratio={ratio:.3f}")
+    emit("obs/span_call", span_on_ns / 1e3,
+         f"disabled={span_off_ns:.0f}ns enabled={span_on_ns:.0f}ns")
+    return report
+
+
+def main() -> int:
+    report = bench_obs()
+    write_bench("obs", report)
+    import json
+    print(json.dumps(report, indent=2, sort_keys=True))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

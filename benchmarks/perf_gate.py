@@ -29,6 +29,11 @@ Areas and what each record carries:
 * ``async``         — the async executor on its deterministic virtual
   clock: round times, the tau+one-straggler-step bound and the
   speedup-vs-sync are gated; wall us/step is informational.
+* ``obs``           — the telemetry spine (DESIGN.md §19):
+  enabled-vs-disabled bit-identity of train-step and serve-decode
+  outputs plus the schedule-determined span/counter totals are gated;
+  the enabled/disabled step-time ratio is gated with a generous
+  tolerance, raw times and span-call ns ride along informationally.
 * ``autotune``      — the kernel autotuner: the committed
   ``autotune_table.json`` must be reproducible (deterministic cost-model
   timer), and a real-timer pass records tuned-vs-default speedup per
@@ -448,6 +453,39 @@ def suite_autotune() -> Tuple[Dict, Dict]:
     return metrics, report
 
 
+# ---------------------------------------------------------------------------
+# obs — telemetry bit-identity + event determinism gated, overhead timed
+# ---------------------------------------------------------------------------
+
+def suite_obs() -> Tuple[Dict, Dict]:
+    from benchmarks import obs_overhead as OO
+
+    report = OO.bench_obs()
+    tr, sv = report["train"], report["serve"]
+    metrics = {
+        # the hard guarantees: observation-only, schedule-determined
+        "train/bitwise_identical": _m(tr["bitwise_identical"]),
+        "serve/bitwise_identical": _m(sv["bitwise_identical"]),
+        "train/counter_sync_rounds": _m(tr["counter_sync_rounds"]),
+        "train/n_step_spans": _m(tr["n_step_spans"]),
+        "train/n_sync_groups": _m(tr["n_sync_groups"]),
+        "serve/requests": _m(sv["requests"]),
+        "serve/tokens": _m(sv["tokens"]),
+        "serve/ttft_observations": _m(sv["ttft_observations"]),
+        # overhead: generous gate on the ratio, raw times informational
+        "train/enabled_over_disabled": _m(
+            round(tr["enabled_over_disabled"], 4), tol=0.5, kind="max"),
+        "train/us_per_step_disabled": _m(tr["us_per_step_disabled"],
+                                         gated=False),
+        "train/us_per_step_enabled": _m(tr["us_per_step_enabled"],
+                                        gated=False),
+        "span_ns/disabled": _m(report["span_ns"]["disabled"], gated=False),
+        "span_ns/enabled": _m(report["span_ns"]["enabled"], gated=False),
+    }
+    assert tr["counter_sync_rounds"] == tr["sync_rounds"], tr
+    return metrics, report
+
+
 SUITES: Dict[str, Callable[[], Tuple[Dict, Dict]]] = {
     "roofline": suite_roofline,
     "sync_overlap": suite_sync_overlap,
@@ -456,6 +494,7 @@ SUITES: Dict[str, Callable[[], Tuple[Dict, Dict]]] = {
     "spec": suite_spec,
     "async": suite_async,
     "autotune": suite_autotune,
+    "obs": suite_obs,
 }
 
 

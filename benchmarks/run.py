@@ -15,14 +15,15 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 def main() -> None:
     from benchmarks import (async_throughput, elastic_scaling,
                             fig4_convergence, fig5_stragglers,
-                            fig6_scalability, fig7_ablation, perf_gate,
-                            serve_throughput, sync_bytes, sync_overlap,
-                            table2_throughput)
+                            fig6_scalability, fig7_ablation, obs_overhead,
+                            perf_gate, serve_throughput, sync_bytes,
+                            sync_overlap, table2_throughput)
     print("name,us_per_call,derived")
     t0 = time.time()
     for mod in (table2_throughput, serve_throughput, sync_overlap,
                 sync_bytes, fig5_stragglers, fig4_convergence, fig7_ablation,
-                fig6_scalability, elastic_scaling, async_throughput):
+                fig6_scalability, elastic_scaling, async_throughput,
+                obs_overhead):
         name = mod.__name__.split(".")[-1]
         print(f"# --- {name} ---", flush=True)
         mod.main()

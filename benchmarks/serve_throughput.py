@@ -48,6 +48,7 @@ from benchmarks.common import FAST, bench_model, emit, write_bench
 import jax                                   # noqa: E402
 import jax.numpy as jnp                      # noqa: E402
 
+from repro import obs                            # noqa: E402
 from repro.models import build_model             # noqa: E402
 from repro.serve import (ContinuousConfig, ContinuousEngine,  # noqa: E402
                          OneShotEngine, PagedConfig, PagedEngine, Request,
@@ -307,12 +308,19 @@ def bench_spec_vs_paged(draft_model, draft_params) -> dict:
                 if uid not in ttft:
                     ttft[uid] = time.perf_counter() - submit_t[uid]
 
+            # the spec arm's counters are read back from the obs
+            # recorder — BENCH_spec.json and a live trace share one
+            # source (the AdaptiveSpecController / pool count() calls)
+            rec = obs.enable() if name == "spec" else None
             eng = mk(stream)
+            if rec is not None:
+                obs.disable()       # eng holds rec; paged arm untraced
             _drive(eng, trace, ttft, submit_t)  # warm every compile shape
             eng.finished.clear()
             ttft.clear()
             pre_stats = dict(eng.stats)
             pre_pool = dict(eng.pool.stats)
+            pre_c = rec.counters() if rec is not None else {}
             wall, total, occ = _drive(eng, trace, ttft, submit_t)
             rep = _summary(wall, total, ttft, occ)
             rep["decode_steps"] = (eng.stats["decode_steps"]
@@ -324,10 +332,20 @@ def bench_spec_vs_paged(draft_model, draft_params) -> dict:
             rep["tokens_per_decode_step"] = round(
                 rep["decode_tokens"] / max(rep["decode_steps"], 1), 4)
             if name == "spec":
-                for c in ("spec_rounds", "spec_proposed", "spec_accepted"):
-                    rep[c] = eng.stats[c] - pre_stats[c]
-                rep["rollback_pages"] = (eng.pool.stats["rollback_pages"]
-                                         - pre_pool["rollback_pages"])
+                cur = rec.counters()
+
+                def _c(key):
+                    return int(cur.get(key, 0) - pre_c.get(key, 0))
+                for c, key in (("spec_rounds", "serve/spec/rounds"),
+                               ("spec_proposed", "serve/spec/proposed"),
+                               ("spec_accepted", "serve/spec/accepted")):
+                    rep[c] = _c(key)
+                    assert rep[c] == eng.stats[c] - pre_stats[c], (
+                        c, rep[c], eng.stats[c] - pre_stats[c])
+                rep["rollback_pages"] = _c("serve/pool/rollback_pages")
+                assert rep["rollback_pages"] == (
+                    eng.pool.stats["rollback_pages"]
+                    - pre_pool["rollback_pages"])
                 rep["acceptance_rate"] = round(
                     rep["spec_accepted"] / max(rep["spec_proposed"], 1), 4)
                 rep["accepted_per_target_step"] = round(

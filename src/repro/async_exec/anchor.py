@@ -22,6 +22,7 @@ from typing import Any, Dict, List, Optional, Set
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.outer_opt import DelayedNesterov
 from repro.async_exec.worker import Upload, flat_unflattener, tree_to_flat
 
@@ -80,6 +81,11 @@ class DelayedNesterovAnchor:
         #   k's momentum fold (bounded staleness, max_lead rounds ahead)
         self.history: List[dict] = []       # one record per closed round
         self._open: Dict[int, dict] = {}    # per-round telemetry in flight
+        # telemetry spine; the executor re-points this at its recorder.
+        # All three backends contribute through THIS object in the parent
+        # process (events/threads directly, process on pipe receipt), so
+        # anchor-side hooks see every upload exactly once.
+        self.obs = obs.get_recorder()
 
     # -- protocol ----------------------------------------------------------
 
@@ -96,6 +102,17 @@ class DelayedNesterovAnchor:
                 dropped = True
             else:
                 delta = gated
+        # staleness of this arrival: rounds the worker ran ahead of the
+        # oldest open round (0 = straggler, max_lead = fully ahead)
+        lead = upload.round - self.round
+        self.obs.gauge("async/staleness", lead)
+        self.obs.observe("async/staleness", lead)
+        self.obs.count("comm/wire_bytes", upload.wire_bytes)
+        self.obs.count("async/upload_bytes", upload.wire_bytes)
+        if dropped:
+            self.obs.event("async/upload_dropped", tid="anchor",
+                           wid=upload.wid, round=upload.round)
+            self.obs.count("async/uploads_dropped")
         if not dropped:
             buf = self._bufs.get(upload.round)
             if buf is None:
@@ -125,6 +142,20 @@ class DelayedNesterovAnchor:
             if done is not None:
                 done["t_close"] = at_time
                 self.history.append(done)
+                steps = done["steps"]
+                if steps:
+                    # straggler attribution: the worker that ran fewest
+                    # inner steps bounded this round's progress
+                    slow = min(steps, key=steps.get)
+                    self.obs.event(
+                        "async/round_close", tid="anchor",
+                        round=self.round, t_close=at_time,
+                        dropped=done["dropped"],
+                        wire_bytes=done["wire_bytes"],
+                        straggler_wid=slow,
+                        straggler_steps=steps[slow],
+                        max_steps=max(steps.values()))
+                self.obs.count("async/rounds")
             del self._arrived[self.round]
             self.round += 1
             closed = True

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core.async_sim import WorkerSpeedModel
 from repro.core.outer_opt import DelayedNesterov
 from repro.async_exec.anchor import DelayedNesterovAnchor, UploadGate
@@ -81,7 +82,8 @@ class AsyncExecutor:
                  outer: Optional[DelayedNesterov] = None,
                  inner_opt_states: Optional[list] = None,
                  dn_m: Optional[jnp.ndarray] = None,
-                 start_step: int = 0):
+                 start_step: int = 0,
+                 recorder: Optional[obs.Recorder] = None):
         from repro.optim import AdamW, constant
 
         if backend not in ("events", "threads", "process"):
@@ -105,11 +107,13 @@ class AsyncExecutor:
                                        strategy.inner_clip)
         p0 = init_params if init_params is not None else model.init(
             init_key if init_key is not None else jax.random.PRNGKey(0))
+        self.obs = recorder if recorder is not None else obs.get_recorder()
         self.anchor = DelayedNesterovAnchor(
             p0,
             outer or DelayedNesterov(strategy.outer_lr,
                                      strategy.outer_momentum),
             n_expected=n, gate=gate)
+        self.anchor.obs = self.obs      # one spine across anchor + backends
         if dn_m is not None:                 # continue an outer trajectory
             self.anchor.m = jnp.asarray(dn_m, jnp.float32)
         comm = strategy.comm if strategy.comm.active else None
@@ -213,6 +217,10 @@ class AsyncExecutor:
             elif kind == "upload":
                 up = wk.make_upload()
                 wk._uploaded = True
+                # virtual-clock round span: round_start..t in sim seconds
+                self.obs.span_at("async/round", wk.round_start, t,
+                                 tid=f"w{w}", wid=w, round=wk.round,
+                                 steps=up.steps)
                 closed = self.anchor.contribute(up, at_time=t)
                 if closed:
                     rec = self.anchor.history[-1]
@@ -272,6 +280,13 @@ class AsyncExecutor:
                         if time.monotonic() - round_t0 >= self.tau_time * ts:
                             break
                     up = wk.make_upload()
+                    # recorded outside the lock — Recorder appends are
+                    # thread-safe; timestamps in virtual-time units so all
+                    # three backends' traces are comparable
+                    self.obs.span_at("async/round",
+                                     (round_t0 - t0) / ts, vnow(),
+                                     tid=f"w{w}", wid=w, round=wk.round,
+                                     steps=up.steps)
                     with lock:
                         wk._uploaded = True
                         closed = self.anchor.contribute(up, at_time=vnow())
@@ -338,6 +353,10 @@ class AsyncExecutor:
         t0 = time.monotonic()
         parked: list = []
         done = 0
+        # workers live in spawned interpreters and record nothing; the
+        # parent stamps each worker's round span from its last pull-send
+        # to the upload's arrival (both parent-side timestamps)
+        last_pull = {w: 0.0 for w in range(len(procs))}
         try:
             while done < len(procs):
                 for conn in conn_wait(conns, timeout=600.0):
@@ -354,24 +373,33 @@ class AsyncExecutor:
                                 msg["tokens"], msg["wire_bytes"],
                                 msg["loss"])
                     vt = (time.monotonic() - t0) / self.time_scale
+                    self.obs.span_at("async/round", last_pull[msg["wid"]],
+                                     vt, tid=f"w{msg['wid']}",
+                                     wid=msg["wid"], round=msg["round"],
+                                     steps=msg["steps"])
                     closed = self.anchor.contribute(up, at_time=vt)
                     if closed:
                         taus.append(self.tau_time)
                         self._on_close(self.anchor.history[-1])
-                    entry = (msg["round"] + 1, conns[msg["wid"]])
+                    entry = (msg["round"] + 1, msg["wid"])
                     if entry[0] > self.anchor.round + self.max_lead:
                         parked.append(entry)
                     else:
-                        entry[1].send((np.asarray(self.anchor.theta),
-                                       self.anchor.round))
+                        conns[entry[1]].send((np.asarray(self.anchor.theta),
+                                              self.anchor.round))
+                        last_pull[entry[1]] = (time.monotonic() - t0) \
+                            / self.time_scale
                     if closed and parked:
                         still = []
-                        for rnd, c in parked:
+                        for rnd, pw in parked:
                             if rnd <= self.anchor.round + self.max_lead:
-                                c.send((np.asarray(self.anchor.theta),
-                                        self.anchor.round))
+                                conns[pw].send(
+                                    (np.asarray(self.anchor.theta),
+                                     self.anchor.round))
+                                last_pull[pw] = (time.monotonic() - t0) \
+                                    / self.time_scale
                             else:
-                                still.append((rnd, c))
+                                still.append((rnd, pw))
                         parked = still
         finally:
             for p in procs:

@@ -34,6 +34,7 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.comm.compress import (FP8_QMAX, CommConfig, effective_chunking,
                                  fp8_quantize)
 from repro.kernels.ops import (pg_dequant_op, pg_msg_absmax_op, pg_quant_msg_op,
@@ -61,9 +62,19 @@ def compressed_combine(delta, w, ef: Optional[jnp.ndarray],
     L, R, N = delta.shape
     Rd = comm.intra if (comm.intra > 1 and R % comm.intra == 0) else 1
     P = R // Rd
+    # trace-time telemetry: one span per traced combine and the nominal
+    # per-replica slow-link payload under a per-compressor-tag counter
+    # (shapes are static, so wire_bytes is a python float here)
+    rec = obs.get_recorder()
     if (comm.compressor == "int8" and getattr(comm, "fused", False)
             and Rd == 1):
-        return _fused_int8_combine(delta, w, ef, comm, seed, impl=impl)
+        with rec.span("comm/compressed_combine", tid="trace",
+                      compressor="int8_fused", L=L, R=R, N=N):
+            out = _fused_int8_combine(delta, w, ef, comm, seed, impl=impl)
+        rec.count("comm/bytes/int8_fused", out[2])
+        return out
+    span = rec.span("comm/compressed_combine", tid="trace",
+                    compressor=comm.compressor, L=L, R=R, N=N, intra=Rd)
     u = delta * w[:, :, None]
     if ef is not None:
         u = u + ef.astype(jnp.float32)
@@ -112,7 +123,10 @@ def compressed_combine(delta, w, ef: Optional[jnp.ndarray],
         new_ef = err
     # hierarchical reduce: only one partial per node crosses the slow
     # links, so the per-replica slow-link payload divides by Rd
-    return avg, new_ef, comm.wire_bytes(L, N) / Rd
+    wire = comm.wire_bytes(L, N) / Rd
+    span.end()
+    rec.count("comm/bytes/" + comm.compressor, wire)
+    return avg, new_ef, wire
 
 
 def _fused_int8_combine(delta, w, ef, comm: CommConfig, seed, *, impl: str

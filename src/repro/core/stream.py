@@ -32,6 +32,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core import penalty as PEN
 from repro.core.penalty import PenaltyConfig
 from repro.kernels.ops import pg_penalty_group_op
@@ -241,12 +242,21 @@ class SyncSchedule:
         gp = PEN.split_by_group(state["params"], self.cfg)
         count = state["ema"]["count"]
         results = {}
+        # apply() runs under jit tracing, so these spans are TRACE-TIME
+        # records: one span per group, named exactly like the HLO scope
+        # (``edit_sync/<group>``) so the Chrome trace's group set matches
+        # ``hlo_analysis.sync_collective_tags`` — the runtime per-round
+        # timing lives host-side in TrainSession.run_steps
+        rec = obs.get_recorder()
         if streamed:
             for g in self.groups:
-                with jax.named_scope(_scope(g.key)):
-                    results[g.key] = jax.lax.cond(
-                        do_sync, self._fire(g, count, flush_ef), self._skip,
-                        self._operand(state, gp, g))
+                scope = _scope(g.key)
+                with rec.span(scope, tid="trace", group=g.key,
+                              n_rep=g.n_rep):
+                    with jax.named_scope(scope):
+                        results[g.key] = jax.lax.cond(
+                            do_sync, self._fire(g, count, flush_ef),
+                            self._skip, self._operand(state, gp, g))
         else:
             operands = tuple(self._operand(state, gp, g)
                              for g in self.groups)
@@ -258,7 +268,8 @@ class SyncSchedule:
             def skip_all(ops):
                 return tuple(self._skip(o) for o in ops)
 
-            with jax.named_scope("edit_sync/all"):
+            with rec.span("edit_sync/all", tid="trace"), \
+                    jax.named_scope("edit_sync/all"):
                 res = jax.lax.cond(do_sync, fire_all, skip_all, operands)
             results = {g.key: r for g, r in zip(self.groups, res)}
 

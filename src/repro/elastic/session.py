@@ -35,6 +35,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.checkpoint.store import AsyncCheckpointer
 from repro.core import Strategy, init_train_state, make_train_step
 from repro.core.async_sim import AEDiTScheduler
@@ -75,7 +76,8 @@ class TrainSession:
                  inner_opt=None, lr_sched=None,
                  active_fn: Optional[Callable[[int], np.ndarray]] = None,
                  scheduler: Optional[AEDiTScheduler] = None,
-                 state: Optional[Dict[str, Any]] = None):
+                 state: Optional[Dict[str, Any]] = None,
+                 recorder: Optional[obs.Recorder] = None):
         self.model = model
         self.strategy = strategy
         self.data = data
@@ -90,12 +92,27 @@ class TrainSession:
             self.active_fn = scheduler.active_fn()
         self.state = (state if state is not None else init_train_state(
             model, strategy, self.inner_opt, jax.random.PRNGKey(tcfg.seed)))
-        self.history: List[Dict[str, float]] = []
+        # telemetry spine: an explicit recorder wins; otherwise share the
+        # global one when tracing is enabled, else keep a private disabled
+        # Recorder so concurrent sessions don't interleave their metric
+        # rows (history is a view of its metric channel — DESIGN.md §19)
+        if recorder is not None:
+            self.obs = recorder
+        else:
+            g = obs.get_recorder()
+            self.obs = g if g.enabled else obs.Recorder(enabled=False)
         self.segments: List[Dict[str, Any]] = []   # segment-change log
         self._step_cache: Dict[Any, Callable] = {}
         self._eval_fn = jax.jit(lambda p, b: self.model.loss(p, b)[0])
         self._val_data = self._make_val_data()
         self._ckpt: Optional[AsyncCheckpointer] = None
+
+    @property
+    def history(self) -> List[Dict[str, float]]:
+        """Per-step metric rows — a live view of the recorder's
+        ``train/history`` metric channel (the pre-obs list-of-dicts API,
+        pinned by tests/test_obs.py)."""
+        return self.obs.metric_rows("train/history")
 
     # -- step function (re-jitted per topology, cached) --------------------
 
@@ -168,6 +185,10 @@ class TrainSession:
             "step": step, "replicas": new_r,
             "sync_interval": self.strategy.sync_interval,
             "global_batch": global_batch, "lr_scale": self.lr_scale})
+        self.obs.event("elastic/seam", step=step, replicas_from=old.replicas,
+                       replicas_to=new_r, consolidated=not in_warmup,
+                       global_batch=global_batch, lr_scale=self.lr_scale)
+        self.obs.count("elastic/seams")
 
     # -- the step loop ------------------------------------------------------
 
@@ -194,13 +215,15 @@ class TrainSession:
                 active = jnp.asarray(self.active_fn(int(self.state["step"])))
             step = int(self.state["step"])
             batch = {"tokens": jnp.asarray(self.data.batch(step))}
-            if hint is not None:
-                self.state, m = self._step_fn(self.state, batch, active,
-                                              jnp.asarray(hint))
-            elif active is not None:
-                self.state, m = self._step_fn(self.state, batch, active)
-            else:
-                self.state, m = self._step_fn(self.state, batch)
+            with self.obs.span("train/step", step=step):
+                if hint is not None:
+                    self.state, m = self._step_fn(self.state, batch, active,
+                                                  jnp.asarray(hint))
+                elif active is not None:
+                    self.state, m = self._step_fn(self.state, batch, active)
+                else:
+                    self.state, m = self._step_fn(self.state, batch)
+                jax.block_until_ready(m["loss"])
             rec = {"step": step, "loss": float(m["loss"]),
                    "lr": float(m["lr"]), "grad_norm": float(m["grad_norm"]),
                    "replicas": self.strategy.replicas}
@@ -208,7 +231,26 @@ class TrainSession:
             rec.update({k: float(m[k]) for k in _HISTORY_KEYS if k in m})
             if tcfg.eval_every and (step + 1) % tcfg.eval_every == 0:
                 rec["ppl"] = self.eval_ppl()
-            self.history.append(rec)
+            self.obs.metric("train/history", **rec)
+            if rec.get("synced"):
+                self.obs.event("train/sync_round", tid="sync", step=step,
+                               wire_bytes=rec.get("wire_bytes", 0.0),
+                               comp_ratio=rec.get("comp_ratio", 0.0),
+                               mean_beta=rec.get("mean_beta", 0.0))
+                self.obs.count("comm/wire_bytes",
+                               rec.get("wire_bytes", 0.0))
+                self.obs.count("train/sync_rounds")
+                # penalty telemetry: anomalies and hard clips are the
+                # events Algorithm 2's pseudo-gradient penalty exists for
+                if rec.get("anomalous_frac", 0.0) > 0.0:
+                    self.obs.event("train/anomaly", tid="sync", step=step,
+                                   anomalous_frac=rec["anomalous_frac"],
+                                   rollback_frac=rec.get("rollback_frac",
+                                                         0.0))
+                    self.obs.count("train/anomalies")
+                if 0.0 < rec.get("mean_beta", 1.0) < 1.0:
+                    self.obs.event("train/penalty_clip", tid="sync",
+                                   step=step, mean_beta=rec["mean_beta"])
             if tcfg.log_every and step % tcfg.log_every == 0:
                 dt = time.time() - t0
                 extra = f" ppl={rec['ppl']:.2f}" if "ppl" in rec else ""
@@ -302,7 +344,8 @@ class TrainSession:
             backend=backend, time_scale=time_scale, max_lead=max_lead,
             gate=gate, controller=controller, init_params=anchor_tree,
             outer=DelayedNesterov(s.outer_lr, s.outer_momentum),
-            inner_opt_states=opt_rows, dn_m=dn_m, start_step=step0)
+            inner_opt_states=opt_rows, dn_m=dn_m, start_step=step0,
+            recorder=self.obs)
         res = ex.run(rounds)
 
         # ---- fold the async outcome back into the SPMD state -------------
@@ -331,12 +374,14 @@ class TrainSession:
         self.state["step"] = jnp.asarray(step1, self.state["step"].dtype)
         for rec in res.rounds:
             losses = list(rec["losses"].values())
-            self.history.append({
-                "step": step1, "async_round": rec["round"],
-                "loss": float(np.mean(losses)) if losses else float("nan"),
-                "round_steps": float(np.mean(list(rec["steps"].values()))),
-                "wire_bytes": float(rec["wire_bytes"]),
-                "replicas": R})
+            self.obs.metric(
+                "train/history", step=step1, async_round=rec["round"],
+                loss=float(np.mean(losses)) if losses else float("nan"),
+                round_steps=float(np.mean(list(rec["steps"].values()))),
+                wire_bytes=float(rec["wire_bytes"]), replicas=R)
+            # async p2p upload bytes land in the same ``comm/wire_bytes``
+            # counter namespace as the sync path — counted per upload by
+            # DelayedNesterovAnchor.contribute, not re-counted here
         self.segments.append({
             "step": step1, "replicas": R, "async_rounds": rounds,
             "tau_time": ex.tau_time, "backend": backend,
@@ -373,11 +418,23 @@ class TrainSession:
         use_async = getattr(self.tcfg, "async_ckpt", True) and not sync
         if use_async and self._ckpt is None:
             self._ckpt = AsyncCheckpointer()
-        save_train_state(
+        t0 = time.perf_counter()
+        fut = save_train_state(
             directory, self.state, self.model.cfg, self.strategy,
             metadata={"lr_scale": self.lr_scale,
                       "global_batch": self.data.global_batch},
             checkpointer=self._ckpt if use_async else None)
+        self.obs.event("elastic/ckpt", step=int(self.state["step"]),
+                       directory=directory, mode="async" if fut is not None
+                       else "sync")
+        if fut is not None:
+            # write latency lands when the background thread finishes
+            fut.add_done_callback(
+                lambda _f, _t=t0: self.obs.observe(
+                    "elastic/ckpt_write_s", time.perf_counter() - _t))
+        else:
+            self.obs.observe("elastic/ckpt_write_s",
+                             time.perf_counter() - t0)
 
     def flush(self) -> None:
         if self._ckpt is not None:

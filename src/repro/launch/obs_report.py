@@ -1,0 +1,278 @@
+"""Summarize a run's obs telemetry: ``python -m repro.launch.obs_report``.
+
+Input is the pair of artifacts a run exports —
+
+* a Chrome trace (``obs.write_chrome_trace``): spans/events/counters;
+* a metrics JSONL (``obs.write_metrics_jsonl``): the ``train/history``
+  rows plus histogram summary lines.
+
+Either may be omitted; each section prints from whichever artifact
+carries its data.  ``--hlo-overlap`` additionally takes a
+``sync_overlap_report`` JSON (see ``launch/hlo_analysis.py``) so the
+runtime boundary-step slowdown can be read next to the compiler's
+static overlap estimate.
+
+Sections: sync-round timeline, runtime overlap vs the HLO estimate,
+async staleness distribution, penalty/anomaly events, serve latency
+(TTFT/TBT percentiles, speculative acceptance, page-pool occupancy).
+
+The module is import-safe for tests: ``summarize(trace, metrics,
+hlo=...)`` returns the report string; ``summarize_recorder(rec)``
+renders a live Recorder without touching disk.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Any, Dict, List, Optional
+
+from repro.obs import chrome_trace
+from repro.obs.export import read_metrics_jsonl
+
+_LINE = "-" * 64
+
+
+def _pct(vals: List[float], q: float) -> float:
+    if not vals:
+        return float("nan")
+    s = sorted(vals)
+    i = min(len(s) - 1, int(round(q * (len(s) - 1))))
+    return s[i]
+
+
+def _fmt_s(sec: float) -> str:
+    if sec != sec:                    # NaN
+        return "n/a"
+    if sec < 1e-3:
+        return f"{sec * 1e6:.1f}us"
+    if sec < 1.0:
+        return f"{sec * 1e3:.2f}ms"
+    return f"{sec:.3f}s"
+
+
+def _trace_events(trace: Dict[str, Any], name: str) -> List[Dict[str, Any]]:
+    return [e for e in trace.get("traceEvents", [])
+            if e.get("name") == name]
+
+
+def _trace_counters(trace: Dict[str, Any]) -> Dict[str, float]:
+    for e in trace.get("traceEvents", []):
+        if e.get("ph") == "C" and e.get("name") == "counters":
+            return dict(e.get("args", {}))
+    return {}
+
+
+def _hist(metrics: Dict[str, List[Dict]], name: str) -> List[float]:
+    rows = metrics.get("hist/" + name, [])
+    return [float(v) for r in rows for v in r.get("values", [])]
+
+
+# -- sections ---------------------------------------------------------------
+
+def _section_sync(out: List[str], trace: Optional[Dict],
+                  metrics: Dict) -> None:
+    rows = metrics.get("train/history", [])
+    syncs = [r for r in rows if r.get("synced")]
+    out.append("sync rounds")
+    if not syncs and trace is not None:
+        syncs = [e.get("args", {}) for e in
+                 _trace_events(trace, "train/sync_round")]
+    if not syncs:
+        out.append("  (none recorded)")
+        return
+    wire = sum(float(r.get("wire_bytes", 0)) for r in syncs)
+    out.append(f"  rounds: {len(syncs)}   total wire: {wire:,.0f} B")
+    for r in syncs[:20]:
+        out.append(
+            f"  step {int(r.get('step', -1)):5d}  "
+            f"wire {float(r.get('wire_bytes', 0)):>12,.0f} B  "
+            f"comp {float(r.get('comp_ratio', 0)):5.2f}x  "
+            f"beta {float(r.get('mean_beta', 0)):.3f}")
+    if len(syncs) > 20:
+        out.append(f"  ... {len(syncs) - 20} more")
+    if trace is not None:
+        groups = sorted({e["name"] for e in trace.get("traceEvents", [])
+                         if str(e.get("name", "")).startswith("edit_sync/")})
+        if groups:
+            out.append(f"  traced groups ({len(groups)}): "
+                       + ", ".join(g[len("edit_sync/"):] for g in groups))
+
+
+def _section_overlap(out: List[str], trace: Optional[Dict], metrics: Dict,
+                     hlo: Optional[Dict]) -> None:
+    out.append("overlap (runtime vs HLO estimate)")
+    have = False
+    if trace is not None:
+        steps = _trace_events(trace, "train/step")
+        rows = metrics.get("train/history", [])
+        flags = {int(r["step"]): bool(r.get("synced"))
+                 for r in rows if "step" in r}
+        on, off = [], []
+        for e in steps:
+            dur = float(e.get("dur", 0.0)) / 1e6
+            (on if flags.get(int(e.get("args", {}).get("step", -1)))
+             else off).append(dur)
+        if on and off:
+            # medians: the first step of each variant includes jit
+            # compilation and would swamp a mean
+            t_on, t_off = _pct(on, .5), _pct(off, .5)
+            slow = (t_on - t_off) / t_off if t_off > 0 else float("nan")
+            out.append(
+                f"  boundary step {_fmt_s(t_on)} vs off-boundary "
+                f"{_fmt_s(t_off)} (median; {slow * +100:+.1f}% at the "
+                f"boundary)")
+            have = True
+    if hlo is not None:
+        frac = hlo.get("overlap_fraction")
+        out.append(f"  HLO estimate: streamed={hlo.get('streamed')}  "
+                   f"overlap_fraction={frac}")
+        have = True
+    if not have:
+        out.append("  (needs a trace with train/step spans "
+                   "and/or --hlo-overlap)")
+
+
+def _section_async(out: List[str], trace: Optional[Dict],
+                   metrics: Dict) -> None:
+    lead = _hist(metrics, "async/staleness")
+    out.append("async staleness")
+    if not lead:
+        out.append("  (no async rounds recorded)")
+        return
+    from collections import Counter
+    dist = Counter(int(v) for v in lead)
+    total = sum(dist.values())
+    for k in sorted(dist):
+        frac = dist[k] / total
+        out.append(f"  lead {k}: {dist[k]:4d} uploads ({frac * 100:5.1f}%)"
+                   f"  {'#' * int(round(frac * 40))}")
+    if trace is not None:
+        closes = _trace_events(trace, "async/round_close")
+        if closes:
+            stragglers = [e["args"].get("straggler_wid") for e in closes
+                          if "args" in e]
+            out.append(f"  rounds closed: {len(closes)}; straggler worker "
+                       f"histogram: "
+                       + str(dict(Counter(stragglers))))
+
+
+def _section_penalty(out: List[str], trace: Optional[Dict],
+                     metrics: Dict) -> None:
+    out.append("penalty / anomaly events")
+    n_anom = n_clip = 0
+    if trace is not None:
+        n_anom = len(_trace_events(trace, "train/anomaly"))
+        n_clip = len(_trace_events(trace, "train/penalty_clip"))
+    rows = metrics.get("train/history", [])
+    frac = [float(r.get("anomalous_frac", 0)) for r in rows
+            if r.get("synced")]
+    out.append(f"  anomaly events: {n_anom}   clip events: {n_clip}")
+    if frac:
+        out.append(f"  anomalous_frac over rounds: mean {sum(frac) / len(frac):.4f}"
+                   f"  max {max(frac):.4f}")
+
+
+def _section_serve(out: List[str], trace: Optional[Dict],
+                   metrics: Dict) -> None:
+    out.append("serve")
+    ttft = _hist(metrics, "serve/ttft_s")
+    tbt = _hist(metrics, "serve/tbt_s")
+    counters = _trace_counters(trace) if trace is not None else {}
+    any_out = False
+    if ttft:
+        out.append(f"  TTFT  p50 {_fmt_s(_pct(ttft, .5))}  "
+                   f"p90 {_fmt_s(_pct(ttft, .9))}  "
+                   f"p99 {_fmt_s(_pct(ttft, .99))}  (n={len(ttft)})")
+        any_out = True
+    if tbt:
+        out.append(f"  TBT   p50 {_fmt_s(_pct(tbt, .5))}  "
+                   f"p90 {_fmt_s(_pct(tbt, .9))}  "
+                   f"p99 {_fmt_s(_pct(tbt, .99))}  (n={len(tbt)})")
+        any_out = True
+    prop = counters.get("serve/spec/proposed", 0.0)
+    if prop:
+        acc = counters.get("serve/spec/accepted", 0.0)
+        out.append(
+            f"  spec acceptance: {acc / prop * 100:.1f}% "
+            f"({acc:.0f}/{prop:.0f}); demotions: "
+            f"{counters.get('serve/spec/demotions', 0):.0f}  promotions: "
+            f"{counters.get('serve/spec/promotions', 0):.0f}")
+        any_out = True
+    pool = {k: v for k, v in counters.items()
+            if k.startswith("serve/pool/")}
+    if pool:
+        out.append("  pool: " + "  ".join(
+            f"{k.split('/')[-1]}={v:.0f}" for k, v in sorted(pool.items())))
+        any_out = True
+    if trace is not None:
+        occ = (trace.get("otherData", {}).get("gauges", {})
+               .get("serve/page_occupancy"))
+        if occ is not None:
+            out.append(f"  page occupancy (last): {float(occ) * 100:.1f}%")
+            any_out = True
+    if not any_out:
+        out.append("  (no serve activity recorded)")
+
+
+# -- entry points -----------------------------------------------------------
+
+def summarize(trace: Optional[Dict[str, Any]],
+              metrics: Optional[Dict[str, List[Dict]]],
+              hlo: Optional[Dict[str, Any]] = None) -> str:
+    metrics = metrics or {}
+    out: List[str] = ["obs report", _LINE]
+    if trace is not None:
+        n_ev = len(trace.get("traceEvents", []))
+        drop = trace.get("otherData", {}).get("dropped_events", 0)
+        out.append(f"trace: {n_ev} events ({drop} dropped from the ring)")
+    hist_rows = metrics.get("train/history", [])
+    if hist_rows:
+        out.append(f"history: {len(hist_rows)} step/round rows")
+    out.append(_LINE)
+    _section_sync(out, trace, metrics)
+    out.append(_LINE)
+    _section_overlap(out, trace, metrics, hlo)
+    out.append(_LINE)
+    _section_async(out, trace, metrics)
+    out.append(_LINE)
+    _section_penalty(out, trace, metrics)
+    out.append(_LINE)
+    _section_serve(out, trace, metrics)
+    return "\n".join(out)
+
+
+def summarize_recorder(rec, hlo: Optional[Dict[str, Any]] = None) -> str:
+    """Render a live Recorder (no files): trace from its snapshot, metric
+    rows/histograms read directly."""
+    snap = rec.snapshot()
+    metrics: Dict[str, List[Dict]] = dict(snap["metrics"])
+    for name, vals in snap["histograms"].items():
+        metrics["hist/" + name] = [{"values": vals}]
+    return summarize(chrome_trace(snap), metrics, hlo)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        description="Summarize an obs trace/metrics export")
+    ap.add_argument("--trace", help="Chrome trace JSON path")
+    ap.add_argument("--metrics", help="metrics JSONL path")
+    ap.add_argument("--hlo-overlap",
+                    help="sync_overlap_report JSON path (static estimate)")
+    args = ap.parse_args(argv)
+    if not args.trace and not args.metrics:
+        ap.error("need --trace and/or --metrics")
+    trace = None
+    if args.trace:
+        with open(args.trace) as f:
+            trace = json.load(f)
+    metrics = read_metrics_jsonl(args.metrics) if args.metrics else {}
+    hlo = None
+    if args.hlo_overlap:
+        with open(args.hlo_overlap) as f:
+            hlo = json.load(f)
+    print(summarize(trace, metrics, hlo))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

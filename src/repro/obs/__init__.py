@@ -1,0 +1,26 @@
+"""repro.obs — unified runtime telemetry (tracing + metrics spine).
+
+Quick start::
+
+    from repro import obs
+    rec = obs.enable()                    # global, enabled Recorder
+    with rec.span("edit_sync/blocks_0"):  # traced region
+        ...
+    rec.count("comm/wire_bytes", 4096)
+    obs.write_chrome_trace(rec.snapshot(), "trace.json")
+
+With obs disabled (the default) every hot-path hook is a no-op; the
+metric channel that backs ``Trainer.history`` keeps working either way.
+See DESIGN.md §19 for the event schema and overhead budget.
+"""
+from .recorder import (Recorder, NullRecorder, get_recorder, set_recorder,
+                       enable, disable)
+from .export import (chrome_trace, write_chrome_trace, write_metrics_jsonl,
+                     read_metrics_jsonl)
+
+__all__ = [
+    "Recorder", "NullRecorder", "get_recorder", "set_recorder",
+    "enable", "disable",
+    "chrome_trace", "write_chrome_trace", "write_metrics_jsonl",
+    "read_metrics_jsonl",
+]

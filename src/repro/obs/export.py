@@ -1,0 +1,137 @@
+"""Exporters for :class:`repro.obs.Recorder` snapshots.
+
+Two on-disk formats:
+
+* ``chrome_trace`` / ``write_chrome_trace`` — the Chrome
+  ``chrome://tracing`` / Perfetto JSON array-of-events format.  Spans
+  become ``ph: "X"`` complete events, instant events ``ph: "i"``;
+  timestamps are microseconds relative to the recorder's origin so
+  traces from deterministic test clocks are byte-stable.
+* ``write_metrics_jsonl`` — one JSON object per line, each tagged with
+  the metric-channel name it came from (``{"_name": ..., **fields}``).
+  This is the sink ``Trainer.history`` reads back and what
+  ``launch/obs_report.py`` summarizes.
+
+Both writers sort deterministically (events by sequence number, metric
+names lexicographically) so identical event sequences produce identical
+bytes — pinned by tests/test_obs.py.
+"""
+from __future__ import annotations
+
+import json
+from typing import Any, Dict, IO, List, Union
+
+__all__ = [
+    "chrome_trace", "write_chrome_trace", "write_metrics_jsonl",
+    "read_metrics_jsonl",
+]
+
+
+def _us(t: float, origin: float) -> float:
+    return round((t - origin) * 1e6, 3)
+
+
+def _jsonable(v: Any) -> Any:
+    if isinstance(v, (str, int, float, bool)) or v is None:
+        return v
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    try:
+        return float(v)  # numpy / jax scalars
+    except (TypeError, ValueError):
+        return str(v)
+
+
+def chrome_trace(snapshot: Dict[str, Any],
+                 pid: str = "repro") -> Dict[str, Any]:
+    """Render a recorder snapshot as a Chrome-trace JSON object."""
+    origin = snapshot.get("t_origin", 0.0)
+    out: List[Dict[str, Any]] = []
+    for seq, kind, name, tid, t0, dur, args in snapshot["events"]:
+        ev: Dict[str, Any] = {
+            "name": name, "ph": kind, "pid": pid, "tid": tid,
+            "ts": _us(t0, origin),
+        }
+        if kind == "X":
+            ev["dur"] = round(dur * 1e6, 3)
+        elif kind == "i":
+            ev["s"] = "t"
+        if args:
+            ev["args"] = _jsonable(args)
+        out.append(ev)
+    # counter summary as a final counter event, one series per name
+    counters = snapshot.get("counters") or {}
+    if counters:
+        last_ts = out[-1]["ts"] if out else 0.0
+        out.append({
+            "name": "counters", "ph": "C", "pid": pid, "tid": "counters",
+            "ts": last_ts,
+            "args": {k: counters[k] for k in sorted(counters)},
+        })
+    return {
+        "traceEvents": out,
+        "displayTimeUnit": "ms",
+        "otherData": {
+            "dropped_events": snapshot.get("dropped", 0),
+            "gauges": _jsonable(snapshot.get("gauges") or {}),
+        },
+    }
+
+
+def write_chrome_trace(snapshot: Dict[str, Any],
+                       path_or_file: Union[str, IO[str]],
+                       pid: str = "repro") -> Dict[str, Any]:
+    """Write the Chrome trace for ``snapshot``; returns the trace dict."""
+    trace = chrome_trace(snapshot, pid=pid)
+    if hasattr(path_or_file, "write"):
+        json.dump(trace, path_or_file, sort_keys=True)  # type: ignore
+    else:
+        with open(path_or_file, "w") as f:  # type: ignore[arg-type]
+            json.dump(trace, f, sort_keys=True)
+    return trace
+
+
+def write_metrics_jsonl(snapshot: Dict[str, Any],
+                        path_or_file: Union[str, IO[str]]) -> int:
+    """Write every metric row as one JSON line; returns the line count.
+
+    Histograms are appended as summary rows (``_name: "hist/<name>"``)
+    so a JSONL file alone can reconstruct the distributions the report
+    CLI prints.
+    """
+    lines: List[str] = []
+    metrics = snapshot.get("metrics") or {}
+    for name in sorted(metrics):
+        for row in metrics[name]:
+            lines.append(json.dumps({"_name": name, **_jsonable(row)},
+                                    sort_keys=True))
+    hists = snapshot.get("histograms") or {}
+    for name in sorted(hists):
+        vals = hists[name]
+        lines.append(json.dumps({"_name": "hist/" + name,
+                                 "values": [round(float(v), 9)
+                                            for v in vals]},
+                                sort_keys=True))
+    text = "\n".join(lines) + ("\n" if lines else "")
+    if hasattr(path_or_file, "write"):
+        path_or_file.write(text)  # type: ignore[union-attr]
+    else:
+        with open(path_or_file, "w") as f:  # type: ignore[arg-type]
+            f.write(text)
+    return len(lines)
+
+
+def read_metrics_jsonl(path: str) -> Dict[str, List[Dict[str, Any]]]:
+    """Read a metrics JSONL file back into ``{name: [rows...]}``."""
+    out: Dict[str, List[Dict[str, Any]]] = {}
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            row = json.loads(line)
+            name = row.pop("_name", "unknown")
+            out.setdefault(name, []).append(row)
+    return out

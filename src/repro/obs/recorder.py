@@ -1,0 +1,275 @@
+"""Ring-buffered runtime telemetry: spans, events, counters, metrics.
+
+One ``Recorder`` instance is the telemetry spine for a whole run.  It
+carries two channels with different cost/retention trade-offs:
+
+* **trace channel** — spans (``span``/``span_at``) and instant events
+  (``event``) land in a bounded ``collections.deque`` ring; counters,
+  gauges and histograms are typed aggregates.  The whole channel is
+  gated by ``enabled`` and costs ~zero when off: ``span()`` returns a
+  shared no-op context manager and ``count``/``gauge``/``observe``
+  return after one attribute check.
+* **metric channel** — ``metric(name, **fields)`` appends a dict to an
+  unbounded per-name list.  This is *not* gated by ``enabled``: it
+  replaces pre-obs bookkeeping (``Trainer.history`` rows, engine stats)
+  at the same cost that bookkeeping already paid, and it is what the
+  JSONL sink and ``Trainer.history`` back-compat view read.
+
+Thread-safety: ring appends and metric appends rely on the GIL-atomic
+``deque.append``/``list.append``; read-modify-write aggregates
+(counters, gauges, histogram lists creation) take a small lock.  The
+``process`` async backend runs workers in spawned interpreters — those
+record nothing; the parent records on its side of the pipe, so one
+Recorder per parent process is the rule.
+
+Timestamps come from an injectable ``clock`` (default
+``time.perf_counter``) so exporters can be tested deterministically and
+virtual-time backends (the ``events`` async simulator) can stamp spans
+with simulated seconds via ``span_at``.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import threading
+import time
+from collections import deque
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+__all__ = [
+    "Recorder", "NullRecorder", "get_recorder", "set_recorder",
+    "enable", "disable",
+]
+
+
+class _NullSpan:
+    """Shared, reusable no-op context manager for disabled recorders."""
+
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+    def end(self) -> None:
+        pass
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _Span:
+    """A live span; close it via ``with`` or an explicit ``end()``."""
+
+    __slots__ = ("_rec", "name", "args", "tid", "t0", "_done")
+
+    def __init__(self, rec: "Recorder", name: str, tid: str,
+                 args: Optional[Dict[str, Any]]):
+        self._rec = rec
+        self.name = name
+        self.tid = tid
+        self.args = args
+        self.t0 = rec._clock()
+        self._done = False
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.end()
+        return False
+
+    def end(self) -> None:
+        if self._done:
+            return
+        self._done = True
+        rec = self._rec
+        rec._push(("X", self.name, self.tid, self.t0,
+                   rec._clock() - self.t0, self.args))
+
+
+class Recorder:
+    """Low-overhead telemetry sink; see module docstring.
+
+    Parameters
+    ----------
+    enabled:   gates the trace channel (spans/events/counters).  The
+               metric channel always records.
+    capacity:  ring size for trace events; the oldest events are dropped
+               once full (``dropped`` reports how many).
+    clock:     monotonic ``() -> float`` seconds; injectable for tests.
+    """
+
+    def __init__(self, enabled: bool = True, capacity: int = 65536,
+                 clock: Optional[Callable[[], float]] = None):
+        self.enabled = bool(enabled)
+        self.capacity = int(capacity)
+        self._clock = clock or time.perf_counter
+        self._ring: deque = deque(maxlen=self.capacity)
+        self._seq = itertools.count()
+        self._lock = threading.Lock()
+        self._counters: Dict[str, float] = {}
+        self._gauges: Dict[str, float] = {}
+        self._hists: Dict[str, List[float]] = {}
+        self._metrics: Dict[str, List[Dict[str, Any]]] = {}
+        self._t_origin = self._clock()
+
+    # -- trace channel ----------------------------------------------------
+    def _push(self, ev: Tuple) -> None:
+        # (seq, kind, name, tid, t0, dur, args); deque.append is atomic.
+        self._ring.append((next(self._seq),) + ev)
+
+    def span(self, name: str, tid: str = "main", **args):
+        """Open a span; use as a context manager or call ``.end()``."""
+        if not self.enabled:
+            return _NULL_SPAN
+        return _Span(self, name, tid, args or None)
+
+    def span_at(self, name: str, t0: float, t1: float,
+                tid: str = "main", **args) -> None:
+        """Record a span with externally supplied timestamps (e.g. the
+        virtual clock of the async ``events`` backend)."""
+        if not self.enabled:
+            return
+        self._push(("X", name, tid, float(t0), float(t1) - float(t0),
+                    args or None))
+
+    def event(self, name: str, tid: str = "main", **args) -> None:
+        """Record an instant event."""
+        if not self.enabled:
+            return
+        self._push(("i", name, tid, self._clock(), 0.0, args or None))
+
+    def count(self, name: str, value: float = 1.0) -> None:
+        """Add ``value`` to the counter ``name``."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._counters[name] = self._counters.get(name, 0.0) \
+                + float(value)
+
+    def gauge(self, name: str, value: float) -> None:
+        """Set the gauge ``name`` to its latest ``value``."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._gauges[name] = float(value)
+
+    def observe(self, name: str, value: float) -> None:
+        """Append ``value`` to the histogram ``name``."""
+        if not self.enabled:
+            return
+        with self._lock:
+            self._hists.setdefault(name, []).append(float(value))
+
+    # -- metric channel (always on) ---------------------------------------
+    def metric(self, name: str, **fields) -> Dict[str, Any]:
+        """Append a metric row; returns the stored dict."""
+        with self._lock:
+            rows = self._metrics.setdefault(name, [])
+        rows.append(fields)
+        return fields
+
+    def metric_rows(self, name: str) -> List[Dict[str, Any]]:
+        """The live row list for ``name`` (empty list if unseen)."""
+        return self._metrics.get(name, [])
+
+    # -- views ------------------------------------------------------------
+    @property
+    def dropped(self) -> int:
+        """Trace events evicted from the ring so far."""
+        ring = list(self._ring)
+        n_seen = (ring[-1][0] + 1) if ring else 0
+        return max(0, n_seen - len(ring))
+
+    def events(self) -> List[Tuple]:
+        """Snapshot of ring events, oldest first, as tuples
+        ``(seq, kind, name, tid, t0, dur, args)``."""
+        return list(self._ring)
+
+    def counters(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._counters)
+
+    def gauges(self) -> Dict[str, float]:
+        with self._lock:
+            return dict(self._gauges)
+
+    def histograms(self) -> Dict[str, List[float]]:
+        with self._lock:
+            return {k: list(v) for k, v in self._hists.items()}
+
+    def metrics(self) -> Dict[str, List[Dict[str, Any]]]:
+        with self._lock:
+            names = list(self._metrics)
+        return {k: list(self._metrics[k]) for k in names}
+
+    def snapshot(self) -> Dict[str, Any]:
+        """Everything an exporter needs, as plain python containers."""
+        ring = self.events()
+        n_seen = (ring[-1][0] + 1) if ring else 0
+        return {
+            "t_origin": self._t_origin,
+            "events": ring,
+            "dropped": max(0, n_seen - len(ring)),
+            "counters": self.counters(),
+            "gauges": self.gauges(),
+            "histograms": self.histograms(),
+            "metrics": self.metrics(),
+        }
+
+
+class NullRecorder(Recorder):
+    """A permanently-disabled Recorder; the process-wide default.
+
+    The metric channel still records (it backs ``Trainer.history``),
+    but spans/events/counters stay off and cannot be enabled by
+    accident — use ``obs.enable()`` to swap in a real Recorder.
+    """
+
+    def __init__(self):
+        super().__init__(enabled=False, capacity=1)
+
+
+_global_lock = threading.Lock()
+_global: Recorder = NullRecorder()
+_env_checked = False
+
+
+def get_recorder() -> Recorder:
+    """The process-wide Recorder (a ``NullRecorder`` until enabled).
+
+    Setting ``REPRO_OBS=1`` in the environment enables tracing without
+    code changes (checked once, on first use).
+    """
+    global _env_checked
+    if not _env_checked:
+        with _global_lock:
+            if not _env_checked:
+                _env_checked = True
+                if os.environ.get("REPRO_OBS", "") not in ("", "0") \
+                        and isinstance(_global, NullRecorder):
+                    globals()["_global"] = Recorder(enabled=True)
+    return _global
+
+
+def set_recorder(rec: Recorder) -> Recorder:
+    """Install ``rec`` as the process-wide Recorder; returns it."""
+    global _global
+    with _global_lock:
+        _global = rec
+    return rec
+
+
+def enable(capacity: int = 65536,
+           clock: Optional[Callable[[], float]] = None) -> Recorder:
+    """Install and return a fresh enabled Recorder as the global one."""
+    return set_recorder(Recorder(enabled=True, capacity=capacity,
+                                 clock=clock))
+
+
+def disable() -> Recorder:
+    """Restore the no-op global Recorder; returns it."""
+    return set_recorder(NullRecorder())

@@ -26,6 +26,7 @@ from typing import Any, Dict, Iterable, List, Optional, Tuple
 import jax
 import numpy as np
 
+from repro import obs
 from repro.dist.sharding import hint
 from repro.models.transformer import cache_batch_dim
 
@@ -150,6 +151,13 @@ class PagedKVPool:
         self._copy = jax.jit(page_copy, donate_argnums=(0,))
         self.stats = {"cow_copies": 0, "evictions": 0, "prefix_hits": 0,
                       "shared_tokens": 0, "rollback_pages": 0}
+        self.obs = obs.get_recorder()
+
+    def _bump(self, key: str, n: int = 1) -> None:
+        """Increment a pool stat and mirror it into the obs counter
+        namespace (``serve/pool/<stat>``) — one source, two views."""
+        self.stats[key] = self.stats.get(key, 0) + n
+        self.obs.count("serve/pool/" + key, n)
 
     # -- compatibility with the slotted Scheduler arithmetic ---------------
     @property
@@ -271,7 +279,7 @@ class PagedKVPool:
             del self._prefix[key]
             self._unref(pg)                        # refcount 1 -> 0: freed
             freed += 1
-            self.stats["evictions"] += 1
+            self._bump("evictions")
         return freed
 
     def admit(self, slot: int, tokens, max_new: int) -> int:
@@ -300,7 +308,7 @@ class PagedKVPool:
             self._copy_page(src, dst)
             self._prefix.move_to_end(toks[:mm].tobytes())
             row.append(dst)
-            self.stats["cow_copies"] += 1
+            self._bump("cow_copies")
         while len(row) < plan["prompt_blocks"]:
             row.append(self._alloc_page())
         self.page_table[slot, :] = 0
@@ -310,8 +318,8 @@ class PagedKVPool:
         self.positions[slot] = 0
         self.tokens[slot] = 0
         if plan["m"]:
-            self.stats["prefix_hits"] += 1
-            self.stats["shared_tokens"] += plan["m"]
+            self._bump("prefix_hits")
+            self._bump("shared_tokens", plan["m"])
         return plan["m"]
 
     def register_prefix(self, slot: int, tokens) -> None:
@@ -354,7 +362,7 @@ class PagedKVPool:
             self._copy_page(pid, dst)
             self.page_table[slot, blk] = dst
             self._unref(pid)
-            self.stats["cow_copies"] += 1
+            self._bump("cow_copies")
 
     def _draw_reserved(self, slot: int) -> int:
         assert self._slot_reserve[slot] > 0, \
@@ -394,8 +402,7 @@ class PagedKVPool:
         self._slot_reserve[slot] += freed
         self.positions[slot] = n_tokens
         if freed:
-            self.stats["rollback_pages"] = (
-                self.stats.get("rollback_pages", 0) + freed)
+            self._bump("rollback_pages", freed)
         return freed
 
     # -- retirement ----------------------------------------------------------

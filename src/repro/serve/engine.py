@@ -20,6 +20,7 @@ what else shares the batch — the property the differential tests pin down.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
@@ -27,6 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import Model
 from repro.serve.cache import PagedKVPool, SlotKVPool
 from repro.serve.scheduler import (PagedScheduler, Request, RequestQueue,
@@ -133,9 +135,25 @@ class _EngineBase:
 
     Subclasses provide ``step()`` and set ``queue``, ``pool``, ``stream``,
     ``finished``, ``_active`` and ``_eos`` in ``__init__``.
+
+    Per-request latency telemetry (TTFT on the first emitted token, TBT
+    between subsequent ones) flows into the obs Recorder when tracing is
+    enabled; with obs disabled ``_emit`` pays one attribute check.
     """
 
+    obs = obs.get_recorder()        # class default; _init_obs rebinds
+
+    def _init_obs(self) -> None:
+        """Bind the current global Recorder + latency bookkeeping; called
+        from subclass ``__init__``s."""
+        self.obs = obs.get_recorder()
+        self._t_submit: Dict[int, float] = {}
+        self._t_last_tok: Dict[int, float] = {}
+
     def submit(self, req: Request) -> None:
+        if self.obs.enabled:
+            self._t_submit[req.uid] = time.perf_counter()
+            self.obs.count("serve/requests")
         self.queue.submit(req)
 
     def _emit(self, slot: int, st, tok: int) -> bool:
@@ -145,10 +163,27 @@ class _EngineBase:
         st.emitted.append(tok)
         done = (len(st.emitted) >= st.req.max_new_tokens
                 or (self._eos >= 0 and tok == self._eos))
+        if self.obs.enabled:
+            uid, now = st.req.uid, time.perf_counter()
+            if len(st.emitted) == 1:
+                t0 = self._t_submit.get(uid)
+                if t0 is not None:
+                    self.obs.observe("serve/ttft_s", now - t0)
+            else:
+                t1 = self._t_last_tok.get(uid)
+                if t1 is not None:
+                    self.obs.observe("serve/tbt_s", now - t1)
+            self._t_last_tok[uid] = now
+            self.obs.count("serve/tokens")
         if self.stream is not None:
             self.stream(st.req.uid, tok, done)
         if done:
             self.finished[st.req.uid] = np.asarray(st.emitted, np.int32)
+            if self.obs.enabled:
+                self.obs.event("serve/request_done", tid="serve",
+                               uid=st.req.uid, tokens=len(st.emitted))
+                self._t_submit.pop(st.req.uid, None)
+                self._t_last_tok.pop(st.req.uid, None)
             self._release(slot)
         return done
 
@@ -227,6 +262,7 @@ class ContinuousEngine(_EngineBase):
         self.stream = stream
         self.finished: Dict[int, np.ndarray] = {}
         self.stats = {"decode_steps": 0, "prefills": 0}
+        self._init_obs()
         self._active: Dict[int, _SlotState] = {}
         self._eos = ccfg.eos_id
         # donate the pool cache: the per-token ring update aliases in place
@@ -284,6 +320,8 @@ class ContinuousEngine(_EngineBase):
         self._admit()
         if not self._active:
             return len(self.queue) > 0
+        span = self.obs.span("serve/decode_step", tid="serve",
+                             slots=len(self._active))
         logits, self.pool.cache = self._decode(
             self.params, self.pool.cache,
             jnp.asarray(self.pool.tokens), jnp.asarray(self.pool.positions))
@@ -299,6 +337,7 @@ class ContinuousEngine(_EngineBase):
                 self.pool.positions[slot] += 1
                 self.pool.tokens[slot] = tok
                 self._emit(slot, st, tok)
+            span.end()
             return bool(self._active) or len(self.queue) > 0
         greedy = None
         for slot, st in list(self._active.items()):
@@ -313,6 +352,7 @@ class ContinuousEngine(_EngineBase):
             self.pool.positions[slot] += 1
             self.pool.tokens[slot] = tok
             self._emit(slot, st, tok)
+        span.end()
         return bool(self._active) or len(self.queue) > 0
 
 
@@ -386,6 +426,8 @@ class PagedEngine(_EngineBase):
         self.finished: Dict[int, np.ndarray] = {}
         self.stats = {"decode_steps": 0, "prefill_chunks": 0,
                       "prefill_tokens": 0, "admitted": 0}
+        self._init_obs()
+        self.pool.obs = self.obs      # pool counters join the engine spine
         self._prefilling: Dict[int, _PagedSlotState] = {}   # FIFO by dict order
         self._active: Dict[int, _PagedSlotState] = {}
         self._decode = jax.jit(model.decode_paged, donate_argnums=(1,))
@@ -456,6 +498,8 @@ class PagedEngine(_EngineBase):
     def _decode_step(self) -> None:
         if not self._active:
             return
+        span = self.obs.span("serve/decode_step", tid="serve",
+                             slots=len(self._active))
         for slot in self._active:
             self.pool.grow_for(slot, int(self.pool.positions[slot]))
         table = jnp.asarray(self.pool.device_table(self._active))
@@ -471,6 +515,7 @@ class PagedEngine(_EngineBase):
             self.pool.positions[slot] += 1
             self.pool.tokens[slot] = tok
             self._emit(slot, st, tok)
+        span.end()
 
     def step(self) -> bool:
         """Admit by page budget, spend the prefill-chunk budget, then
@@ -479,6 +524,10 @@ class PagedEngine(_EngineBase):
         self._admit()
         self._prefill_step()
         self._decode_step()
+        if self.obs.enabled:
+            self.obs.gauge("serve/page_occupancy",
+                           self.pool.pages_in_use / max(1, self.pool.n_pages
+                                                        - 1))
         return bool(self._active or self._prefilling or len(self.queue))
 
     def _reject_detail(self) -> str:

@@ -40,6 +40,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.models import Model
 from repro.serve.cache import PagedKVPool
 from repro.serve.engine import PagedConfig, PagedEngine
@@ -76,6 +77,10 @@ class AdaptiveSpecController:
         self._k = np.zeros((n_slots,), np.int32)
         self._rate = np.ones((n_slots,), np.float32)
         self._idle = np.zeros((n_slots,), np.int32)
+        # telemetry spine: acceptance/promotion/demotion counters live in
+        # the Recorder, the single source BENCH_spec reads (the owning
+        # engine re-points this at its recorder)
+        self.obs = obs.get_recorder()
 
     def reset(self, slot: int) -> None:
         self._k[slot] = min(self.cfg.k_init, self.k_max)
@@ -86,18 +91,28 @@ class AdaptiveSpecController:
         return int(self._k[slot])
 
     def update(self, slot: int, proposed: int, accepted: int) -> None:
+        self.obs.count("serve/spec/proposed", proposed)
+        self.obs.count("serve/spec/accepted", accepted)
         if proposed == 0:                       # a k=0 (plain-decode) round
             self._idle[slot] += 1
             if self._idle[slot] >= self.cfg.probe_every:
                 self._idle[slot] = 0
                 self._k[slot] = min(1, self.k_max)
+                self.obs.count("serve/spec/probes")
             return
         self._idle[slot] = 0
         w = self.cfg.ewma
         self._rate[slot] = w * (accepted / proposed) + (1 - w) * self._rate[slot]
         if accepted == proposed:
+            if self._k[slot] < self.k_max:
+                self.obs.count("serve/spec/promotions")
             self._k[slot] = min(self._k[slot] + 1, self.k_max)
         elif self._rate[slot] < self.cfg.demote_below:
+            self.obs.event("serve/spec_demotion", tid="serve", slot=slot,
+                           k_from=int(self._k[slot]),
+                           k_to=int(self._k[slot]) // 2,
+                           rate=float(self._rate[slot]))
+            self.obs.count("serve/spec/demotions")
             self._k[slot] //= 2
 
 
@@ -217,6 +232,8 @@ class SpeculativeEngine(PagedEngine):
                                         self.draft.pool)
         self._verify = jax.jit(model.verify_paged, donate_argnums=(1,))
         self.ctrl = AdaptiveSpecController(pcfg.max_slots, pcfg.spec_k, spec)
+        self.ctrl.obs = self.obs
+        self.draft.pool.obs = self.obs
         self._d_keys = jnp.zeros((pcfg.max_slots, 2), jnp.uint32)
         self._d_catch = np.zeros((pcfg.max_slots,), np.int32)
         self.stats.update(spec_rounds=0, spec_proposed=0, spec_accepted=0)
@@ -241,6 +258,8 @@ class SpeculativeEngine(PagedEngine):
     def _decode_step(self) -> None:
         if not self._active:
             return
+        span = self.obs.span("serve/spec_round", tid="serve",
+                             slots=len(self._active))
         B = self.pcfg.max_slots
         spec_k = self.pcfg.spec_k
         k_eff = np.zeros((B,), np.int32)
@@ -299,6 +318,7 @@ class SpeculativeEngine(PagedEngine):
             jnp.asarray(positions), table, jnp.asarray(q_lens))
         self.stats["decode_steps"] += 1
         self.stats["spec_rounds"] += 1
+        self.obs.count("serve/spec/rounds")
         lg = np.asarray(logits)                         # (B, W, V)
         am = np.argmax(lg, -1)
 
@@ -317,6 +337,11 @@ class SpeculativeEngine(PagedEngine):
                     props)
             self.stats["spec_proposed"] += k
             self.stats["spec_accepted"] += a
+            # the controller records the SAME (proposed, accepted) pair
+            # into the Recorder — retired slots included, so the obs
+            # counters and the stats dict stay equal (a reused slot is
+            # reset at decode-join, so the extra AIMD update is inert)
+            self.ctrl.update(slot, k, a)
             done = False
             for t in emitted:
                 done = self._emit(slot, st, int(t))
@@ -333,7 +358,7 @@ class SpeculativeEngine(PagedEngine):
                 self._d_catch[slot] = int(win[slot, k])
             else:
                 self.draft.pool.rollback(slot, pos + a + 1)
-            self.ctrl.update(slot, k, a)
+        span.end()
 
     # -- rejection sampling (temperature > 0) --------------------------------
 

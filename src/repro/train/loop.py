@@ -49,10 +49,11 @@ class Trainer:
 
     def __init__(self, model: Model, strategy: Strategy, data: SyntheticLM,
                  tcfg: TrainerConfig, inner_opt=None, lr_sched=None,
-                 active_fn: Optional[Callable[[int], np.ndarray]] = None):
+                 active_fn: Optional[Callable[[int], np.ndarray]] = None,
+                 recorder=None):
         self.session = TrainSession(model, strategy, data, tcfg,
                                     inner_opt=inner_opt, lr_sched=lr_sched,
-                                    active_fn=active_fn)
+                                    active_fn=active_fn, recorder=recorder)
         self.model = model
         self.tcfg = tcfg
 
@@ -76,7 +77,15 @@ class Trainer:
 
     @property
     def history(self) -> List[Dict[str, float]]:
+        """Per-step metric rows — a view of the session recorder's
+        ``train/history`` metric channel (the pre-obs list-of-dicts API;
+        keys pinned by tests/test_obs.py)."""
         return self.session.history
+
+    @property
+    def obs(self):
+        """The session's telemetry Recorder."""
+        return self.session.obs
 
     @property
     def inner_opt(self):

@@ -1,0 +1,508 @@
+"""Unified runtime telemetry (repro/obs, DESIGN.md §19): Recorder
+semantics under concurrency, exporter determinism, the Trainer.history
+back-compat view, and the two hard guarantees of the obs spine —
+
+* disabled-mode bit-identity: enabling/disabling the recorder must not
+  change a single bit of train-step or serve-decode outputs;
+* trace/HLO agreement: the per-group ``edit_sync/<group>`` spans of a
+  3-round streamed EDiT run must name exactly the groups that
+  ``hlo_analysis.sync_collective_tags`` attributes in the compiled HLO.
+"""
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.configs import get_config
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.models import build_model
+from repro.obs import (Recorder, NullRecorder, chrome_trace,
+                       write_chrome_trace, write_metrics_jsonl,
+                       read_metrics_jsonl)
+from repro.optim import AdamW, constant
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+@pytest.fixture(autouse=True)
+def _restore_global_recorder():
+    """Tests may install a global recorder; never leak it."""
+    yield
+    obs.disable()
+
+
+def _fake_clock(step=1.0):
+    t = [0.0]
+
+    def clock():
+        t[0] += step
+        return t[0]
+    return clock
+
+
+def _tiny_cfg():
+    return dataclasses.replace(
+        get_config("llama_350m").reduced(), name="tiny-obs", d_model=64,
+        n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128, vocab_size=128)
+
+
+# ---------------------------------------------------------------------------
+# Recorder semantics
+# ---------------------------------------------------------------------------
+
+def test_disabled_recorder_is_noop_except_metrics():
+    rec = NullRecorder()
+    s1 = rec.span("a", x=1)
+    s2 = rec.span("b")
+    assert s1 is s2                     # shared no-op span object
+    with s1:
+        pass
+    rec.event("e")
+    rec.span_at("s", 0.0, 1.0)
+    rec.count("c", 5)
+    rec.gauge("g", 1.0)
+    rec.observe("h", 2.0)
+    assert rec.events() == []
+    assert rec.counters() == {}
+    assert rec.gauges() == {}
+    assert rec.histograms() == {}
+    # the metric channel is NOT gated: it backs Trainer.history
+    row = rec.metric("m", step=1, loss=0.5)
+    assert rec.metric_rows("m") == [row] == [{"step": 1, "loss": 0.5}]
+
+
+def test_ring_wraparound_reports_dropped():
+    rec = Recorder(enabled=True, capacity=8, clock=_fake_clock())
+    for i in range(20):
+        rec.event(f"e{i}")
+    evs = rec.events()
+    assert len(evs) == 8
+    assert [e[2] for e in evs] == [f"e{i}" for i in range(12, 20)]
+    assert rec.dropped == 12
+    snap = rec.snapshot()
+    assert snap["dropped"] == 12
+    assert len(snap["events"]) == 8
+
+
+def test_span_forms_and_double_end():
+    rec = Recorder(enabled=True, clock=_fake_clock())
+    with rec.span("ctx", tid="t", k=1):
+        pass
+    s = rec.span("manual")
+    s.end()
+    s.end()                             # idempotent: no second event
+    rec.span_at("ext", 10.0, 12.5, tid="w0", wid=0)
+    evs = rec.events()
+    assert [e[2] for e in evs] == ["ctx", "manual", "ext"]
+    ctx, man, ext = evs
+    assert ctx[1] == "X" and ctx[3] == "t" and ctx[6] == {"k": 1}
+    assert ctx[5] > 0 and man[5] > 0    # positive durations
+    assert ext[4] == 10.0 and ext[5] == 2.5 and ext[6] == {"wid": 0}
+
+
+def test_typed_aggregates():
+    rec = Recorder(enabled=True)
+    rec.count("c")
+    rec.count("c", 2.5)
+    rec.gauge("g", 1.0)
+    rec.gauge("g", 7.0)
+    rec.observe("h", 1.0)
+    rec.observe("h", 3.0)
+    assert rec.counters() == {"c": 3.5}
+    assert rec.gauges() == {"g": 7.0}
+    assert rec.histograms() == {"h": [1.0, 3.0]}
+
+
+def test_thread_safety_exact_totals():
+    """Concurrent spans/counters/metrics from many threads: aggregate
+    totals must be exact (no lost updates), ring stays consistent."""
+    rec = Recorder(enabled=True, capacity=1024)
+    n_threads, n_ops = 8, 500
+    errors = []
+
+    def work(tid):
+        try:
+            for i in range(n_ops):
+                with rec.span("w", tid=f"t{tid}", i=i):
+                    rec.count("ops")
+                rec.observe("lat", float(i))
+                rec.metric("rows", tid=tid, i=i)
+        except Exception as e:          # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=work, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    total = n_threads * n_ops
+    assert rec.counters()["ops"] == total
+    assert len(rec.histograms()["lat"]) == total
+    assert len(rec.metric_rows("rows")) == total
+    assert len(rec.events()) == 1024    # ring full, capped
+    assert rec.dropped == total - 1024
+    # seqs strictly increasing (snapshot is a coherent ordering)
+    seqs = [e[0] for e in rec.events()]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+
+
+def test_global_recorder_lifecycle():
+    assert isinstance(obs.get_recorder(), NullRecorder)
+    rec = obs.enable(capacity=16)
+    assert obs.get_recorder() is rec and rec.enabled
+    obs.disable()
+    assert isinstance(obs.get_recorder(), NullRecorder)
+
+
+# ---------------------------------------------------------------------------
+# Exporters
+# ---------------------------------------------------------------------------
+
+def _scripted_recorder():
+    rec = Recorder(enabled=True, capacity=64, clock=_fake_clock(0.5))
+    with rec.span("train/step", tid="main", step=0):
+        rec.count("comm/wire_bytes", 1024)
+    rec.event("train/sync_round", tid="sync", wire_bytes=1024)
+    rec.span_at("async/round", 1.0, 2.0, tid="w0", wid=0)
+    rec.gauge("serve/page_occupancy", 0.5)
+    rec.observe("serve/ttft_s", 0.01)
+    rec.metric("train/history", step=0, loss=1.5)
+    return rec
+
+
+def test_chrome_trace_exporter_deterministic(tmp_path):
+    a = json.dumps(chrome_trace(_scripted_recorder().snapshot()),
+                   sort_keys=True)
+    b = json.dumps(chrome_trace(_scripted_recorder().snapshot()),
+                   sort_keys=True)
+    assert a == b                       # same script -> same bytes
+    trace = json.loads(a)
+    evs = trace["traceEvents"]
+    by_name = {e["name"]: e for e in evs}
+    step = by_name["train/step"]
+    assert step["ph"] == "X" and step["tid"] == "main"
+    assert step["args"] == {"step": 0}
+    assert by_name["train/sync_round"]["ph"] == "i"
+    assert by_name["async/round"]["dur"] == 1.0 * 1e6
+    counters = by_name["counters"]
+    assert counters["ph"] == "C"
+    assert counters["args"] == {"comm/wire_bytes": 1024.0}
+    assert trace["otherData"]["dropped_events"] == 0
+    assert trace["otherData"]["gauges"] == {"serve/page_occupancy": 0.5}
+    # file writer emits the same canonical JSON
+    p = tmp_path / "trace.json"
+    write_chrome_trace(_scripted_recorder().snapshot(), str(p))
+    assert json.loads(p.read_text()) == trace
+
+
+def test_metrics_jsonl_roundtrip(tmp_path):
+    rec = _scripted_recorder()
+    p = tmp_path / "metrics.jsonl"
+    n = write_metrics_jsonl(rec.snapshot(), str(p))
+    assert n == 2                       # train/history + hist/serve/ttft_s
+    back = read_metrics_jsonl(str(p))
+    assert back["train/history"] == [{"step": 0, "loss": 1.5}]
+    assert back["hist/serve/ttft_s"][0]["values"] == [0.01]
+    # byte-determinism across identical runs
+    p2 = tmp_path / "metrics2.jsonl"
+    write_metrics_jsonl(_scripted_recorder().snapshot(), str(p2))
+    assert p.read_text() == p2.read_text()
+
+
+# ---------------------------------------------------------------------------
+# Trainer.history back-compat view (satellite: history -> metric channel)
+# ---------------------------------------------------------------------------
+
+STEPS, WARMUP, TAU, R = 8, 1, 2, 2      # syncs at steps 3, 5, 7
+
+
+def _session(model, **tcfg_kw):
+    from repro.data.pipeline import SyntheticLM
+    from repro.elastic import TrainSession
+    from repro.train import TrainerConfig
+    strat = Strategy(name="edit", replicas=R, sync_interval=TAU,
+                     warmup_steps=WARMUP)
+    data = SyntheticLM(model.cfg.vocab_size, 16, 8, seed=3, replicas=R)
+    tcfg_kw.setdefault("total_steps", STEPS)
+    tcfg_kw.setdefault("inner_lr", 1e-3)
+    tcfg_kw.setdefault("lr_warmup", 0)
+    tcfg_kw.setdefault("log_every", 0)
+    return TrainSession(model, strat, data, TrainerConfig(**tcfg_kw))
+
+
+@pytest.fixture(scope="module")
+def model():
+    return build_model(_tiny_cfg(), compute_dtype=jnp.float32, remat=False)
+
+
+def test_trainer_history_is_metric_channel_view(model):
+    """Same list-of-dicts API as the pre-obs ``self.history`` list: rows
+    accumulate per step, sync rows carry the wire telemetry, and the list
+    IS the recorder's ``train/history`` metric channel."""
+    sess = _session(model)
+    sess.run_steps(STEPS)
+    hist = sess.history
+    assert isinstance(hist, list) and len(hist) == STEPS
+    assert all(isinstance(r, dict) for r in hist)
+    assert [int(r["step"]) for r in hist] == list(range(STEPS))
+    assert all("loss" in r for r in hist)
+    synced = [r for r in hist if r.get("synced")]
+    assert len(synced) == 3             # 3 rounds at tau=2, warmup=1
+    for r in synced:
+        assert r["wire_bytes"] > 0 and "comp_ratio" in r
+    # the view is live, not a copy
+    assert hist is sess.obs.metric_rows("train/history")
+    # per-session isolation: a second session starts with empty history
+    assert _session(model).history == []
+
+
+def test_session_sync_counters_when_enabled(model):
+    rec = obs.enable()
+    sess = _session(model)
+    sess.run_steps(STEPS)
+    c = rec.counters()
+    assert c["train/sync_rounds"] == 3
+    wire = sum(r["wire_bytes"] for r in sess.history if r.get("synced"))
+    assert c["comm/wire_bytes"] == pytest.approx(wire)
+    names = {e[2] for e in rec.events()}
+    assert "train/step" in names and "train/sync_round" in names
+    # streamed sync groups traced under their HLO scope names
+    assert any(n.startswith("edit_sync/") for n in names)
+
+
+# ---------------------------------------------------------------------------
+# Disabled-mode bit-identity (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+def _run_train(model, enabled):
+    if enabled:
+        obs.enable()
+    else:
+        obs.disable()
+    strat = Strategy(name="edit", replicas=R, sync_interval=TAU,
+                     warmup_steps=WARMUP)
+    opt = AdamW()
+    state = init_train_state(model, strat, opt, jax.random.PRNGKey(7))
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-2),
+                                   streamed=True))
+    key = jax.random.PRNGKey(0)
+    losses = []
+    for i in range(STEPS):
+        key, k = jax.random.split(key)
+        batch = {"tokens": jax.random.randint(
+            k, (4, 16), 0, model.cfg.vocab_size)}
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    return state, losses
+
+
+def test_train_step_bit_identical_enabled_vs_disabled(model):
+    """The obs spine must be observation-only: the streamed train step
+    produces bit-identical params and losses with tracing on vs off."""
+    st_off, loss_off = _run_train(model, enabled=False)
+    st_on, loss_on = _run_train(model, enabled=True)
+    assert loss_on == loss_off
+    for (path, a), b in zip(
+            jax.tree_util.tree_flatten_with_path(st_off["params"])[0],
+            jax.tree.leaves(st_on["params"])):
+        np.testing.assert_array_equal(
+            np.asarray(a), np.asarray(b),
+            err_msg=jax.tree_util.keystr(path))
+
+
+def _decode_tokens(model, params, enabled):
+    from repro.serve import PagedConfig, PagedEngine, Request
+    if enabled:
+        obs.enable()
+    else:
+        obs.disable()
+    pe = PagedEngine(model, params,
+                     PagedConfig(max_slots=2, cache_len=32, page_size=4,
+                                 n_pages=16, prefill_chunk=4, eos_id=-1))
+    rng = np.random.default_rng(5)
+    for i in range(3):
+        toks = rng.integers(0, model.cfg.vocab_size, size=5, dtype=np.int32)
+        pe.submit(Request(uid=i, tokens=toks, max_new_tokens=4))
+    while pe.step():
+        pass
+    return {u: np.asarray(t) for u, t in pe.finished.items()}
+
+
+def test_serve_decode_bit_identical_enabled_vs_disabled():
+    cfg = get_config("qwen3_4b").reduced()
+    model = build_model(cfg, compute_dtype=jnp.float32,
+                        cache_dtype=jnp.float32)
+    params = model.init(jax.random.PRNGKey(0))
+    off = _decode_tokens(model, params, enabled=False)
+    on = _decode_tokens(model, params, enabled=True)
+    assert off.keys() == on.keys()
+    for u in off:
+        np.testing.assert_array_equal(off[u], on[u], err_msg=f"uid={u}")
+    # and the enabled run populated the serve telemetry
+    rec = obs.get_recorder()
+    c = rec.counters()
+    assert c["serve/requests"] == 3
+    assert c["serve/tokens"] >= sum(len(t) for t in on.values())
+    h = rec.histograms()
+    assert len(h["serve/ttft_s"]) == 3
+    assert len(h["serve/tbt_s"]) > 0
+    assert any(e[2] == "serve/decode_step" for e in rec.events())
+
+
+# ---------------------------------------------------------------------------
+# Trace groups vs HLO sync tags (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+_HLO_TAGS_SUBPROC = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys, dataclasses, json; sys.path.insert(0, "src")
+import repro  # noqa
+import jax, jax.numpy as jnp
+from jax.sharding import AxisType
+from repro.configs import get_config
+from repro.core import Strategy, init_train_state, make_train_step
+from repro.dist.sharding import TRAIN_POLICY, use_policy
+from repro.launch import specs as SP
+from repro.launch.hlo_analysis import sync_collective_tags
+from repro.models import build_model
+from repro.optim import AdamW, constant
+
+mesh = jax.make_mesh((4, 1), ("data", "model"),
+                     axis_types=(AxisType.Auto,) * 2)
+cfg = dataclasses.replace(
+    get_config("llama_350m").reduced(), name="tiny-obs",
+    d_model=64, n_heads=2, n_kv_heads=2, head_dim=32, d_ff=128,
+    vocab_size=128)
+model = build_model(cfg, compute_dtype=jnp.float32, remat=False)
+opt = AdamW()
+with jax.set_mesh(mesh), use_policy(TRAIN_POLICY):
+    strat = Strategy(name="edit", replicas=4, sync_interval=2,
+                     warmup_steps=1)
+    state = jax.eval_shape(lambda k: init_train_state(model, strat, opt, k),
+                           jax.random.PRNGKey(0))
+    st_specs = SP.train_state_specs(state, cfg, mesh)
+    batch = jax.ShapeDtypeStruct((8, 32), jnp.int32)
+    b_specs = SP.train_batch_specs({"tokens": batch}, cfg, mesh, 4)
+    step = jax.jit(make_train_step(model, strat, opt, constant(1e-3),
+                                   streamed=True),
+                   in_shardings=(st_specs, b_specs))
+    txt = step.lower(state, {"tokens": batch}).compile().as_text()
+print("HLOTAGS", json.dumps(sorted(sync_collective_tags(txt))))
+"""
+
+_hlo_tags_cache = None
+
+
+def _hlo_sync_tags():
+    global _hlo_tags_cache
+    if _hlo_tags_cache is None:
+        env = dict(os.environ)
+        env.pop("XLA_FLAGS", None)
+        res = subprocess.run([sys.executable, "-c", _HLO_TAGS_SUBPROC],
+                             capture_output=True, text=True, env=env,
+                             cwd=ROOT, timeout=560)
+        assert "HLOTAGS" in res.stdout, res.stderr[-2000:]
+        _hlo_tags_cache = json.loads(
+            res.stdout.split("HLOTAGS", 1)[1].strip())
+    return _hlo_tags_cache
+
+
+@pytest.mark.slow
+def test_streamed_trace_groups_match_hlo_sync_tags(model, tmp_path):
+    """The Chrome trace of a 3-round streamed EDiT run must carry one
+    ``edit_sync/<group>`` span per module group, and that group set must
+    equal what ``sync_collective_tags`` attributes in the 4-device HLO of
+    the same config (same ``jax.named_scope`` names, two observers)."""
+    _run_train(model, enabled=True)     # installs an enabled recorder
+    rec = obs.get_recorder()
+    p = tmp_path / "trace.json"
+    write_chrome_trace(rec.snapshot(), str(p))
+    trace = json.loads(p.read_text())
+    traced = sorted({e["name"][len("edit_sync/"):]
+                     for e in trace["traceEvents"]
+                     if str(e.get("name", "")).startswith("edit_sync/")})
+    assert traced, "streamed run produced no edit_sync spans"
+    assert traced == _hlo_sync_tags()
+
+
+# ---------------------------------------------------------------------------
+# Async instrumentation (events backend; threads/process ride the anchor)
+# ---------------------------------------------------------------------------
+
+def test_async_events_backend_records_rounds(model):
+    from repro.async_exec import AsyncExecutor
+    from repro.core.async_sim import WorkerSpeedModel
+    from repro.core import PenaltyConfig
+    from repro.data.pipeline import SyntheticLM
+
+    rec = obs.enable()
+    n_w, h = 4, 3
+    strat = Strategy(name="a_edit", replicas=n_w, sync_interval=h,
+                     warmup_steps=0,
+                     penalty=PenaltyConfig(enable_anomaly=False,
+                                           enable_weighting=False,
+                                           enable_clip=False))
+    data = SyntheticLM(model.cfg.vocab_size, 16, 8, seed=3, replicas=n_w)
+    ex = AsyncExecutor(model, strat, data, tau_time=float(h),
+                       speeds=WorkerSpeedModel(n_workers=n_w),
+                       inner_opt=AdamW(), lr_sched=constant(1e-3),
+                       init_key=jax.random.PRNGKey(11))
+    rounds = 2
+    ex.run(rounds)
+    c = rec.counters()
+    assert c["async/rounds"] == rounds
+    assert c["async/upload_bytes"] > 0
+    assert c["comm/wire_bytes"] == c["async/upload_bytes"]
+    lead = rec.histograms()["async/staleness"]
+    assert len(lead) == rounds * n_w    # one observation per upload
+    assert all(v >= 0 for v in lead)
+    evs = rec.events()
+    # one async/round span per worker per round, on the worker's tid
+    spans = [e for e in evs if e[2] == "async/round"]
+    assert len(spans) == rounds * n_w
+    assert {e[3] for e in spans} == {f"w{w}" for w in range(n_w)}
+    closes = [e for e in evs if e[2] == "async/round_close"]
+    assert len(closes) == rounds
+    for e in closes:
+        assert "straggler_wid" in e[6] and e[6]["wire_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# obs_report
+# ---------------------------------------------------------------------------
+
+def test_obs_report_smoke_and_cli(model, tmp_path):
+    from repro.launch import obs_report
+
+    rec = obs.enable()
+    sess = _session(model)
+    sess.run_steps(STEPS)
+    text = obs_report.summarize_recorder(rec)
+    for section in ("sync rounds", "overlap", "async staleness",
+                    "penalty / anomaly events", "serve"):
+        assert section in text, text
+    assert "rounds: 3" in text
+    assert "traced groups" in text
+    # CLI path over the exported artifacts
+    tp, mp = tmp_path / "t.json", tmp_path / "m.jsonl"
+    snap = rec.snapshot()
+    write_chrome_trace(snap, str(tp))
+    write_metrics_jsonl(snap, str(mp))
+    import contextlib
+    import io
+    buf = io.StringIO()
+    with contextlib.redirect_stdout(buf):
+        rc = obs_report.main(["--trace", str(tp), "--metrics", str(mp)])
+    assert rc == 0
+    assert "sync rounds" in buf.getvalue()
